@@ -1,0 +1,65 @@
+"""Shared benchmark utilities.
+
+Wall-clock numbers in this container are CPU numbers — the paper's H200
+wall-clock cannot be reproduced here.  What IS reproducible (and what the
+paper's tables actually claim) are the *ratios and scaling laws*:
+
+- Table 1: the word-basis Horner engine beats exp-materialising and
+  cumulative (keras_sig-style) engines, with the gap growing in depth.
+- Table 2: peak training memory is O(B·D_sig) for pathsig vs O(B·M·D_sig)
+  for the cumulative engine — measured here from XLA's compiled
+  memory_analysis() (temp bytes), which is exact, not sampled.
+- Table 3: projected log-signatures avoid materialising the full top level.
+- Fig 3: one batched windowed call vs a per-window loop.
+
+Each benchmark prints CSV rows ``name,value,unit,detail`` so the whole suite
+is machine-parseable from bench_output.txt.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+import numpy as np
+
+
+def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Median wall-clock seconds of fn(*args) (block_until_ready'd)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def temp_bytes(fn: Callable, *args) -> int:
+    """XLA temp-buffer bytes of the compiled fn — the peak-memory proxy.
+
+    Exact (from the compiled buffer assignment), not a sampled RSS: this is
+    the number the paper's Table 2 memory law governs.
+    """
+    compiled = jax.jit(fn).lower(*args).compile()
+    mem = compiled.memory_analysis()
+    return int(getattr(mem, "temp_size_in_bytes", 0))
+
+
+def row(name: str, value, unit: str, detail: str = "") -> None:
+    print(f"{name},{value},{unit},{detail}", flush=True)
+
+
+def header(title: str) -> None:
+    print(f"\n# === {title} ===", flush=True)
+    print("name,value,unit,detail", flush=True)
+
+
+def make_paths(B: int, M: int, d: int, seed: int = 0) -> jax.Array:
+    import jax.numpy as jnp
+    rng = np.random.default_rng(seed)
+    steps = rng.standard_normal((B, M, d)).astype(np.float32) / np.sqrt(M)
+    path = np.concatenate([np.zeros((B, 1, d), np.float32),
+                           np.cumsum(steps, axis=1)], axis=1)
+    return jnp.asarray(path)

@@ -1,0 +1,97 @@
+"""Per-op FLOP attribution from lowered HLO text (hillclimb profiler).
+
+XLA's cost_analysis gives one total; to find WHERE the FLOPs are we parse
+every `dot` op, compute 2*M*N*K from its shapes, and bucket by the JAX
+op_name metadata (which names the source einsum/layer).
+
+Usage: PYTHONPATH=src python -m benchmarks.hlo_flops --arch deepseek-v2-lite-16b \
+           --shape train_4k --layers 2 [--top 25]
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+os.environ.setdefault("REPRO_SCAN_UNROLL", "1")
+
+import argparse  # noqa: E402
+import re  # noqa: E402
+from collections import defaultdict  # noqa: E402
+
+
+_SHAPE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _dims(s):
+    m = _SHAPE.search(s)
+    if not m:
+        return []
+    return [int(x) for x in m.group(2).split(",") if x]
+
+
+def dot_flops_by_op(hlo: str, top: int = 25):
+    """Returns [(op_name, flops, count)] sorted by flops desc."""
+    buckets = defaultdict(lambda: [0.0, 0])
+    for line in hlo.splitlines():
+        ls = line.strip()
+        m = re.match(r"%?[\w.\-]+ = (\S+) dot\((.+?)\)", ls)
+        if not m:
+            continue
+        out_dims = _dims(m.group(1))
+        # contraction size: product of lhs_contracting dims of first operand
+        ops = re.findall(r"%[\w.\-]+", m.group(2))
+        cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ls)
+        lhs_shape_m = re.search(r"dot\((\S+?) %", ls)
+        # robust route: find operand shapes inline e.g. dot(bf16[..] %a, ..)
+        operand_shapes = re.findall(r"(\w+\[[\d,]*\])\s*%", ls)
+        K = 1
+        if cm and operand_shapes:
+            lhs = _dims(operand_shapes[0])
+            for i in [int(x) for x in cm.group(1).split(",") if x]:
+                if i < len(lhs):
+                    K *= lhs[i]
+        numel = 1
+        for d in out_dims:
+            numel *= d
+        fl = 2.0 * numel * K
+        name = "?"
+        nm = re.search(r'op_name="([^"]+)"', ls)
+        if nm:
+            name = nm.group(1)
+            name = re.sub(r"\[.*?\]", "", name)
+        b = buckets[name]
+        b[0] += fl
+        b[1] += 1
+    rows = sorted(((k, v[0], v[1]) for k, v in buckets.items()),
+                  key=lambda r: -r[1])
+    return rows[:top]
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--layers", type=int, default=2)
+    ap.add_argument("--top", type=int, default=25)
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args(argv)
+
+    from benchmarks.roofline import probe_cfg, _patched_config
+    from repro.configs import get_config
+    from repro.launch.dryrun import lower_cell
+
+    cfg = probe_cfg(get_config(args.arch), args.layers)
+    import repro.launch.dryrun as DR
+    with _patched_config(args.arch, cfg):
+        # re-lower and keep the HLO: call the internals directly
+        import repro.launch.specs as SP
+        from repro.launch.mesh import make_production_mesh
+        res = lower_cell(args.arch, args.shape, multi_pod=args.multi_pod,
+                         keep_hlo=True)
+    hlo = res["hlo_text"]
+    total = sum(f for _, f, _ in dot_flops_by_op(hlo, top=10 ** 6))
+    print(f"total dot FLOPs/device (L={args.layers} probe): {total:.3e}")
+    print(f"{'FLOPs':>12}  {'%':>5}  {'n':>4}  op")
+    for name, fl, n in dot_flops_by_op(hlo, args.top):
+        print(f"{fl:12.3e}  {100*fl/total:5.1f}  {n:>4}  {name[:110]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,178 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+os.environ["REPRO_SCAN_UNROLL"] = "1"   # probes must see every layer
+
+"""Roofline harness (EXPERIMENTS.md §Roofline).
+
+Methodology: XLA's HloCostAnalysis counts `while` (scan) bodies ONCE, so a
+scanned L-layer model under-reports FLOPs/bytes/collectives by ~L×.  We
+therefore lower two fully-unrolled reduced-depth probes (L1, L2) per cell,
+fit the affine law  cost(L) = a + b·L  (exact: layers are homogeneous), and
+extrapolate to the full depth.  Peak-memory and compile-feasibility numbers
+still come from the full scanned compile in launch/dryrun.py.
+
+Usage:  PYTHONPATH=src python -m benchmarks.roofline --arch all --shape all
+Writes runs/roofline/<arch>__<shape>.json + a markdown table to stdout.
+"""
+
+import argparse  # noqa: E402
+import dataclasses  # noqa: E402
+import json  # noqa: E402
+import sys  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro.configs import ARCH_IDS, get_config  # noqa: E402
+from repro.launch import specs as SP  # noqa: E402
+from repro.launch.dryrun import (ICI_BW, HBM_BW, PEAK_FLOPS, lower_cell,  # noqa: E402
+                                 rules_for)
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+
+PROBE_LAYERS = (2, 4)
+
+
+def probe_cfg(cfg, L):
+    upd = {"n_layers": L}
+    if cfg.family == "encdec":
+        upd["n_encoder_layers"] = L
+    if cfg.family == "hybrid":
+        # keep one shared-attn application per `hybrid_attn_every` layers
+        upd["hybrid_attn_every"] = max(1, cfg.hybrid_attn_every // 2)
+        upd["n_layers"] = L * 2
+    if cfg.moe and cfg.moe_layer_start:
+        upd["moe_layer_start"] = 1
+    return dataclasses.replace(cfg, **upd)
+
+
+def effective_layers(cfg, L_probe):
+    if cfg.family == "hybrid":
+        return L_probe * 2
+    return L_probe
+
+
+def measure(arch: str, shape: str, *, multi_pod=False, opt_name="adafactor",
+            remat="dots", rule_overrides=None, mesh=None):
+    """Probe-extrapolated roofline terms for one cell."""
+    cfg = get_config(arch)
+    ok, why = SP.cell_is_runnable(arch, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape, "skipped": why}
+    mesh = mesh if mesh is not None else make_production_mesh(multi_pod=multi_pod)
+
+    import repro.launch.dryrun as DR
+    samples = []
+    for L in PROBE_LAYERS:
+        pc = probe_cfg(cfg, L)
+        with _patched_config(arch, pc):
+            r = lower_cell(arch, shape, multi_pod=multi_pod, opt_name=opt_name,
+                           remat=remat, rule_overrides=rule_overrides,
+                           mesh=mesh)
+        if "error" in r:
+            return {"arch": arch, "shape": shape, "error": r["error"]}
+        samples.append((effective_layers(cfg, L), r))
+
+    (L1, r1), (L2, r2) = samples
+    Lf = cfg.n_layers
+
+    def affine(key):
+        y1, y2 = r1[key], r2[key]
+        b = (y2 - y1) / (L2 - L1)
+        a = y1 - b * L1
+        return max(0.0, a + b * Lf)
+
+    flops = affine("hlo_flops_per_dev")
+    bytes_ = affine("hlo_bytes_per_dev")
+    wire = affine("collective_wire_bytes_per_dev")
+    n_dev = mesh.devices.size
+    t_c, t_m, t_x = flops / PEAK_FLOPS, bytes_ / HBM_BW, wire / ICI_BW
+    # fusion-aware memory term: raw HLO bytes count every unfused op and
+    # overstate DRAM traffic 1-2 orders of magnitude (see EXPERIMENTS.md)
+    adj_bytes = SP.hbm_bytes_estimate(cfg, shape, n_dev)
+    t_m_adj = adj_bytes / HBM_BW
+    terms = {"compute_s": t_c, "memory_s": t_m_adj, "collective_s": t_x}
+    dominant = max(terms, key=terms.get)
+    model_flops = SP.flops_estimate(cfg, shape)
+    t_total = max(terms.values())
+    mfu_bound = (model_flops / n_dev / PEAK_FLOPS) / max(t_total, 1e-30)
+    return {
+        "arch": arch, "shape": shape, "kind": SP.SHAPES[shape]["kind"],
+        "mesh": "x".join(map(str, mesh.devices.shape)), "devices": n_dev,
+        "hlo_flops_per_dev": flops, "hlo_bytes_per_dev": bytes_,
+        "hbm_bytes_adj_per_dev": adj_bytes,
+        "collective_wire_bytes_per_dev": wire,
+        "t_compute_s": t_c, "t_memory_hlo_s": t_m, "t_memory_s": t_m_adj,
+        "t_collective_s": t_x,
+        "dominant": dominant,
+        "model_flops_global": model_flops,
+        "useful_flops_ratio": model_flops / max(flops * n_dev, 1.0),
+        "roofline_fraction": min(1.0, mfu_bound),
+        "opt": opt_name, "remat": remat,
+        "rules": {k: str(v) for k, v in (rule_overrides or {}).items()},
+        "probes": {str(L): {k: r[k] for k in
+                            ("hlo_flops_per_dev", "hlo_bytes_per_dev",
+                             "collective_wire_bytes_per_dev", "compile_s")}
+                   for L, r in samples},
+    }
+
+
+class _patched_config:
+    """Temporarily route get_config(arch) to a probe config."""
+    def __init__(self, arch, cfg):
+        self.arch, self.cfg = arch, cfg
+
+    def __enter__(self):
+        import repro.launch.dryrun as DR
+        self._orig = DR.get_config
+        DR.get_config = lambda a: self.cfg if a == self.arch else self._orig(a)
+
+    def __exit__(self, *exc):
+        import repro.launch.dryrun as DR
+        DR.get_config = self._orig
+
+
+def fmt_row(r):
+    if r.get("skipped"):
+        return f"| {r['arch']} | {r['shape']} | — | — | — | — | — | skipped |"
+    return (f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.2e} | "
+            f"{r['t_memory_s']:.2e} | {r['t_collective_s']:.2e} | "
+            f"{r['dominant'].replace('_s','')} | "
+            f"{r['useful_flops_ratio']:.2f} | "
+            f"{r['roofline_fraction']*100:.0f}% |")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--opt", default="adafactor")
+    ap.add_argument("--remat", default="dots")
+    ap.add_argument("--out", default="runs/roofline")
+    args = ap.parse_args(argv)
+    archs = ARCH_IDS if args.arch == "all" else [args.arch]
+    shapes = list(SP.SHAPES) if args.shape == "all" else [args.shape]
+    os.makedirs(args.out, exist_ok=True)
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+
+    print("| arch | shape | t_comp | t_mem | t_coll | dominant | "
+          "useful(MODEL/HLO) | roofline frac |")
+    print("|---|---|---|---|---|---|---|---|")
+    for arch in archs:
+        for shape in shapes:
+            try:
+                r = measure(arch, shape, multi_pod=args.multi_pod,
+                            opt_name=args.opt, remat=args.remat, mesh=mesh)
+            except Exception as e:
+                r = {"arch": arch, "shape": shape, "error": str(e),
+                     "traceback": traceback.format_exc()}
+                print(f"| {arch} | {shape} | ERROR {e} |", flush=True)
+            tag = f"{arch}__{shape}" + ("__pod2" if args.multi_pod else "")
+            with open(os.path.join(args.out, tag + ".json"), "w") as f:
+                json.dump(r, f, indent=2)
+            if "error" not in r:
+                print(fmt_row(r), flush=True)
+
+
+if __name__ == "__main__":
+    main()

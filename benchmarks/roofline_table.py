@@ -1,0 +1,42 @@
+"""Assemble the EXPERIMENTS.md roofline markdown table from per-cell JSONs.
+
+Usage: PYTHONPATH=src python -m benchmarks.roofline_table [--dir runs/roofline_opt]
+"""
+import argparse
+import glob
+import json
+import os
+
+ARCHS = ["command-r-35b", "llama3-405b", "qwen1.5-32b", "qwen3-4b",
+         "qwen2-vl-2b", "deepseek-v2-lite-16b", "phi3.5-moe-42b-a6.6b",
+         "zamba2-7b", "rwkv6-1.6b", "whisper-large-v3"]
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="runs/roofline_opt")
+    args = ap.parse_args(argv)
+    print("| arch | shape | t_comp | t_mem | t_coll | dominant | useful | roofline |")
+    print("|---|---|---|---|---|---|---|---|")
+    for arch in ARCHS:
+        for shape in SHAPES:
+            path = os.path.join(args.dir, f"{arch}__{shape}.json")
+            if not os.path.exists(path):
+                continue
+            r = json.load(open(path))
+            if r.get("skipped"):
+                print(f"| {arch} | {shape} | — | — | — | skipped | — | — |")
+                continue
+            if "error" in r:
+                print(f"| {arch} | {shape} | ERROR {r['error'][:60]} |")
+                continue
+            print(f"| {arch} | {shape} | {r['t_compute_s']:.3g} | "
+                  f"{r['t_memory_s']:.3g} | {r['t_collective_s']:.3g} | "
+                  f"{r['dominant'].replace('_s','')} | "
+                  f"{r['useful_flops_ratio']:.2f} | "
+                  f"{r['roofline_fraction']*100:.0f}% |")
+
+
+if __name__ == "__main__":
+    main()

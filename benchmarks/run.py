@@ -1,0 +1,40 @@
+"""Benchmark suite entry point: one module per paper table/figure.
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.run            # quick (CI) sizes
+    PYTHONPATH=src python -m benchmarks.run --full     # paper-scale sweeps
+    PYTHONPATH=src python -m benchmarks.run --only table1,table2
+
+The roofline harness (EXPERIMENTS.md §Roofline, needs 512 placeholder
+devices) is separate: ``python -m benchmarks.roofline``.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+SUITES = ("table1", "table2", "table3", "fig3", "proj")
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale sweeps (slow on CPU)")
+    ap.add_argument("--only", default="",
+                    help=f"comma list from {SUITES}")
+    args = ap.parse_args(argv)
+    only = [s.strip() for s in args.only.split(",") if s.strip()] or SUITES
+
+    from . import fig3_windows, proj_sparse, table1_runtime, \
+        table2_memory, table3_logsig
+    mods = {"table1": table1_runtime, "table2": table2_memory,
+            "table3": table3_logsig, "fig3": fig3_windows,
+            "proj": proj_sparse}
+    t0 = time.time()
+    for name in only:
+        mods[name].run(quick=not args.full)
+    print(f"\n# benchmarks done in {time.time() - t0:.0f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""Paper Table 2: peak training memory — the O(B·D_sig) law.
+
+Measured from XLA's compiled buffer assignment (``memory_analysis().temp
+bytes``) of the full train step (value_and_grad through the signature):
+
+- ``pathsig``    (inverse-reconstruction VJP): temp bytes flat in M.
+- ``checkpoint`` (sqrt-M VJP, beyond paper):   temp bytes ~ sqrt(M).
+- ``autodiff``   (scan autodiff = keras_sig law): temp bytes linear in M.
+
+Also reports Mem_out = 4·B·D_sig (the paper's theoretical floor) and each
+engine's peak/Mem_out multiple — the paper's pathsig stays near ~2×.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sig_dim
+from repro.core import tensor_ops as tops
+from repro.core.signature import signature_from_increments
+from .common import header, make_paths, row, temp_bytes
+
+MODES = ("inverse", "checkpoint", "autodiff")
+
+
+def _grad_fn(mode: str, depth: int):
+    def loss(incs):
+        out = signature_from_increments(incs, depth, backward=mode)
+        return jnp.sum(out ** 2)
+
+    return jax.grad(loss)
+
+
+def run(quick: bool = True) -> None:
+    header("table2: peak train memory vs sequence length (paper Table 2)")
+    B, d, N = 32, 5, 4
+    mem_out = 4 * B * sig_dim(d, N)
+    row("table2/mem_out", mem_out, "bytes", f"B={B};d={d};N={N}")
+    seqs = (50, 100, 200, 400) if quick else (50, 100, 200, 400, 800, 1600)
+    series: dict[str, list[tuple[int, int]]] = {m: [] for m in MODES}
+    for M in seqs:
+        incs = tops.path_increments(make_paths(B, M, d))
+        for mode in MODES:
+            tb = temp_bytes(_grad_fn(mode, N), incs)
+            series[mode].append((M, tb))
+            row(f"table2/temp_bytes/{mode}", tb, "bytes",
+                f"B={B};M={M};d={d};N={N};x_mem_out={tb/mem_out:.1f}")
+    # scaling law: fit temp ~ M^alpha between first and last points
+    import math
+    for mode in MODES:
+        (m0, b0), (m1, b1) = series[mode][0], series[mode][-1]
+        alpha = math.log(max(b1, 1) / max(b0, 1)) / math.log(m1 / m0)
+        row(f"table2/scaling_exponent/{mode}", f"{alpha:.2f}",
+            "alpha(temp~M^a)", f"expect inverse~0, checkpoint~0.5, autodiff~1")
+    # reduction factor at the largest M (paper's "Reduction (x)" column)
+    b_inv = series["inverse"][-1][1]
+    b_auto = series["autodiff"][-1][1]
+    row("table2/reduction_at_maxM", f"{b_auto / max(b_inv, 1):.1f}", "x",
+        f"autodiff/inverse at M={seqs[-1]}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,181 @@
+"""Paper §8: Hurst-parameter estimation on multivariate fBM with a sparse
+lead-lag signature projection.
+
+Deep-signature model (cf. Bonnier et al. [19]): a learnable per-channel
+scaling phi_theta of the lead-lag path, a signature feature map, and a small
+MLP head.  Three feature maps are compared, as in the paper's Figure 4:
+
+- ``fnn``       : flattened raw path -> MLP (no signature),
+- ``truncated`` : full truncated lead-lag signature W_{<=N},
+- ``sparse``    : the paper's sparse lead-lag word projection
+                  W^sparse_{<=N} = {u_1∘…∘u_p : u_j in G}, exploiting
+                  component independence (Section 8).
+
+Claims reproduced: the sparse projection reaches equal-or-lower validation
+MSE with a several-fold smaller feature dimension and faster training.
+
+Run:  PYTHONPATH=src python examples/hurst_fbm.py [--full]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (generated_words, lead_lag, make_plan, sig_dim,
+                        sparse_leadlag_generators)
+from repro.core.projection import projected_signature_from_increments
+from repro.core.signature import signature_from_increments
+from repro.core import tensor_ops as tops
+from repro.data.pipeline import hurst_dataset
+
+
+def init_mlp(key, sizes, out_bias: float = 0.5):
+    ps = []
+    for k, (a, b) in zip(jax.random.split(key, len(sizes) - 1),
+                         zip(sizes[:-1], sizes[1:])):
+        ps.append({"w": jax.random.normal(k, (a, b)) * jnp.sqrt(2.0 / a),
+                   "b": jnp.zeros((b,))})
+    # start at the prior mean of H ~ U(0.25, 0.75)
+    ps[-1]["b"] = ps[-1]["b"] + out_bias
+    return ps
+
+
+def mlp(ps, x):
+    for i, p in enumerate(ps):
+        x = x @ p["w"] + p["b"]
+        if i < len(ps) - 1:
+            x = jax.nn.gelu(x)
+    return x[..., 0]
+
+
+def make_model(kind: str, d: int, depth: int, M: int, key, sample):
+    """Returns (params, apply(params, paths)->H_hat, feature_dim).
+
+    Signature coefficients at different levels live on very different
+    scales, so features are whitened with statistics taken at init on a
+    reference batch (frozen thereafter) — standard deep-signature practice.
+    """
+    k1, k2 = jax.random.split(key)
+    if kind == "fnn":
+        feat_dim = (M + 1) * d
+        raw = lambda params, paths: paths.reshape(paths.shape[0], -1)
+        params = {"mlp": init_mlp(k2, [feat_dim, 256, 64, 1])}
+    else:
+        plan = None
+        if kind == "sparse":
+            words = generated_words(sparse_leadlag_generators(d), depth)
+            plan = make_plan(words, 2 * d)
+            feat_dim = len(words)
+        else:
+            feat_dim = sig_dim(2 * d, depth)
+        params = {"scale": jnp.ones((d,)),      # phi_theta: per-channel scale
+                  "mlp": init_mlp(k2, [feat_dim, 128, 64, 1])}
+
+        def raw(params, paths):
+            x = paths * params["scale"][None, None, :]
+            ll = lead_lag(x)                     # (B, 2M+1, 2d)
+            incs = tops.path_increments(ll)
+            if plan is not None:
+                f = projected_signature_from_increments(incs, plan)
+            else:
+                f = signature_from_increments(incs, depth)
+            # signature coefficients span decades (level-n terms scale like
+            # |X|^n); the signed-log map makes them MLP-friendly
+            return jnp.sign(f) * jnp.log1p(jnp.abs(f))
+
+    f0 = jax.jit(raw)(params, sample)            # init-time whitening stats
+    mu = jnp.mean(f0, axis=0)
+    sd = jnp.std(f0, axis=0) + 1e-6
+
+    def apply(params, paths):
+        return mlp(params["mlp"], (raw(params, paths) - mu) / sd)
+
+    return params, apply, feat_dim
+
+
+def train(kind, Xtr, Htr, Xva, Hva, *, depth, epochs, batch, lr, seed=0):
+    d, M = Xtr.shape[-1], Xtr.shape[1] - 1
+    params, apply, feat_dim = make_model(kind, d, depth, M,
+                                         jax.random.PRNGKey(seed), Xtr[:256])
+
+    def loss_fn(params, x, y):
+        pred = apply(params, x)
+        return jnp.mean((pred - y) ** 2)
+
+    # Adam
+    m = jax.tree.map(jnp.zeros_like, params)
+    v = jax.tree.map(jnp.zeros_like, params)
+
+    @jax.jit
+    def step(params, m, v, t, x, y):
+        loss, g = jax.value_and_grad(loss_fn)(params, x, y)
+        m = jax.tree.map(lambda a, b: 0.9 * a + 0.1 * b, m, g)
+        v = jax.tree.map(lambda a, b: 0.999 * a + 0.001 * b * b, v, g)
+        mh = jax.tree.map(lambda a: a / (1 - 0.9 ** t), m)
+        vh = jax.tree.map(lambda a: a / (1 - 0.999 ** t), v)
+        params = jax.tree.map(
+            lambda p, a, b: p - lr * a / (jnp.sqrt(b) + 1e-8), params, mh, vh)
+        return params, m, v, loss
+
+    val_loss = jax.jit(loss_fn)
+    n = Xtr.shape[0]
+    rng = np.random.default_rng(seed)
+    curve, t0, t_step = [], time.time(), 1
+    for ep in range(epochs):
+        perm = rng.permutation(n)
+        for i in range(0, n - batch + 1, batch):
+            idx = perm[i:i + batch]
+            params, m, v, _ = step(params, m, v, jnp.float32(t_step),
+                                   Xtr[idx], Htr[idx])
+            t_step += 1
+        vl = float(val_loss(params, Xva, Hva))
+        curve.append(vl)
+    return {"kind": kind, "feat_dim": feat_dim, "curve": curve,
+            "val_mse": curve[-1], "train_s": time.time() - t0}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale: 8000 paths of length 250")
+    ap.add_argument("--epochs", type=int, default=0)
+    args = ap.parse_args(argv)
+    if args.full:
+        n_tr, n_va, M, epochs = 8000, 2000, 250, 30
+    else:
+        n_tr, n_va, M, epochs = 1500, 400, 80, 25
+    epochs = args.epochs or epochs
+    d, depth, batch, lr = 5, 3, 128, 1e-2
+
+    print(f"generating {n_tr + n_va} fBM paths (d={d}, M={M}, "
+          f"H ~ U(0.25, 0.75)) ...")
+    X, H = hurst_dataset(seed=0, n_paths=n_tr + n_va, n_steps=M, d=d)
+    X = jnp.asarray(X)
+    H = jnp.asarray(H)
+    Xtr, Htr, Xva, Hva = X[:n_tr], H[:n_tr], X[n_tr:], H[n_tr:]
+    var_H = float(jnp.var(Hva))
+    print(f"predict-the-mean MSE (floor reference): {var_H:.5f}\n")
+
+    results = [train(k, Xtr, Htr, Xva, Hva, depth=depth, epochs=epochs,
+                     batch=batch, lr=lr) for k in ("fnn", "truncated",
+                                                   "sparse")]
+    print(f"{'model':<12} {'features':>9} {'val MSE':>10} {'train s':>9}")
+    for r in results:
+        print(f"{r['kind']:<12} {r['feat_dim']:>9} {r['val_mse']:>10.5f} "
+              f"{r['train_s']:>9.1f}")
+    tr = next(r for r in results if r["kind"] == "truncated")
+    sp = next(r for r in results if r["kind"] == "sparse")
+    print(f"\nsparse vs truncated: {tr['feat_dim'] / sp['feat_dim']:.2f}x "
+          f"fewer features, {tr['train_s'] / sp['train_s']:.2f}x faster "
+          f"training, val MSE {sp['val_mse']:.5f} vs {tr['val_mse']:.5f}")
+    print("validation curves (per epoch):")
+    for r in results:
+        print(f"  {r['kind']:<10}", " ".join(f"{x:.4f}" for x in r["curve"]))
+
+
+if __name__ == "__main__":
+    main()

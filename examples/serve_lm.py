@@ -1,0 +1,46 @@
+"""Batched serving example: KV-cache decode across architecture families.
+
+Serves three reduced architectures — a GQA transformer (qwen3 family), an
+attention-free RWKV6, and the hybrid Mamba2+shared-attention zamba2 — with
+the same ServeEngine, demonstrating that the cache abstraction covers
+KV caches, recurrent states, and mixed state types.
+
+Run:  PYTHONPATH=src python examples/serve_lm.py
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+import repro.models as M
+from repro.configs import get_config, reduce_config
+from repro.serve import ServeEngine
+
+
+def demo(arch: str, n_new: int = 24) -> None:
+    cfg = reduce_config(get_config(arch))
+    params = M.init_params(jax.random.PRNGKey(0), cfg, jnp.float32)
+    engine = ServeEngine(cfg, params, max_len=64, temperature=0.8)
+    prompts = jnp.asarray(
+        [[1, 5, 9, 2], [3, 3, 7, 1], [2, 8, 4, 6], [9, 1, 1, 5]],
+        jnp.int32)
+    t0 = time.perf_counter()
+    out = engine.generate(prompts, n_new, rng=jax.random.PRNGKey(42))
+    dt = time.perf_counter() - t0
+    toks = out.shape[0] * n_new
+    print(f"{arch:<22} family={cfg.family:<8} batch={out.shape[0]} "
+          f"generated={n_new}/seq  {toks/dt:7.1f} tok/s")
+    print(f"   sample: {out[0].tolist()}")
+
+
+def main() -> None:
+    for arch in ("qwen3-4b", "rwkv6-1.6b", "zamba2-7b"):
+        demo(arch)
+    print("\nserve OK (reduced configs; production decode is the same "
+          "serve_step the decode_32k/long_500k dry-run cells lower)")
+
+
+if __name__ == "__main__":
+    main()

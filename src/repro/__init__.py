@@ -1,0 +1,3 @@
+"""repro: JAX/Pallas reproduction and scale-out framework for pathsig
+(truncated & projected path signatures)."""
+__version__ = "0.1.0"

@@ -1,0 +1,31 @@
+"""pathsig core: truncated & projected path signatures in JAX (the paper's
+primary contribution), plus the word algebra driving the Pallas kernels."""
+from .words import (Word, all_words, anisotropic_words, dag_words, decode,
+                    encode, flat_index, generated_words, level_offsets,
+                    lyndon_words, lyndon_dim, make_plan, make_tiled_plan,
+                    prefix_closure, sig_dim, truncation_plan, WordPlan,
+                    TiledPlan)
+from .signature import (signature, signature_from_increments,
+                        signature_combine, signature_inverse)
+from .projection import projected_signature, projected_signature_from_increments
+from .logsignature import logsignature, logsignature_projected, logsig_dim
+from .windows import (windowed_signature, windowed_projection,
+                      windowed_signature_chen, expanding_windows,
+                      sliding_windows, dyadic_windows)
+from .transforms import (lead_lag, time_augment, basepoint_augment,
+                         sparse_leadlag_generators)
+from . import tensor_ops
+
+__all__ = [
+    "Word", "WordPlan", "TiledPlan", "all_words", "anisotropic_words",
+    "dag_words", "decode", "encode", "flat_index", "generated_words",
+    "level_offsets", "lyndon_words", "lyndon_dim", "make_plan",
+    "make_tiled_plan", "prefix_closure", "sig_dim", "truncation_plan",
+    "signature", "signature_from_increments", "signature_combine",
+    "signature_inverse", "projected_signature",
+    "projected_signature_from_increments", "logsignature",
+    "logsignature_projected", "logsig_dim", "windowed_signature",
+    "windowed_projection", "windowed_signature_chen", "expanding_windows",
+    "sliding_windows", "dyadic_windows", "lead_lag", "time_augment",
+    "basepoint_augment", "sparse_leadlag_generators", "tensor_ops",
+]

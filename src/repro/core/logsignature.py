@@ -1,0 +1,158 @@
+"""Log-signatures in the Lyndon (expanded) basis (paper §3.3).
+
+Two routes:
+
+- ``logsignature``: dense — full truncated signature, truncated tensor log,
+  then read the Lyndon-word coordinates.  Oracle path.
+- ``logsignature_projected``: the paper's projection trick — the signature is
+  computed over W_{<=N-1} ∪ Lyndon_N only (the top level, which dominates cost
+  since |W_n| = d^n, is restricted to Lyndon words), and the level-N log
+  coefficients are assembled from word factorisations:
+
+      log(S)[w] = sum_{k=1..n} (-1)^{k+1}/k  sum_{w = u_1∘…∘u_k, u_i≠eps}
+                  prod_i S[u_i]
+
+  Every proper factor of w has length <= N-1 and is therefore available.
+"""
+from __future__ import annotations
+
+import itertools
+from functools import lru_cache
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import tensor_ops as tops
+from .projection import projected_signature_from_increments
+from .signature import signature_from_increments
+from .words import (Word, all_words, encode, level_offsets, lyndon_words,
+                    make_plan, sig_dim)
+
+
+@lru_cache(maxsize=None)
+def _lyndon_flat_indices(d: int, depth: int) -> np.ndarray:
+    offs = level_offsets(d, depth)
+    idx = [int(offs[len(w)] + encode(w, d)) for w in lyndon_words(d, depth)]
+    return np.asarray(idx, dtype=np.int32)
+
+
+def logsignature(path: jax.Array, depth: int, *, basepoint: bool = False,
+                 backward: str = "inverse") -> jax.Array:
+    """Dense route: log of the full truncated signature at Lyndon words."""
+    if path.ndim == 2:
+        return logsignature(path[None], depth, basepoint=basepoint,
+                            backward=backward)[0]
+    if basepoint:
+        path = jnp.concatenate([jnp.zeros_like(path[:, :1]), path], axis=1)
+    d = path.shape[-1]
+    flat = signature_from_increments(tops.path_increments(path), depth,
+                                     backward=backward)
+    logs = tops.tensor_log(tops.flat_to_levels(flat, d, depth))
+    log_flat = tops.levels_to_flat(logs)
+    return jnp.take(log_flat, jnp.asarray(_lyndon_flat_indices(d, depth)),
+                    axis=1)
+
+
+# ---------------------------------------------------------------------------
+# projected route (paper §3.3 trick)
+# ---------------------------------------------------------------------------
+
+def _compositions(word: Word, k: int):
+    """All ways to split `word` into k non-empty contiguous factors."""
+    n = len(word)
+    for cuts in itertools.combinations(range(1, n), k - 1):
+        bounds = (0,) + cuts + (n,)
+        yield tuple(word[bounds[i]:bounds[i + 1]] for i in range(k))
+
+
+@lru_cache(maxsize=None)
+def _projected_tables(d: int, depth: int):
+    """Plan + factorisation index tables for the projected log-signature.
+
+    Word set: all words to depth-1, plus Lyndon words at depth.  For each
+    depth-N Lyndon word we tabulate every composition into k >= 2 factors as
+    rows of output-coefficient indices (into the plan's output vector), padded
+    with -1 (interpreted as multiplying by 1).
+    """
+    lw = lyndon_words(d, depth)
+    top = [w for w in lw if len(w) == depth]
+    words = all_words(d, depth - 1) + top if depth > 1 else top
+    plan = make_plan(words, d)
+    pos = {w: i for i, w in enumerate(plan.words)}
+
+    rows, coefs = [], []
+    for w in top:
+        for k in range(2, depth + 1):
+            for parts in _compositions(w, k):
+                rows.append([pos[p] for p in parts] + [-1] * (depth - k))
+                coefs.append(((-1) ** (k + 1)) / k)
+    comp_idx = np.asarray(rows, dtype=np.int32) if rows else \
+        np.zeros((0, depth), np.int32)
+    comp_coef = np.asarray(coefs, dtype=np.float32)
+    # scatter target: which top word each composition row belongs to
+    tgt = []
+    for wi, w in enumerate(top):
+        cnt = sum(1 for k in range(2, depth + 1)
+                  for _ in _compositions(w, k))
+        tgt.extend([wi] * cnt)
+    comp_tgt = np.asarray(tgt, dtype=np.int32)
+    top_rows = np.asarray([pos[w] for w in top], dtype=np.int32)
+    lown = sig_dim(d, depth - 1) if depth > 1 else 0
+    lyn_low = [w for w in lw if len(w) < depth]
+    low_rows = np.asarray([pos[w] for w in lyn_low] if depth > 1 else [],
+                          dtype=np.int32)
+    return plan, comp_idx, comp_coef, comp_tgt, top_rows, low_rows, lown
+
+
+def logsignature_projected(path: jax.Array, depth: int, *,
+                           basepoint: bool = False,
+                           backward: str = "inverse") -> jax.Array:
+    """Paper route: never materialises non-Lyndon level-N coefficients."""
+    if path.ndim == 2:
+        return logsignature_projected(path[None], depth, basepoint=basepoint,
+                                      backward=backward)[0]
+    if basepoint:
+        path = jnp.concatenate([jnp.zeros_like(path[:, :1]), path], axis=1)
+    d = path.shape[-1]
+    plan, comp_idx, comp_coef, comp_tgt, top_rows, low_rows, lown = \
+        _projected_tables(d, depth)
+    incs = tops.path_increments(path)
+    if depth >= 2:
+        # hybrid engine (§Perf kernel note): dense reshape-broadcast Horner
+        # for W_{<=N-1}, per-word chains only for Lyndon_N.  plan.words is
+        # all_words(N-1) ++ Lyndon_N in exactly the hybrid output order.
+        from .hybrid import hybrid_low_plus_top
+        top = [w for w in lyndon_words(d, depth) if len(w) == depth]
+        coeffs = hybrid_low_plus_top(incs, top, depth, backward=backward)
+    else:
+        coeffs = projected_signature_from_increments(
+            incs, plan, backward=backward)                   # (B, |I|)
+
+    # levels < N: dense truncated log on the low part (ordered level-major,
+    # exactly the flat layout of a depth-(N-1) signature).
+    outs = []
+    if depth > 1:
+        low = coeffs[:, :lown]
+        logs_low = tops.tensor_log(tops.flat_to_levels(low, d, depth - 1))
+        low_flat = tops.levels_to_flat(logs_low)
+        lyn_low_idx = jnp.asarray(_lyndon_flat_indices(d, depth - 1))
+        outs.append(jnp.take(low_flat, lyn_low_idx, axis=1))
+
+    # level N at Lyndon words: k=1 term + composition sums over low factors.
+    top = jnp.take(coeffs, jnp.asarray(top_rows), axis=1)  # (B, |Lyndon_N|)
+    if comp_idx.shape[0]:
+        padded = jnp.concatenate(
+            [coeffs, jnp.ones((coeffs.shape[0], 1), coeffs.dtype)], axis=1)
+        idx = jnp.asarray(comp_idx)
+        idx = jnp.where(idx < 0, coeffs.shape[1], idx)      # -1 -> ones column
+        factors = jnp.take(padded, idx, axis=1)             # (B, R, depth)
+        prods = jnp.prod(factors, axis=2) * jnp.asarray(comp_coef)[None]
+        corr = jnp.zeros_like(top).at[:, jnp.asarray(comp_tgt)].add(prods)
+        top = top + corr
+    outs.append(top)
+    return jnp.concatenate(outs, axis=1)
+
+
+def logsig_dim(d: int, depth: int) -> int:
+    return len(lyndon_words(d, depth))

@@ -1,0 +1,151 @@
+"""Signature projections onto arbitrary word sets (paper §3.1, §7).
+
+The engine updates the coefficients of the *prefix closure* of a requested
+word set I with the per-word Horner rule (paper Alg. 1), exactly as the CUDA
+kernels do, but vectorised over (batch, closure-rows).  All index tables come
+from :func:`repro.core.words.make_plan` on the host.
+
+Coefficient buffer layout: ``S`` has shape (B, 1 + W) where row 0 is the
+constant S[eps] = 1 and row 1..W are the closure words in level-major order.
+"""
+from __future__ import annotations
+
+from functools import lru_cache
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .words import WordPlan, make_plan
+from . import tensor_ops as tops
+
+
+def _plan_tables(plan: WordPlan):
+    # NB: numpy, not jnp — these tables are captured by lru_cached closures,
+    # and jnp constants materialised inside a jit trace would leak tracers.
+    return (np.asarray(plan.prefix_idx), np.asarray(plan.letters),
+            np.asarray(plan.inv), np.asarray(plan.emit))
+
+
+def projected_step(S: jax.Array, dx: jax.Array, prefix_idx, letters, inv,
+                   emit) -> jax.Array:
+    """One Chen update of all closure coefficients (paper Alg. 1, batched).
+
+    S: (B, 1+W) with S[:, 0] == 1;  dx: (B, d).
+    """
+    depth = prefix_idx.shape[1]
+    B = S.shape[0]
+    acc = jnp.zeros((B, prefix_idx.shape[0]), S.dtype)
+    h = acc
+    for j in range(depth):  # static unroll over Horner steps
+        pfx = jnp.take(S, prefix_idx[:, j], axis=1)       # S_old[w_{1:j}]
+        dxl = jnp.take(dx, letters[:, j], axis=1)         # ΔX^(i_{j+1})
+        acc = (pfx + acc) * dxl * inv[None, :, j]         # /(n - j)
+        h = h + acc * emit[None, :, j]                    # collect at j = n-1
+    return S.at[:, 1:].add(h)
+
+
+def _scan_projected(increments: jax.Array, plan: WordPlan,
+                    stream: bool) -> jax.Array:
+    B, M, d = increments.shape
+    tables = _plan_tables(plan)
+
+    def step(S, dx):
+        new = projected_step(S, dx, *tables)
+        return new, (new if stream else None)
+
+    S0 = jnp.concatenate([jnp.ones((B, 1), increments.dtype),
+                          jnp.zeros((B, plan.closure_size), increments.dtype)],
+                         axis=1)
+    final, ys = jax.lax.scan(step, S0, jnp.moveaxis(increments, 1, 0))
+    out_rows = jnp.asarray(plan.out_rows)
+    if stream:
+        return jnp.moveaxis(jnp.take(ys, out_rows, axis=2), 0, 1)
+    return jnp.take(final, out_rows, axis=1)
+
+
+@lru_cache(maxsize=None)
+def _make_projected_vjp(plan: WordPlan):
+    tables = _plan_tables(plan)
+
+    def step_fn(S, dx):
+        return projected_step(S, dx, *tables)
+
+    @jax.custom_vjp
+    def proj(increments):
+        return _scan_projected(increments, plan, stream=False)
+
+    def fwd(increments):
+        B, M, d = increments.shape
+
+        def step(S, dx):
+            return step_fn(S, dx), None
+
+        S0 = jnp.concatenate(
+            [jnp.ones((B, 1), increments.dtype),
+             jnp.zeros((B, plan.closure_size), increments.dtype)], axis=1)
+        S_T, _ = jax.lax.scan(step, S0, jnp.moveaxis(increments, 1, 0))
+        out = jnp.take(S_T, jnp.asarray(plan.out_rows), axis=1)
+        return out, (increments, S_T)
+
+    def bwd(res, g_out):
+        increments, S_T = res
+        B, M, d = increments.shape
+        # scatter the projection cotangent back onto the closure buffer
+        G_T = jnp.zeros_like(S_T).at[:, jnp.asarray(plan.out_rows)].add(g_out)
+
+        def step(carry, dx):
+            S, G = carry
+            S_prev = step_fn(S, -dx)                   # closure is prefix-closed,
+            _, vjp_fn = jax.vjp(step_fn, S_prev, dx)   # so the inverse step is exact
+            G_prev, g_dx = vjp_fn(G)
+            return (S_prev, G_prev), g_dx
+
+        (_, _), g_rev = jax.lax.scan(step, (S_T, G_T),
+                                     jnp.moveaxis(increments, 1, 0),
+                                     reverse=True)
+        return (jnp.moveaxis(g_rev, 0, 1),)
+
+    proj.defvjp(fwd, bwd)
+    return proj
+
+
+def projected_signature_from_increments(increments: jax.Array,
+                                        plan: WordPlan, *,
+                                        stream: bool = False,
+                                        backward: str = "inverse") -> jax.Array:
+    """π_I(S_{0,T}(X)) for the plan's word set I.  (B, M, d) -> (B, |I|)."""
+    increments, squeeze = _as_batched(increments)
+    if stream or backward == "autodiff":
+        out = _scan_projected(increments, plan, stream=stream)
+    elif backward == "inverse":
+        out = _make_projected_vjp(plan)(increments)
+    else:
+        raise ValueError(f"unknown backward mode {backward!r}")
+    return out[0] if squeeze else out
+
+
+def projected_signature(path: jax.Array, words, d: int | None = None, *,
+                        plan: WordPlan | None = None, stream: bool = False,
+                        backward: str = "inverse") -> jax.Array:
+    """Signature coefficients of an arbitrary word set (paper §7.1).
+
+    ``words`` is an iterable of letter tuples (0-based) or a prebuilt plan.
+    """
+    path, squeeze = _as_batched(path)
+    if plan is None:
+        if d is None:
+            d = path.shape[-1]
+        plan = make_plan(tuple(tuple(w) for w in words), d)
+    incs = tops.path_increments(path)
+    out = projected_signature_from_increments(incs, plan, stream=stream,
+                                              backward=backward)
+    return out[0] if squeeze else out
+
+
+def _as_batched(x: jax.Array) -> tuple[jax.Array, bool]:
+    if x.ndim == 2:
+        return x[None], True
+    if x.ndim == 3:
+        return x, False
+    raise ValueError(f"expected (M, d) or (B, M, d), got {x.shape}")

@@ -1,0 +1,200 @@
+"""Truncated path signatures with O(1)-in-length backprop (paper §3-4).
+
+Public API
+----------
+``signature(path, depth, ...)``              (B, M+1, d) -> (B, D_sig)
+``signature_from_increments(incs, depth)``   (B, M, d)   -> (B, D_sig)
+``signature(..., stream=True)``              -> (B, M, D_sig) expanding windows
+
+Three backward modes:
+
+- ``"inverse"`` (default, the paper's §4.2): store only the terminal
+  signature; reconstruct S_{0,t_{j-1}} = S_{0,t_j} ⊗ exp(-ΔX_j) during the
+  backward sweep.  Memory O(B·D_sig), independent of M.
+- ``"checkpoint"`` (beyond paper): O(√M) chunk boundaries are stored and the
+  backward recomputes within chunks — immune to inverse-reconstruction drift
+  on very long/large-increment paths.
+- ``"autodiff"``: plain scan autodiff, O(M·B·D_sig) memory (keras_sig-style
+  scaling; used as the memory-law baseline in benchmarks).
+"""
+from __future__ import annotations
+
+import math
+from functools import lru_cache, partial
+
+import jax
+import jax.numpy as jnp
+
+from . import tensor_ops as tops
+from .words import sig_dim
+
+
+def _as_batched(x: jax.Array) -> tuple[jax.Array, bool]:
+    if x.ndim == 2:
+        return x[None], True
+    if x.ndim == 3:
+        return x, False
+    raise ValueError(f"expected (M, d) or (B, M, d), got {x.shape}")
+
+
+# ---------------------------------------------------------------------------
+# forward scan
+# ---------------------------------------------------------------------------
+
+def _scan_forward(increments: jax.Array, depth: int,
+                  stream: bool) -> jax.Array:
+    """Plain levelwise-Horner Chen scan.  increments: (B, M, d)."""
+    B, M, d = increments.shape
+
+    def step(levels, dx):
+        new = tops.horner_step(levels, dx)
+        return new, (tops.levels_to_flat(new) if stream else None)
+
+    init = tops.zero_levels((B,), d, depth, increments.dtype)
+    final, ys = jax.lax.scan(step, init, jnp.moveaxis(increments, 1, 0))
+    if stream:
+        return jnp.moveaxis(ys, 0, 1)  # (B, M, D_sig)
+    return tops.levels_to_flat(final)
+
+
+# ---------------------------------------------------------------------------
+# custom VJP: inverse reconstruction (paper §4.2)
+# ---------------------------------------------------------------------------
+
+@lru_cache(maxsize=None)
+def _make_inverse_vjp(depth: int):
+    @jax.custom_vjp
+    def sig(increments):
+        return _scan_forward(increments, depth, stream=False)
+
+    def fwd(increments):
+        out = sig(increments)
+        return out, (increments, out)
+
+    def bwd(res, g_flat):
+        increments, out_flat = res
+        B, M, d = increments.shape
+        S_T = tops.flat_to_levels(out_flat, d, depth)
+        G_T = tops.flat_to_levels(g_flat, d, depth)
+
+        def step(carry, dx):
+            S, G = carry  # S = S_{0,t_j}, G = ∂L/∂S_{0,t_j}
+            S_prev = tops.horner_step(S, -dx)          # Prop. 4.6
+            _, vjp_fn = jax.vjp(tops.horner_step, S_prev, dx)
+            G_prev, g_dx = vjp_fn(G)
+            return (S_prev, G_prev), g_dx
+
+        (_, _), g_rev = jax.lax.scan(
+            step, (S_T, G_T), jnp.moveaxis(increments, 1, 0), reverse=True)
+        return (jnp.moveaxis(g_rev, 0, 1),)
+
+    sig.defvjp(fwd, bwd)
+    return sig
+
+
+# ---------------------------------------------------------------------------
+# custom VJP: sqrt(M) checkpointing (beyond paper)
+# ---------------------------------------------------------------------------
+
+@lru_cache(maxsize=None)
+def _make_checkpoint_vjp(depth: int, chunk: int):
+    def chunk_fn(levels, incs):  # incs: (c, B, d)
+        def step(lv, dx):
+            return tops.horner_step(lv, dx), None
+        out, _ = jax.lax.scan(step, levels, incs)
+        return out
+
+    @jax.custom_vjp
+    def sig(increments):
+        return _scan_forward(increments, depth, stream=False)
+
+    def fwd(increments):
+        B, M, d = increments.shape
+        n_chunks = -(-M // chunk)
+        pad = n_chunks * chunk - M
+        incs = jnp.pad(increments, ((0, 0), (0, pad), (0, 0)))  # zero incs = identity
+        incs = jnp.moveaxis(incs, 1, 0).reshape(n_chunks, chunk, B, d)
+
+        def outer(levels, c_incs):
+            new = chunk_fn(levels, c_incs)
+            return new, [lv for lv in levels]  # boundary BEFORE the chunk
+
+        init = tops.zero_levels((B,), d, depth, increments.dtype)
+        final, boundaries = jax.lax.scan(outer, init, incs)
+        return tops.levels_to_flat(final), (increments, boundaries)
+
+    def bwd(res, g_flat):
+        increments, boundaries = res
+        B, M, d = increments.shape
+        n_chunks = -(-M // chunk)
+        pad = n_chunks * chunk - M
+        incs = jnp.pad(increments, ((0, 0), (0, pad), (0, 0)))
+        incs = jnp.moveaxis(incs, 1, 0).reshape(n_chunks, chunk, B, d)
+        G = tops.flat_to_levels(g_flat, d, depth)
+
+        def outer(G, xs):
+            bound, c_incs = xs
+            _, vjp_fn = jax.vjp(chunk_fn, bound, c_incs)
+            G_prev, g_incs = vjp_fn(G)
+            return G_prev, g_incs
+
+        _, g_rev = jax.lax.scan(outer, G, (boundaries, incs), reverse=True)
+        g = jnp.moveaxis(g_rev.reshape(n_chunks * chunk, B, d), 0, 1)
+        return (g[:, :M],)
+
+    sig.defvjp(fwd, bwd)
+    return sig
+
+
+# ---------------------------------------------------------------------------
+# public API
+# ---------------------------------------------------------------------------
+
+def signature_from_increments(increments: jax.Array, depth: int, *,
+                              stream: bool = False,
+                              backward: str = "inverse") -> jax.Array:
+    """Truncated signature from increments (B, M, d) -> (B, D_sig)."""
+    increments, squeeze = _as_batched(increments)
+    if depth < 1:
+        raise ValueError("depth must be >= 1")
+    if stream:
+        out = _scan_forward(increments, depth, stream=True)
+    elif backward == "inverse":
+        out = _make_inverse_vjp(depth)(increments)
+    elif backward == "checkpoint":
+        M = increments.shape[1]
+        out = _make_checkpoint_vjp(depth, max(1, int(math.isqrt(M))))(increments)
+    elif backward == "autodiff":
+        out = _scan_forward(increments, depth, stream=False)
+    else:
+        raise ValueError(f"unknown backward mode {backward!r}")
+    return out[0] if squeeze else out
+
+
+def signature(path: jax.Array, depth: int, *, stream: bool = False,
+              basepoint: bool = False, backward: str = "inverse") -> jax.Array:
+    """Truncated signature of a piecewise-linear path (B, M+1, d).
+
+    ``basepoint=True`` prepends X_0 = 0 (so translation information is kept).
+    """
+    path, squeeze = _as_batched(path)
+    if basepoint:
+        path = jnp.concatenate([jnp.zeros_like(path[:, :1]), path], axis=1)
+    incs = tops.path_increments(path)
+    out = signature_from_increments(incs, depth, stream=stream,
+                                    backward=backward)
+    return out[0] if squeeze else out
+
+
+def signature_combine(flat_a: jax.Array, flat_b: jax.Array, d: int,
+                      depth: int) -> jax.Array:
+    """Chen combine: sig of concatenated paths from the two parts' sigs."""
+    a = tops.flat_to_levels(flat_a, d, depth)
+    b = tops.flat_to_levels(flat_b, d, depth)
+    return tops.levels_to_flat(tops.chen_mul(a, b))
+
+
+def signature_inverse(flat: jax.Array, d: int, depth: int) -> jax.Array:
+    """Group inverse (= signature of the time-reversed path, Lemma 4.5)."""
+    s = tops.flat_to_levels(flat, d, depth)
+    return tops.levels_to_flat(tops.tensor_inverse(s))

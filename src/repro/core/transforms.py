@@ -1,0 +1,54 @@
+"""Path transforms used with signatures (paper §8 and standard practice)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def lead_lag(path: jax.Array) -> jax.Array:
+    """Lead-lag transform (paper Def. 8.1): (B, M+1, d) -> (B, 2M+1, 2d).
+
+    Channel order: [lag_1..lag_d, lead_1..lead_d], i.e. hat{X}_{2k} =
+    (X_k, X_k), hat{X}_{2k+1} = (X_k, X_{k+1}).
+    """
+    if path.ndim == 2:
+        return lead_lag(path[None])[0]
+    B, M1, d = path.shape
+    M = M1 - 1
+    lag_even, lead_even = path[:, :-1], path[:, :-1]     # k = 0..M-1
+    lag_odd, lead_odd = path[:, :-1], path[:, 1:]
+    even = jnp.concatenate([lag_even, lead_even], axis=-1)  # (B, M, 2d)
+    odd = jnp.concatenate([lag_odd, lead_odd], axis=-1)
+    inter = jnp.stack([even, odd], axis=2).reshape(B, 2 * M, 2 * d)
+    last = jnp.concatenate([path[:, -1:], path[:, -1:]], axis=-1)
+    return jnp.concatenate([inter, last], axis=1)
+
+
+def time_augment(path: jax.Array, t0: float = 0.0, t1: float = 1.0) -> jax.Array:
+    """Append a monotone time channel: (B, M+1, d) -> (B, M+1, d+1)."""
+    if path.ndim == 2:
+        return time_augment(path[None], t0, t1)[0]
+    B, M1, _ = path.shape
+    t = jnp.linspace(t0, t1, M1, dtype=path.dtype)[None, :, None]
+    return jnp.concatenate([jnp.broadcast_to(t, (B, M1, 1)), path], axis=-1)
+
+
+def basepoint_augment(path: jax.Array) -> jax.Array:
+    """Prepend X = 0 so the signature sees the starting level."""
+    if path.ndim == 2:
+        return basepoint_augment(path[None])[0]
+    return jnp.concatenate([jnp.zeros_like(path[:, :1]), path], axis=1)
+
+
+def sparse_leadlag_generators(d: int) -> list[tuple[int, ...]]:
+    """Generator set G of paper §8 for independent components.
+
+    Channels: 0..d-1 = lag (ell_i), d..2d-1 = lead (L_i).
+    G = {(L_i)} ∪ {(ell_i, L_i), (L_i, ell_i)}.
+    """
+    gens: list[tuple[int, ...]] = [(d + i,) for i in range(d)]
+    for i in range(d):
+        gens.append((i, d + i))
+        gens.append((d + i, i))
+    return gens

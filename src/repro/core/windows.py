@@ -1,0 +1,110 @@
+"""Windowed signature computation (paper §5).
+
+Given index pairs (l_i, r_i), pathsig returns all S_{t_{l_i}, t_{r_i}}(X) in a
+single evaluation.  We materialise per-window increment slices (zero-padded to
+the longest window — zero increments are identity Chen updates, so padding is
+exact) and fold the window axis into the batch axis: windows become an extra
+axis of parallelism, exactly the paper's saturation argument.
+
+The Chen alternative S_{l,r} = S_{0,l}^{-1} ⊗ S_{0,r} is provided as
+``windowed_signature_chen`` (the paper notes it is cheaper only for heavily
+overlapping windows and can be numerically unstable; benchmarked in
+benchmarks/fig3_windows.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import tensor_ops as tops
+from .projection import projected_signature_from_increments
+from .signature import signature_from_increments, signature_inverse, \
+    signature_combine
+from .words import WordPlan
+
+
+def _window_increments(path: jax.Array, windows) -> jax.Array:
+    """(B, M+1, d), (K, 2) -> (B, K, L_max, d) zero-padded increment slices."""
+    windows_np = np.asarray(windows, dtype=np.int32)       # host: shapes are
+    L_max = int((windows_np[:, 1] - windows_np[:, 0]).max())  # static
+    windows = jnp.asarray(windows_np)
+    K = windows.shape[0]
+    incs = tops.path_increments(path)                      # (B, M, d)
+    M = incs.shape[1]
+    lengths = windows[:, 1] - windows[:, 0]                # (K,)
+    # gather indices: l_i + t, clamped; mask t >= length
+    t = jnp.arange(L_max)[None, :]                         # (1, L)
+    idx = jnp.clip(windows[:, :1] + t, 0, M - 1)           # (K, L)
+    mask = (t < lengths[:, None]).astype(incs.dtype)       # (K, L)
+    g = jnp.take(incs, idx.reshape(-1), axis=1)            # (B, K*L, d)
+    g = g.reshape(incs.shape[0], K, L_max, incs.shape[2])
+    return g * mask[None, :, :, None]
+
+
+def windowed_signature(path: jax.Array, windows, depth: int, *,
+                       backward: str = "inverse") -> jax.Array:
+    """(B, M+1, d) x (K, 2) -> (B, K, D_sig) in one batched evaluation."""
+    if path.ndim == 2:
+        return windowed_signature(path[None], windows, depth,
+                                  backward=backward)[0]
+    B = path.shape[0]
+    g = _window_increments(path, windows)                  # (B, K, L, d)
+    K, L, d = g.shape[1:]
+    flat = signature_from_increments(g.reshape(B * K, L, d), depth,
+                                     backward=backward)
+    return flat.reshape(B, K, -1)
+
+
+def windowed_projection(path: jax.Array, windows, plan: WordPlan, *,
+                        backward: str = "inverse") -> jax.Array:
+    """Windowed + word-projected signatures in one call (B, K, |I|)."""
+    if path.ndim == 2:
+        return windowed_projection(path[None], windows, plan,
+                                   backward=backward)[0]
+    B = path.shape[0]
+    g = _window_increments(path, windows)
+    K, L, d = g.shape[1:]
+    out = projected_signature_from_increments(g.reshape(B * K, L, d), plan,
+                                              backward=backward)
+    return out.reshape(B, K, -1)
+
+
+def windowed_signature_chen(path: jax.Array, windows, depth: int) -> jax.Array:
+    """Signatory-style alternative: S_{l,r} = S_{0,l}^{-1} ⊗ S_{0,r}."""
+    if path.ndim == 2:
+        return windowed_signature_chen(path[None], windows, depth)[0]
+    d = path.shape[-1]
+    windows = jnp.asarray(windows, dtype=jnp.int32)
+    stream = signature_from_increments(tops.path_increments(path), depth,
+                                       stream=True)        # (B, M, D)
+    # prepend the identity signature for l = 0
+    ident = jnp.zeros_like(stream[:, :1])
+    stream = jnp.concatenate([ident, stream], axis=1)       # (B, M+1, D)
+    s_l = jnp.take(stream, windows[:, 0], axis=1)           # (B, K, D)
+    s_r = jnp.take(stream, windows[:, 1], axis=1)
+    inv = signature_inverse(s_l.reshape(-1, s_l.shape[-1]), d, depth)
+    out = signature_combine(inv, s_r.reshape(-1, s_r.shape[-1]), d, depth)
+    return out.reshape(s_l.shape)
+
+
+def expanding_windows(M: int, stride: int = 1) -> np.ndarray:
+    r = np.arange(stride, M + 1, stride, dtype=np.int32)
+    return np.stack([np.zeros_like(r), r], axis=1)
+
+
+def sliding_windows(M: int, length: int, stride: int = 1) -> np.ndarray:
+    l = np.arange(0, M - length + 1, stride, dtype=np.int32)
+    return np.stack([l, l + length], axis=1)
+
+
+def dyadic_windows(M: int, levels: int) -> np.ndarray:
+    """Dyadic hierarchy of windows as in the generalised signature method."""
+    out = []
+    for lev in range(levels):
+        k = 2 ** lev
+        bounds = np.linspace(0, M, k + 1).astype(np.int32)
+        for i in range(k):
+            if bounds[i + 1] > bounds[i]:
+                out.append((bounds[i], bounds[i + 1]))
+    return np.asarray(out, dtype=np.int32)

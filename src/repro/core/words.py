@@ -1,0 +1,336 @@
+"""Word algebra over the alphabet {0, ..., d-1} (paper §2.3, Appendix A).
+
+Words index the canonical basis of the tensor algebra T(R^d).  We follow the
+paper's integer encoding (Def. A.1): a word w = (i_1, ..., i_n) of length n is
+stored as the base-d integer  phi_n(w) = sum_j i_j d^{n-j},  which is bijective
+per level and preserves lexicographic order (Prop. A.2).  A word is therefore
+represented as the pair ``(level, code)``; the pair is flattened into a single
+global index by the cumulative level offset.
+
+Everything in this module runs on the host at trace/plan time and produces
+plain numpy index tables that are fed to the JAX/Pallas engines.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Iterable, Sequence
+
+import numpy as np
+
+Word = tuple[int, ...]  # letters over 0-based alphabet
+
+
+# ---------------------------------------------------------------------------
+# encoding / decoding (Appendix A)
+# ---------------------------------------------------------------------------
+
+def encode(word: Word, d: int) -> int:
+    """phi_n(word): base-d integer encoding (Def. A.1)."""
+    code = 0
+    for letter in word:
+        if not 0 <= letter < d:
+            raise ValueError(f"letter {letter} outside alphabet of size {d}")
+        code = code * d + letter
+    return code
+
+
+def decode(code: int, level: int, d: int) -> Word:
+    """Inverse of :func:`encode` at a fixed level."""
+    letters = []
+    for _ in range(level):
+        letters.append(code % d)
+        code //= d
+    return tuple(reversed(letters))
+
+
+def concat_codes(code_u: int, code_v: int, len_v: int, d: int) -> int:
+    """Encoding of u∘v from encodings of u, v (Prop. A.3)."""
+    return code_u * d**len_v + code_v
+
+
+def prefix_code(code: int, level: int, k: int, d: int) -> int:
+    """Encoding of the length-k prefix of a level-`level` word (Cor. A.4)."""
+    return code // d ** (level - k)
+
+
+def suffix_code(code: int, k: int, d: int) -> int:
+    """Encoding of the length-k suffix (Cor. A.5)."""
+    return code % d**k
+
+
+def level_offsets(d: int, depth: int) -> np.ndarray:
+    """offsets[n] = flat index of the first level-n word, for n = 0..depth.
+
+    Level 0 (the empty word) is *not* stored in signature buffers, so
+    offsets[1] == 0 and offsets[depth+1] == D_sig.
+    """
+    sizes = [d**n for n in range(1, depth + 1)]
+    return np.concatenate([[0, 0], np.cumsum(sizes)]).astype(np.int64)
+
+
+def sig_dim(d: int, depth: int) -> int:
+    """D_sig = sum_{n=1..N} d^n (level 0 excluded, as in the paper §6.2)."""
+    return sum(d**n for n in range(1, depth + 1))
+
+
+def flat_index(word: Word, d: int) -> int:
+    """Global index of a non-empty word in the level-concatenated layout."""
+    n = len(word)
+    if n == 0:
+        raise ValueError("empty word has no flat index (level 0 is implicit)")
+    return int(level_offsets(d, n)[n] + encode(word, d))
+
+
+# ---------------------------------------------------------------------------
+# word-set constructors (paper §7)
+# ---------------------------------------------------------------------------
+
+def all_words(d: int, depth: int) -> list[Word]:
+    """W_{<=N} \\ {eps}: every word of length 1..depth, level-major lex order."""
+    out: list[Word] = []
+    for n in range(1, depth + 1):
+        out.extend(itertools.product(range(d), repeat=n))
+    return out
+
+
+def anisotropic_words(gamma: Sequence[float], r: float) -> list[Word]:
+    """W^γ_{<=r}: words with weighted degree |w|_γ <= r (paper Def. 7.1).
+
+    γ_i > 0 for all i, so the set is finite; built by DFS.  The result is
+    prefix-closed by construction (weighted degree is monotone in prefixes).
+    """
+    gamma = list(map(float, gamma))
+    if any(g <= 0 for g in gamma):
+        raise ValueError("anisotropic weights must be strictly positive")
+    d = len(gamma)
+    out: list[Word] = []
+
+    def dfs(word: Word, weight: float) -> None:
+        for i in range(d):
+            w2 = weight + gamma[i]
+            if w2 <= r + 1e-12:
+                nxt = word + (i,)
+                out.append(nxt)
+                dfs(nxt, w2)
+
+    dfs((), 0.0)
+    out.sort(key=lambda w: (len(w), w))
+    return out
+
+
+def dag_words(edges: Iterable[tuple[int, int]], d: int, depth: int,
+              roots: Iterable[int] | None = None) -> list[Word]:
+    """W_{<=N}(G): words whose consecutive letters follow edges of G (§7.1)."""
+    adj: dict[int, list[int]] = {i: [] for i in range(d)}
+    for i, j in edges:
+        adj[i].append(j)
+    out: list[Word] = []
+    start = list(roots) if roots is not None else list(range(d))
+
+    def dfs(word: Word) -> None:
+        if len(word) >= depth:
+            return
+        for j in adj[word[-1]]:
+            nxt = word + (j,)
+            out.append(nxt)
+            dfs(nxt)
+
+    for i in start:
+        out.append((i,))
+        dfs((i,))
+    out.sort(key=lambda w: (len(w), w))
+    return out
+
+
+def generated_words(generators: Iterable[Word], depth: int) -> list[Word]:
+    """Words formed by concatenating generator blocks, up to `depth` (§8).
+
+    Mirrors the paper's sparse lead-lag set  W^sparse_{<=N} = {u_1∘…∘u_p :
+    u_j ∈ G, |w| <= N}.  The empty word is excluded from the result.
+    """
+    gens = [tuple(g) for g in generators if len(g) > 0]
+    seen: set[Word] = set()
+    frontier: list[Word] = [()]
+    while frontier:
+        new: list[Word] = []
+        for base in frontier:
+            for g in gens:
+                w = base + g
+                if len(w) <= depth and w not in seen:
+                    seen.add(w)
+                    new.append(w)
+        frontier = new
+    out = sorted(seen, key=lambda w: (len(w), w))
+    return out
+
+
+def lyndon_words(d: int, depth: int) -> list[Word]:
+    """All Lyndon words over {0..d-1} of length 1..depth (Duval's algorithm)."""
+    out: list[Word] = []
+    w = [-1]
+    while w:
+        w[-1] += 1
+        m = len(w)
+        if m <= depth:
+            out.append(tuple(w))
+        # extend periodically to length `depth`
+        while len(w) < depth:
+            w.append(w[len(w) - m])
+        # strip trailing maximal letters
+        while w and w[-1] == d - 1:
+            w.pop()
+    out.sort(key=lambda t: (len(t), t))
+    return out
+
+
+def lyndon_dim(d: int, depth: int) -> int:
+    """dim of the free Lie algebra truncation = #Lyndon words (necklace sum)."""
+    return len(lyndon_words(d, depth))
+
+
+# ---------------------------------------------------------------------------
+# prefix closure + computation plan (paper §3.1-3.2 adapted to tiles)
+# ---------------------------------------------------------------------------
+
+def prefix_closure(words: Iterable[Word]) -> list[Word]:
+    """Smallest prefix-closed superset (excluding eps), level-major sorted."""
+    closed: set[Word] = set()
+    for w in words:
+        w = tuple(w)
+        for k in range(1, len(w) + 1):
+            closed.add(w[:k])
+    return sorted(closed, key=lambda w: (len(w), w))
+
+
+@dataclasses.dataclass(frozen=True, eq=False)  # eq=False: identity hash (arrays)
+class WordPlan:
+    """Index tables driving the word-table signature engines.
+
+    The closure rows are augmented with a virtual row 0 holding the constant
+    coefficient S[eps] = 1, so prefix indices are always well-defined.  For a
+    closure of size W and max level N:
+
+    - ``letters[r, j]``: j-th letter (0-based position) of word r; 0-padded.
+    - ``prefix_idx[r, j]``: row index (into the augmented buffer, so 0 = eps)
+      of the length-j prefix of word r, for j = 0..N-1 (j < len(r)).
+    - ``inv[r, j]``: Horner divisor 1/(n_r - j) for step j (paper Alg. 1);
+      0 where j >= len(r) (masks padded steps).
+    - ``emit[r, j]``: 1.0 exactly at j = len(r) - 1 (the step whose
+      accumulator equals the word's Chen increment h).
+    - ``out_rows``: rows (augmented indexing) of the originally requested
+      words, in their original order — the projection π_I output.
+    """
+    d: int
+    depth: int
+    words: tuple[Word, ...]          # requested set, original order
+    closure: tuple[Word, ...]        # prefix closure, level-major order
+    letters: np.ndarray              # (W, N) int32
+    prefix_idx: np.ndarray           # (W, N) int32, augmented row indices
+    inv: np.ndarray                  # (W, N) float32
+    emit: np.ndarray                 # (W, N) float32
+    lengths: np.ndarray              # (W,) int32
+    out_rows: np.ndarray             # (len(words),) int32
+
+    @property
+    def closure_size(self) -> int:
+        return len(self.closure)
+
+    @property
+    def max_level(self) -> int:
+        return self.depth
+
+
+def make_plan(words: Sequence[Word], d: int) -> WordPlan:
+    """Build the index tables for an arbitrary non-empty word set."""
+    words = [tuple(w) for w in words]
+    if not words:
+        raise ValueError("word set must be non-empty")
+    for w in words:
+        if len(w) == 0:
+            raise ValueError("the empty word is implicit; remove it from the set")
+        if any(not 0 <= i < d for i in w):
+            raise ValueError(f"word {w} outside alphabet of size {d}")
+    closure = prefix_closure(words)
+    depth = max(len(w) for w in closure)
+    row_of: dict[Word, int] = {w: r + 1 for r, w in enumerate(closure)}  # +1: eps row
+    W = len(closure)
+    letters = np.zeros((W, depth), dtype=np.int32)
+    prefix_idx = np.zeros((W, depth), dtype=np.int32)
+    inv = np.zeros((W, depth), dtype=np.float32)
+    emit = np.zeros((W, depth), dtype=np.float32)
+    lengths = np.zeros((W,), dtype=np.int32)
+    for r, w in enumerate(closure):
+        n = len(w)
+        lengths[r] = n
+        for j in range(n):
+            letters[r, j] = w[j]
+            prefix_idx[r, j] = 0 if j == 0 else row_of[w[:j]]
+            inv[r, j] = 1.0 / (n - j)
+        emit[r, n - 1] = 1.0
+    out_rows = np.array([row_of[w] for w in words], dtype=np.int32)
+    return WordPlan(d=d, depth=depth, words=tuple(words), closure=tuple(closure),
+                    letters=letters, prefix_idx=prefix_idx, inv=inv, emit=emit,
+                    lengths=lengths, out_rows=out_rows)
+
+
+def truncation_plan(d: int, depth: int) -> WordPlan:
+    """Plan for the full truncation W_{<=N} (useful as an oracle path)."""
+    return make_plan(all_words(d, depth), d)
+
+
+# ---------------------------------------------------------------------------
+# tiling for the Pallas word-set kernel (§2.1 of DESIGN.md)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class TiledPlan:
+    """A word plan partitioned into prefix-closed tiles of bounded size.
+
+    Each tile is itself a WordPlan (its closure includes the shared prefix
+    path redundantly — the paper's locality/redundancy trade).  ``gather``
+    maps each requested word to (tile, out_row-within-tile).
+    """
+    d: int
+    tiles: tuple[WordPlan, ...]
+    # for each requested word in original order: (tile_index, row_in_tile_out)
+    gather: tuple[tuple[int, int], ...]
+    words: tuple[Word, ...]
+
+
+def make_tiled_plan(words: Sequence[Word], d: int, max_rows: int = 256) -> TiledPlan:
+    """Split a word set into prefix-closed tiles with closure size <= max_rows.
+
+    Strategy: recursively partition by first letter (level-1 prefix, then
+    level-2, ...) until each group's closure fits.  Each group keeps its own
+    copy of the shared ancestor path, mirroring the paper's per-thread P_w
+    redundancy at tile granularity.
+    """
+    words = [tuple(w) for w in words]
+
+    def split(group: list[Word], level: int) -> list[list[Word]]:
+        closure_size = len(prefix_closure(group))
+        if closure_size <= max_rows or all(len(w) <= level for w in group):
+            return [group]
+        buckets: dict[Word, list[Word]] = {}
+        shorts: list[Word] = []
+        for w in group:
+            if len(w) <= level:
+                shorts.append(w)
+            else:
+                buckets.setdefault(w[: level + 1], []).append(w)
+        out: list[list[Word]] = []
+        if shorts:
+            out.append(shorts)
+        for _, sub in sorted(buckets.items()):
+            out.extend(split(sub, level + 1))
+        return out
+
+    groups = split(words, 0)
+    tiles = tuple(make_plan(g, d) for g in groups)
+    where: dict[Word, tuple[int, int]] = {}
+    for t, plan in enumerate(tiles):
+        for k, w in enumerate(plan.words):
+            where[w] = (t, k)
+    gather = tuple(where[w] for w in words)
+    return TiledPlan(d=d, tiles=tiles, gather=gather, words=tuple(words))

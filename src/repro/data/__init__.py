@@ -1,0 +1,2 @@
+from .pipeline import (TokenStream, fbm_paths, synthetic_lm_batches,
+                       hurst_dataset, ShardedLoader)

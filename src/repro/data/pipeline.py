@@ -1,0 +1,137 @@
+"""Data pipeline: synthetic LM token streams (deterministic, seekable —
+checkpointable), fBM path generation for the paper's §8 experiment, and a
+host-sharded loader abstraction for multi-process launches.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# synthetic LM stream (seekable => data state lives in the checkpoint)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class TokenStream:
+    """Deterministic synthetic LM stream with a Zipfian unigram + a short
+    Markov dependency so the loss has learnable structure.
+
+    ``state`` is just the step counter — restoring it resumes the exact
+    stream (fault-tolerant input pipeline).
+    """
+    vocab_size: int
+    batch: int
+    seq: int
+    seed: int = 0
+    step: int = 0
+
+    def __post_init__(self):
+        rng = np.random.default_rng(self.seed)
+        ranks = np.arange(1, self.vocab_size + 1)
+        self._p = (1.0 / ranks) / np.sum(1.0 / ranks)
+        self._shift = rng.integers(1, self.vocab_size, size=8)
+
+    def state(self) -> dict:
+        return {"step": self.step, "seed": self.seed}
+
+    def restore(self, state: dict) -> None:
+        self.step = int(state["step"])
+
+    def __iter__(self) -> Iterator[dict]:
+        return self
+
+    def __next__(self) -> dict:
+        rng = np.random.default_rng((self.seed, self.step))
+        base = rng.choice(self.vocab_size, size=(self.batch, self.seq + 1),
+                          p=self._p)
+        # inject short-range structure: x[t] sometimes determined by x[t-1]
+        det = (base[:, :-1] + self._shift[self.step % 8]) % self.vocab_size
+        mask = rng.random((self.batch, self.seq)) < 0.5
+        nxt = np.where(mask, det, base[:, 1:])
+        tokens = np.concatenate([base[:, :1], nxt], axis=1)
+        self.step += 1
+        return {"tokens": jnp.asarray(tokens[:, :-1], jnp.int32),
+                "labels": jnp.asarray(tokens[:, 1:], jnp.int32)}
+
+
+def synthetic_lm_batches(vocab_size: int, batch: int, seq: int,
+                         seed: int = 0) -> Iterator[dict]:
+    return iter(TokenStream(vocab_size, batch, seq, seed))
+
+
+# ---------------------------------------------------------------------------
+# fractional Brownian motion (paper §8)
+# ---------------------------------------------------------------------------
+
+def fbm_paths(rng: np.random.Generator, n_paths: int, n_steps: int,
+              hurst: np.ndarray | float, d: int = 1,
+              T: float = 1.0) -> np.ndarray:
+    """Exact fBM via Cholesky of the fBM covariance (per Hurst exponent).
+
+    hurst: scalar or (n_paths,) array (H ~ U(0.25, 0.75) in the paper).
+    Returns (n_paths, n_steps+1, d), X_0 = 0, components independent.
+    """
+    H = np.broadcast_to(np.asarray(hurst, np.float64), (n_paths,))
+    t = np.linspace(T / n_steps, T, n_steps)
+    out = np.zeros((n_paths, n_steps + 1, d), np.float32)
+    # group paths by identical H to reuse the Cholesky factor
+    uniq, inv = np.unique(np.round(H, 6), return_inverse=True)
+    for u_i, h in enumerate(uniq):
+        idx = np.nonzero(inv == u_i)[0]
+        tt = t[:, None]
+        ss = t[None, :]
+        cov = 0.5 * (tt ** (2 * h) + ss ** (2 * h) - np.abs(tt - ss) ** (2 * h))
+        L = np.linalg.cholesky(cov + 1e-12 * np.eye(n_steps))
+        z = rng.standard_normal((len(idx), n_steps, d))
+        out[idx, 1:, :] = np.einsum("ts,psd->ptd", L, z).astype(np.float32)
+    return out
+
+
+def hurst_dataset(seed: int, n_paths: int, n_steps: int, d: int,
+                  h_range=(0.25, 0.75)) -> tuple[np.ndarray, np.ndarray]:
+    """(paths (N, M+1, d), H (N,)) — the paper's §8 Hurst-estimation data."""
+    rng = np.random.default_rng(seed)
+    H = rng.uniform(*h_range, size=n_paths)
+    X = fbm_paths(rng, n_paths, n_steps, H, d)
+    return X, H.astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# host-sharded loader
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ShardedLoader:
+    """Wraps a stream so each host reads only its shard of the global batch.
+
+    In a multi-process launch, process i of n loads rows [i·B/n, (i+1)·B/n);
+    with jax.make_array_from_process_local_data the global batch is assembled
+    without cross-host traffic.  On a single process this is an identity.
+    """
+    stream: TokenStream
+    process_index: int = 0
+    process_count: int = 1
+
+    def state(self):
+        return self.stream.state()
+
+    def restore(self, st):
+        self.stream.restore(st)
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        batch = next(self.stream)
+        if self.process_count == 1:
+            return batch
+        def shard(x):
+            B = x.shape[0]
+            per = B // self.process_count
+            return x[self.process_index * per:(self.process_index + 1) * per]
+        return jax.tree.map(shard, batch)

@@ -1,0 +1,1 @@
+from .ctx import sharding_ctx, shard, resolve_spec, current_mesh, DEFAULT_RULES

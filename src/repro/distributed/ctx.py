@@ -1,0 +1,119 @@
+"""Logical-axis sharding context.
+
+Model code annotates activations with *logical* axis names; the launcher
+installs a mesh + rule set mapping logical names to mesh axes.  Outside any
+mesh context the annotations are no-ops, so the same model code runs on a
+laptop and on a 512-chip two-pod mesh.
+
+Rules are intentionally a mutable dict — the §Perf hillclimb flips entries
+(e.g. ``"kv_seq": "data"`` to turn on context parallelism) and re-lowers.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_CTX: contextvars.ContextVar[Optional[tuple[Mesh, dict]]] = \
+    contextvars.ContextVar("repro_sharding_ctx", default=None)
+
+# default logical-axis rules; tuple values mean "sharded over several axes"
+DEFAULT_RULES: dict[str, object] = {
+    "batch": ("pod", "data"),   # axes absent from the mesh are dropped
+    "seq": None,
+    "kv_seq": None,             # flipped to "data" for long-context decode
+    "model": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "ff": "model",
+    "vocab": "model",
+    "embed": None,
+    "expert": "model",
+    # expert-slot axis of the MoE dispatch (E, slots, d): the factors of the
+    # token sharding NOT consumed by the expert axis — keeps expert GEMMs
+    # fully local after the EP all-to-all (§Perf cell A)
+    "moe_slots": ("pod", "data"),
+    "fsdp": "data",             # parameter sharding axis (ZeRO-3)
+}
+
+
+@contextlib.contextmanager
+def sharding_ctx(mesh: Mesh, rules: dict | None = None):
+    merged = dict(DEFAULT_RULES)
+    if rules:
+        merged.update(rules)
+    token = _CTX.set((mesh, merged))
+    try:
+        yield
+    finally:
+        _CTX.reset(token)
+
+
+def current_mesh() -> Optional[Mesh]:
+    ctx = _CTX.get()
+    return ctx[0] if ctx else None
+
+
+def resolve_spec(*logical: Optional[str]) -> Optional[P]:
+    """Logical axis names -> PartitionSpec under the current rules."""
+    ctx = _CTX.get()
+    if ctx is None:
+        return None
+    mesh, rules = ctx
+    names = set(mesh.axis_names)
+    dims = []
+    for l in logical:
+        if l is None:
+            dims.append(None)
+            continue
+        r = rules.get(l)
+        if r is None:
+            dims.append(None)
+        elif isinstance(r, tuple):
+            use = tuple(a for a in r if a in names)
+            dims.append(use if use else None)
+        else:
+            dims.append(r if r in names else None)
+    return P(*dims)
+
+
+def shard(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+    """with_sharding_constraint under the current logical rules (no-op
+    when no mesh is installed).  Dims not divisible by their axis product are
+    left unconstrained — uneven shardings trigger involuntary full
+    rematerialisation in the SPMD partitioner."""
+    spec = resolve_spec(*logical)
+    ctx = _CTX.get()
+    if spec is None or ctx is None:
+        return x
+    mesh = ctx[0]
+    clean = []
+    used: set = set()   # a mesh axis may shard at most one dim; first wins
+    for dim, axes in zip(x.shape, tuple(spec) + (None,) * (x.ndim - len(spec))):
+        if axes is None:
+            clean.append(None)
+            continue
+        names = (axes,) if isinstance(axes, str) else tuple(axes)
+        names = tuple(a for a in names if a not in used)
+        if not names:
+            clean.append(None)
+            continue
+        size = 1
+        for a in names:
+            size *= mesh.shape[a]
+        if dim % size:
+            clean.append(None)
+        else:
+            used.update(names)
+            clean.append(names if len(names) > 1 else names[0])
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*clean)))
+
+
+def named_sharding(*logical: Optional[str]) -> Optional[NamedSharding]:
+    ctx = _CTX.get()
+    if ctx is None:
+        return None
+    return NamedSharding(ctx[0], resolve_spec(*logical))

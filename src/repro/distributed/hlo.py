@@ -1,0 +1,112 @@
+"""HLO analysis: collective-byte accounting for the roofline.
+
+``cost_analysis()`` does not report collective traffic, so we parse the
+post-SPMD optimized HLO text and sum the bytes moved by every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute, applying
+ring-algorithm factors per op kind and participating-group size.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+import numpy as np
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{([^}]*)\}")
+_GROUPS_V2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(sig: str) -> int:
+    """Sum byte sizes of all tensors in an HLO shape signature (handles
+    tuple shapes '(f32[...], f32[...])')."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(sig):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_V2_RE.search(line)
+    if m:  # iota v2 format [num_groups,group_size]
+        return int(m.group(2))
+    m = _GROUPS_RE.search(line)
+    if m:
+        first = m.group(1).split("}")[0].split("{")[-1]
+        ids = [x for x in first.split(",") if x.strip() != ""]
+        return max(1, len(ids))
+    return default
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    # per-kind: (count, result_bytes, wire_bytes_per_device)
+    by_kind: dict
+    total_wire_bytes: float   # per device, ring-model estimate
+    total_result_bytes: float
+
+    def summary(self) -> str:
+        lines = [f"{k}: n={v[0]} result={v[1]/2**20:.1f}MiB "
+                 f"wire/dev={v[2]/2**20:.1f}MiB" for k, v in
+                 sorted(self.by_kind.items())]
+        lines.append(f"TOTAL wire/device = {self.total_wire_bytes/2**20:.1f} MiB")
+        return "\n".join(lines)
+
+
+def collective_stats(hlo_text: str, default_group: int = 1) -> CollectiveStats:
+    by_kind = defaultdict(lambda: [0, 0.0, 0.0])
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        m = re.match(r"%?[\w.\-]+ = (.+?) ([a-z\-]+)\(", ls)
+        if not m:
+            continue
+        kind = m.group(2)
+        if kind not in _COLLECTIVES:
+            continue
+        if "all-reduce-start" in ls or "all-gather-start" in ls:
+            pass  # async starts carry the shape; done ops are pass-through
+        result_bytes = _shape_bytes(m.group(1))
+        n = _group_size(ls, default_group)
+        # ring-model wire bytes per device
+        if kind == "all-reduce":
+            wire = 2.0 * result_bytes * (n - 1) / max(n, 1)
+        elif kind == "all-gather":
+            wire = result_bytes * (n - 1) / max(n, 1)
+        elif kind == "reduce-scatter":
+            wire = result_bytes * (n - 1)  # result is the scattered shard
+        elif kind == "all-to-all":
+            wire = result_bytes * (n - 1) / max(n, 1)
+        else:  # collective-permute: point-to-point
+            wire = result_bytes
+        s = by_kind[kind]
+        s[0] += 1
+        s[1] += result_bytes
+        s[2] += wire
+    total_wire = sum(v[2] for v in by_kind.values())
+    total_res = sum(v[1] for v in by_kind.values())
+    return CollectiveStats(dict(by_kind), total_wire, total_res)
+
+
+def remat_duplication(hlo_text: str) -> float:
+    """Heuristic recompute indicator: ratio of dot/convolution op count to
+    unique dot shapes (remat re-emits identical dots)."""
+    dots = re.findall(r" = (.+?) dot\(", hlo_text)
+    if not dots:
+        return 1.0
+    return len(dots) / max(1, len(set(dots)))

@@ -1,0 +1,197 @@
+"""Parameter / activation / cache sharding rules (FSDP × TP × EP × CP).
+
+Strategy (DESIGN.md §5):
+- 'model' axis: Megatron tensor parallelism — heads, d_ff, vocab, experts.
+- 'data' axis: batch data-parallel AND ZeRO-3 parameter/optimizer sharding
+  ("fsdp" logical axis).  XLA inserts per-layer all-gathers inside the layer
+  scan; the latency-hiding scheduler overlaps them with compute.
+- 'pod' axis: pure data parallelism across pods (gradient all-reduce over
+  DCN), parameters replicated per pod.
+- long-context decode cells re-map "kv_seq" -> 'data' (context parallelism).
+
+Rules are name-based over the param-tree path, shape-checked, with an
+automatic leading-axis pad for layer-stacked leaves.
+"""
+from __future__ import annotations
+
+import re
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.distributed.ctx import resolve_spec, sharding_ctx
+
+# (regex over path, logical spec per trailing dims)
+_PARAM_RULES: list[tuple[str, tuple]] = [
+    # embeddings / unembedding.  embed d-dim must NOT be sharded over the
+    # batch ('data') axis: a data-sharded lookup from a d-over-'data' table
+    # makes SPMD replicate the full global batch (f32!) before the gather
+    # (§Perf cell A it5) — vocab-parallel only, Megatron style.
+    (r"embed$",            ("vocab", None)),
+    (r"lm_head$",          ("fsdp", "vocab")),
+    (r"pos_dec$",          (None, "fsdp")),
+    # attention.  wk/wv out-dims are (kv_heads*hd) and NO arch in the pool
+    # has kv_heads divisible by model=16 — flat-sharding them splits single
+    # heads across devices and forces a full KV-cache reshard (all-gather of
+    # the whole cache) every layer; replicate instead (§Perf cell B it2).
+    (r"attn/wq$",          ("fsdp", "heads")),
+    (r"attn/w[kv]$",       ("fsdp", None)),
+    (r"attn/wo$",          ("heads", "fsdp")),
+    (r"attn/bq$",          ("heads",)),
+    (r"attn/b[kv]$",       (None,)),
+    (r"attn/(q_norm|k_norm)$", (None,)),
+    # MLA
+    (r"attn/w_dkv$",       ("fsdp", None)),
+    (r"attn/w_krope$",     ("fsdp", None)),
+    (r"attn/w_dq$",        ("fsdp", None)),
+    (r"attn/w_u[kvq]$",    (None, "heads")),
+    (r"attn/kv_norm$",     (None,)),
+    # dense MLP
+    (r"mlp/w_(up|gate)$",  ("fsdp", "ff")),
+    (r"mlp/w_down$",       ("ff", "fsdp")),
+    # MoE
+    (r"moe/router$",       ("fsdp", None)),
+    (r"moe/w_(up|gate)$",  ("expert", "fsdp", None)),
+    (r"moe/w_down$",       ("expert", None, "fsdp")),
+    (r"moe/shared/w_(up|gate)$", ("fsdp", "ff")),
+    (r"moe/shared/w_down$", ("ff", "fsdp")),
+    # mamba
+    (r"mamba/w_in$",       ("fsdp", "ff")),
+    (r"mamba/w_out$",      ("ff", "fsdp")),
+    (r"mamba/conv_[wb]$",  None),             # tiny; replicate
+    (r"mamba/(A_log|D|dt_bias|norm)$", None),
+    # rwkv
+    (r"w_(r|k|v|g|ck|cr)$", ("fsdp", "ff")),
+    (r"w_(o|cv)$",         ("ff", "fsdp")),
+    (r"w_lora_[ab]$",      None),
+    (r"(mu_\w+|w0|u|ln_x|ln1|ln2)$", None),
+    # norms & defaults
+    (r"ln_\w+$",           None),
+]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+    return "/".join(parts)
+
+
+def param_logical_spec(path: str, ndim: int) -> tuple:
+    for pat, spec in _PARAM_RULES:
+        if re.search(pat, path):
+            if spec is None:
+                return (None,) * ndim
+            if len(spec) < ndim:   # layer-stacked leading axes -> replicated
+                return (None,) * (ndim - len(spec)) + tuple(spec)
+            return tuple(spec)
+    return (None,) * ndim
+
+
+def _clean_spec(shape, spec, mesh: Mesh) -> P:
+    """Divisibility + uniqueness guard: drop sharding on non-divisible dims
+    (GSPMD can pad, but padded matmul dims waste flops and uneven shardings
+    trigger involuntary full rematerialisation), and let a mesh axis shard
+    at most one dim (first dim wins)."""
+    clean = []
+    used: set = set()
+    for dim, axes in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if axes is None:
+            clean.append(None)
+            continue
+        names = (axes,) if isinstance(axes, str) else tuple(axes)
+        names = tuple(a for a in names if a not in used)
+        size = int(np.prod([mesh.shape[a] for a in names])) if names else 0
+        if not names or dim % size:
+            clean.append(None)
+        else:
+            used.update(names)
+            clean.append(names if len(names) > 1 else names[0])
+    return P(*clean)
+
+
+def param_specs(params, mesh: Mesh, rules: dict | None = None):
+    """Pytree of NamedShardings matching `params` (works on ShapeDtypeStructs)."""
+    def one(path, leaf):
+        ps = _path_str(path)
+        logical = param_logical_spec(ps, leaf.ndim)
+        with sharding_ctx(mesh, rules):
+            spec = resolve_spec(*logical)
+        return NamedSharding(mesh, _clean_spec(leaf.shape, spec, mesh))
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+# ---------------------------------------------------------------------------
+# batch / cache shardings
+# ---------------------------------------------------------------------------
+
+def batch_specs(batch, mesh: Mesh, rules: dict | None = None):
+    def one(path, leaf):
+        name = _path_str(path)
+        with sharding_ctx(mesh, rules):
+            if name.endswith("positions") and leaf.ndim == 3:
+                spec = resolve_spec(None, "batch", "seq")
+            elif leaf.ndim >= 3:   # embeds / frames (B, S, d)
+                spec = resolve_spec("batch", "seq", *([None] * (leaf.ndim - 2)))
+            elif leaf.ndim == 2:   # tokens / labels
+                spec = resolve_spec("batch", "seq")
+            else:
+                spec = P()
+        return NamedSharding(mesh, _clean_spec(leaf.shape, spec, mesh))
+
+    return jax.tree_util.tree_map_with_path(one, batch)
+
+
+def cache_specs(cache, mesh: Mesh, rules: dict | None = None):
+    """KV / state cache shardings.  Heads on 'model'; kv_seq optionally on
+    'data' (context parallelism for B=1 long-context decode)."""
+    def one(path, leaf):
+        name = _path_str(path)
+        with sharding_ctx(mesh, rules):
+            if re.search(r"(^|/)(k|v|self_k|self_v|cross_k|cross_v)$", name) \
+                    and leaf.ndim == 5:
+                # (L, B, S, H, hd)
+                spec = resolve_spec(None, "batch", "kv_seq", "kv_heads", None)
+            elif re.search(r"c_kv$", name):
+                spec = resolve_spec(None, "batch", "kv_seq", None)
+            elif re.search(r"k_rope$", name):
+                spec = resolve_spec(None, "batch", "kv_seq", None)
+            elif re.search(r"ssm$", name) and leaf.ndim == 5:
+                # (L, B, nh, hd, ds)
+                spec = resolve_spec(None, "batch", "heads", None, None)
+            elif re.search(r"wkv$", name) and leaf.ndim == 5:
+                spec = resolve_spec(None, "batch", "heads", None, None)
+            elif re.search(r"conv$", name) and leaf.ndim == 4:
+                spec = resolve_spec(None, "batch", None, "ff")
+            elif re.search(r"(shift_a|shift_c)$", name) and leaf.ndim == 3:
+                spec = resolve_spec(None, "batch", None)
+            else:
+                spec = P()
+        return NamedSharding(mesh, _clean_spec(leaf.shape, spec, mesh))
+
+    return jax.tree_util.tree_map_with_path(one, cache)
+
+
+def opt_state_specs(opt_state, params_specs, mesh: Mesh):
+    """Optimizer slots shard exactly like their parameters (ZeRO)."""
+    flat_ps = {_path_str(p): s for p, s in
+               jax.tree_util.tree_flatten_with_path(params_specs)[0]}
+
+    def one(path, leaf):
+        name = _path_str(path)
+        # match trailing param path inside the slot path (m/..., v/...)
+        for ppath, spec in flat_ps.items():
+            if name.endswith(ppath) and spec.spec is not None and \
+                    len(spec.spec) == leaf.ndim:
+                return spec
+        # adafactor factored slots & scalars: replicate
+        return NamedSharding(mesh, P())
+
+    return jax.tree_util.tree_map_with_path(one, opt_state)

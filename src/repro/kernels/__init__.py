@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the paper's compute hot-spot (signature updates),
+with jit'd wrappers (ops) and pure-jnp oracles (ref)."""
+from . import ops, ref
+from .sig_trunc import sig_trunc, choose_split, cone_rows
+from .sig_words import sig_words
+
+__all__ = ["ops", "ref", "sig_trunc", "sig_words", "choose_split", "cone_rows"]

@@ -1,0 +1,114 @@
+"""jit'd dispatch layer over the signature engines.
+
+``backend`` selection:
+
+- ``"jax"``      — pure-JAX levelwise Horner scan (works everywhere, used for
+                   gradients: the Pallas forwards are wrapped in the same
+                   inverse-reconstruction custom VJP).
+- ``"pallas"``   — Pallas TPU kernels, compiled for the accelerator.
+- ``"pallas_interpret"`` — same kernels executed in interpret mode (CPU
+                   validation; the container's default).
+- ``"auto"``     — pallas on TPU, jax elsewhere.
+
+Also provides ``signature_time_parallel``: a beyond-paper optimisation that
+splits the time axis into C chunks, computes chunk signatures independently
+(folded into the batch axis — more parallel work, the paper's windowing
+argument applied to *one* signature) and Chen-combines them in a log-depth
+tree.  The paper explicitly does not parallelise over sequence length
+(§6.1); on TPU this recovers utilisation for long paths at small batch.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import tensor_ops as tops
+from repro.core.signature import signature_from_increments
+from repro.core.projection import projected_signature_from_increments
+from repro.core.words import TiledPlan, WordPlan, make_plan, make_tiled_plan
+from .sig_trunc import sig_trunc
+from .sig_words import sig_words
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _resolve(backend: str) -> tuple[str, bool]:
+    """-> (engine, interpret)"""
+    if backend == "auto":
+        return ("pallas", False) if _on_tpu() else ("jax", False)
+    if backend == "pallas":
+        return "pallas", not _on_tpu()
+    if backend == "pallas_interpret":
+        return "pallas", True
+    if backend == "jax":
+        return "jax", False
+    raise ValueError(f"unknown backend {backend!r}")
+
+
+def signature(increments: jax.Array, depth: int, *, backend: str = "auto",
+              batch_tile: int = 128, split: int | None = None,
+              time_chunks: int = 1) -> jax.Array:
+    """Truncated signature (B, M, d) -> (B, D_sig)."""
+    engine, interpret = _resolve(backend)
+    if engine == "jax":
+        return signature_from_increments(increments, depth)
+    if time_chunks > 1:
+        return signature_time_parallel(increments, depth, time_chunks,
+                                       backend=backend, batch_tile=batch_tile,
+                                       split=split)
+    return sig_trunc(increments, depth, batch_tile=batch_tile, split=split,
+                     interpret=interpret)
+
+
+def projected(increments: jax.Array, plan, *, backend: str = "auto",
+              batch_tile: int = 128, max_rows: int = 256) -> jax.Array:
+    """Projected signature over a word set / plan (B, M, d) -> (B, |I|)."""
+    engine, interpret = _resolve(backend)
+    if isinstance(plan, TiledPlan):
+        tplan, wplan = plan, None
+    elif isinstance(plan, WordPlan):
+        tplan, wplan = None, plan
+    else:  # iterable of words
+        wplan = make_plan(tuple(tuple(w) for w in plan), increments.shape[-1])
+        tplan = None
+    if engine == "jax":
+        if wplan is None:
+            wplan = make_plan(tplan.words, tplan.d)
+        return projected_signature_from_increments(increments, wplan)
+    if tplan is None:
+        tplan = make_tiled_plan(wplan.words, wplan.d, max_rows=max_rows)
+    return sig_words(increments, tplan, batch_tile=batch_tile,
+                     interpret=interpret)
+
+
+def signature_time_parallel(increments: jax.Array, depth: int,
+                            time_chunks: int, *, backend: str = "auto",
+                            batch_tile: int = 128,
+                            split: int | None = None) -> jax.Array:
+    """Chunked-time signature: fold chunks into batch, tree-Chen-combine."""
+    B, M, d = increments.shape
+    C = max(1, min(time_chunks, M))
+    Mc = -(-M // C)
+    pad = C * Mc - M
+    x = jnp.pad(increments, ((0, 0), (0, pad), (0, 0)))  # zero incs = identity
+    x = x.reshape(B, C, Mc, d).reshape(B * C, Mc, d)
+    flat = signature(x, depth, backend=backend, batch_tile=batch_tile,
+                     split=split, time_chunks=1)          # (B*C, D)
+    parts = flat.reshape(B, C, -1)
+    # log-depth Chen combination tree
+    while parts.shape[1] > 1:
+        n = parts.shape[1]
+        even, odd = parts[:, 0:n - n % 2:2], parts[:, 1:n:2]
+        a = tops.flat_to_levels(even.reshape(-1, even.shape[-1]), d, depth)
+        b = tops.flat_to_levels(odd.reshape(-1, odd.shape[-1]), d, depth)
+        merged = tops.levels_to_flat(tops.chen_mul(a, b))
+        merged = merged.reshape(even.shape)
+        if n % 2:
+            merged = jnp.concatenate([merged, parts[:, -1:]], axis=1)
+        parts = merged
+    return parts[:, 0]

@@ -1,0 +1,27 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These re-export the naive levelwise Chen engine (materialised tensor
+exponentials, paper eq. (2)) and the word-table reference scan.  Every kernel
+test asserts allclose against these.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import tensor_ops as tops
+from repro.core.projection import _scan_projected
+from repro.core.words import WordPlan, make_plan
+
+
+def sig_trunc_ref(increments: jax.Array, depth: int) -> jax.Array:
+    """(B, M, d) -> (B, D_sig): naive exp/Chen oracle."""
+    return tops.signature_exp_chen(increments, depth)
+
+
+def sig_words_ref(increments: jax.Array, words, d: int | None = None,
+                  plan: WordPlan | None = None) -> jax.Array:
+    """(B, M, d) -> (B, |I|): word-table scan oracle (no kernel, no tiles)."""
+    if plan is None:
+        plan = make_plan(tuple(tuple(w) for w in words), d or increments.shape[-1])
+    return _scan_projected(increments, plan, stream=False)

@@ -1,0 +1,164 @@
+"""Pallas TPU kernel: truncated signature via prefix-cone decomposition.
+
+TPU adaptation of the paper's §3.1-3.2 CUDA design (see DESIGN.md §2).  The
+word basis W_{<=N} is partitioned into *prefix cones*: grid cell ``c`` owns
+the level-``s`` prefix word ``u = digits_d(c)`` together with every
+descendant ``u∘v`` up to depth N, plus (redundantly) u's ancestor path —
+a prefix-closed set, the tile-granularity analogue of the paper's
+thread-per-``P_w`` assignment.  Each cell scans the whole time axis with its
+coefficients resident in VMEM.
+
+Layout: batch on the 128-wide lane axis, words on sublanes, so the per-word
+Horner rule (paper Alg. 1) vectorises across the batch and the level-raising
+outer product is a sublane reshape-broadcast — no gathers anywhere.
+
+Per-cell state block (rows × B_TILE), rows =
+  [ path: levels 1..s-1 along u ] ++ [ cone levels s..N: d^0, d^1, ..., d^{N-s} rows ]
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.core.words import sig_dim
+
+
+def cone_base_level(s: int) -> int:
+    """Lowest global level stored in the cone (eps is never stored)."""
+    return max(s, 1)
+
+
+def cone_offsets(d: int, depth: int, s: int) -> np.ndarray:
+    """Row offsets of cone global levels n = base..depth inside the block."""
+    base = cone_base_level(s)
+    sizes = [d ** (n - s) for n in range(base, depth + 1)]
+    return np.concatenate([[0], np.cumsum(sizes)]).astype(np.int64)
+
+
+def cone_rows(d: int, depth: int, s: int) -> int:
+    return int(cone_offsets(d, depth, s)[-1])
+
+
+def choose_split(d: int, depth: int, batch_tile: int,
+                 vmem_budget: int = 6 * 2**20) -> int:
+    """Smallest split level s whose per-cell state fits the VMEM budget."""
+    for s in range(0, depth):
+        state = (max(0, s - 1) + cone_rows(d, depth, s)) * batch_tile * 4
+        # chain temporaries roughly double the top cone level
+        state += d ** (depth - s) * batch_tile * 4
+        if state <= vmem_budget:
+            return s
+    return depth - 1
+
+
+def _kernel(incs_ref, out_ref, *, d: int, depth: int, s: int, M: int):
+    n_path = max(0, s - 1)
+    base = cone_base_level(s)
+    co = cone_offsets(d, depth, s)
+
+    def cone_slice(n):  # rows of global level n (n >= base)
+        k = n - base
+        return slice(n_path + int(co[k]), n_path + int(co[k + 1]))
+
+    c = pl.program_id(1)
+    # letters of the cell's prefix word u (traced scalars, most significant first)
+    letters = [(c // d ** (s - 1 - k)) % d for k in range(s)]
+
+    out_ref[...] = jnp.zeros(out_ref.shape, out_ref.dtype)
+
+    def body(j, _):
+        dx = incs_ref[pl.ds(j, 1), :, :][0]  # (d, B)
+        B = dx.shape[-1]
+        # per-path-step increment components ΔX^{(u_k)}  -> (1, B)
+        dxl = [jax.lax.dynamic_slice(dx, (letters[k], 0), (1, B))
+               for k in range(s)]
+
+        def path_val(lev):  # old value of ancestor u_{1:lev}, lev in 1..s-1
+            return out_ref[lev - 1:lev, :]
+
+        def chain(n):
+            """Horner accumulator for target level n (paper Alg. 1):
+            acc_j = (S[w_{1:j-1}] + acc_{j-1}) · ΔX^{(i_j)} / (n-j+1)."""
+            acc = None
+            for jj in range(1, n + 1):
+                inv = 1.0 / (n - jj + 1)
+                if jj == 1:          # innermost: S[eps] = 1
+                    acc = (dxl[0] if s >= 1 else dx) * inv
+                elif jj <= s:        # on-path step, width 1
+                    acc = (path_val(jj - 1) + acc) * dxl[jj - 1] * inv
+                else:                # cone expansion: width d^{jj-1-s} -> d^{jj-s}
+                    prev = out_ref[cone_slice(jj - 1), :]
+                    t = prev + acc
+                    w = t.shape[0]
+                    acc = (t[:, None, :] * dx[None, :, :]).reshape(w * d, B) * inv
+            return acc
+
+        # top-down over global target levels: reads touch strictly lower levels
+        for n in range(depth, base - 1, -1):
+            acc = chain(n)
+            sl = cone_slice(n)
+            out_ref[sl, :] = out_ref[sl, :] + acc
+        # ancestor path levels n = s-1 .. 1 (width-1 chains)
+        for n in range(min(s - 1, depth), 0, -1):
+            acc = dxl[0] * (1.0 / n)
+            for jj in range(2, n + 1):
+                acc = (path_val(jj - 1) + acc) * dxl[jj - 1] * (1.0 / (n - jj + 1))
+            out_ref[n - 1:n, :] = out_ref[n - 1:n, :] + acc
+        return 0
+
+    jax.lax.fori_loop(0, M, body, 0)
+
+
+def _reassemble(out, d, depth, s, B):
+    """(n_cells, n_path+cone, B_pad) -> flat (B, D_sig)."""
+    n_cells = d**s
+    n_path = max(0, s - 1)
+    base = cone_base_level(s)
+    co = cone_offsets(d, depth, s)
+    levels = []
+    for lev in range(1, s):  # ancestor levels, gathered from owning cells
+        idx = np.arange(d**lev) * d ** (s - lev)
+        levels.append(out[idx, lev - 1, :])  # (d^lev, B_pad)
+    for n in range(base, depth + 1):  # cone global levels
+        k = n - base
+        blk = out[:, n_path + int(co[k]):n_path + int(co[k + 1]), :]
+        levels.append(blk.reshape(n_cells * d ** (n - s), -1))
+    flat = jnp.concatenate(levels, axis=0)  # (D_sig, B_pad)
+    return flat[:, :B].T
+
+
+@functools.partial(jax.jit, static_argnames=("depth", "batch_tile", "split",
+                                             "interpret", "vmem_budget"))
+def sig_trunc(increments: jax.Array, depth: int, *, batch_tile: int = 128,
+              split: int | None = None, interpret: bool = True,
+              vmem_budget: int = 6 * 2**20) -> jax.Array:
+    """Truncated signature via the Pallas cone kernel.  (B, M, d) -> (B, D_sig)."""
+    B, M, d = increments.shape
+    if depth < 1:
+        raise ValueError("depth must be >= 1")
+    s = choose_split(d, depth, batch_tile, vmem_budget) if split is None else split
+    if not 0 <= s < depth:
+        raise ValueError(f"split {s} outside [0, {depth})")
+    n_cells = d**s
+    n_path = max(0, s - 1)
+    rows = n_path + cone_rows(d, depth, s)
+
+    B_pad = -(-B // batch_tile) * batch_tile
+    x = jnp.moveaxis(increments, 0, -1)  # (M, d, B)
+    x = jnp.pad(x, ((0, 0), (0, 0), (0, B_pad - B))).astype(jnp.float32)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, d=d, depth=depth, s=s, M=M),
+        grid=(B_pad // batch_tile, n_cells),
+        in_specs=[pl.BlockSpec((M, d, batch_tile), lambda bi, c: (0, 0, bi))],
+        out_specs=pl.BlockSpec((rows, batch_tile), lambda bi, c: (c, bi)),
+        out_shape=jax.ShapeDtypeStruct((n_cells * rows, B_pad), jnp.float32),
+        interpret=interpret,
+    )(x)
+    out = out.reshape(n_cells, rows, B_pad)
+    return _reassemble(out, d, depth, s, B).astype(increments.dtype)

@@ -1,0 +1,115 @@
+"""Pallas TPU kernel: signature coefficients over arbitrary word sets.
+
+Implements the paper's word projections (§3.1-3.2, §7) on TPU.  The requested
+set I is prefix-closed and partitioned host-side into prefix-closed tiles
+(:func:`repro.core.words.make_tiled_plan`), each of which is updated
+independently — the tile-level analogue of the paper's thread-per-``P_w``
+CUDA assignment, including the redundant shared-ancestor rows.
+
+TPU twist (DESIGN.md §2): per-row prefix *gathers* (cheap per CUDA thread,
+slow/unsupported along TPU sublanes) are recast as one-hot matmuls on the
+MXU: ``pfx = P_j @ S`` with ``P_j`` the (rows × rows) prefix-selection
+matrix of Horner step j.  FLOPs go up by the tile width; wall-clock goes
+down because the MXU is ~50× the VPU and the gather disappears.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.core.words import TiledPlan, WordPlan, make_tiled_plan
+
+
+def _tile_tables(plan: WordPlan, W_pad: int, depth_pad: int):
+    """One-hot tables for a tile, padded to (depth_pad, W_pad, ...) ."""
+    W = plan.closure_size
+    P = np.zeros((depth_pad, W_pad, 1 + W_pad), np.float32)
+    L = np.zeros((depth_pad, W_pad, plan.d), np.float32)
+    inv = np.zeros((depth_pad, W_pad), np.float32)
+    emit = np.zeros((depth_pad, W_pad), np.float32)
+    for j in range(plan.depth):
+        for r in range(W):
+            if j < plan.lengths[r]:
+                P[j, r, plan.prefix_idx[r, j]] = 1.0
+                L[j, r, plan.letters[r, j]] = 1.0
+                inv[j, r] = plan.inv[r, j]
+                emit[j, r] = plan.emit[r, j]
+    return P, L, inv, emit
+
+
+def _kernel(incs_ref, p_ref, l_ref, inv_ref, emit_ref, out_ref, *,
+            M: int, depth: int):
+    W1 = out_ref.shape[0]  # 1 + W_pad
+    B = out_ref.shape[1]
+    init = jnp.zeros((W1, B), out_ref.dtype).at[0, :].set(1.0)  # S[eps] = 1
+    out_ref[...] = init
+
+    def body(j, _):
+        dx = incs_ref[pl.ds(j, 1), :, :][0]        # (d, B)
+        S = out_ref[...]                            # (1+W, B), old values
+        acc = jnp.zeros((W1 - 1, B), S.dtype)
+        h = acc
+        for jj in range(depth):                     # Horner steps (Alg. 1)
+            pfx = jnp.dot(p_ref[0, jj], S,          # one-hot gather on MXU
+                          preferred_element_type=S.dtype)
+            dxl = jnp.dot(l_ref[0, jj], dx, preferred_element_type=S.dtype)
+            acc = (pfx + acc) * dxl * inv_ref[0, jj][:, None]
+            h = h + acc * emit_ref[0, jj][:, None]
+        out_ref[1:, :] = S[1:, :] + h
+        return 0
+
+    jax.lax.fori_loop(0, M, body, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("tplan", "batch_tile", "interpret"))
+def sig_words(increments: jax.Array, tplan: TiledPlan, *,
+              batch_tile: int = 128, interpret: bool = True) -> jax.Array:
+    """Projected signature via the Pallas tile kernel.
+
+    increments: (B, M, d)  ->  (B, |I|) coefficients in tplan.words order.
+    """
+    B, M, d = increments.shape
+    assert d == tplan.d
+    tiles = tplan.tiles
+    T = len(tiles)
+    W_pad = max(8, -(-max(p.closure_size for p in tiles) // 8) * 8)
+    depth = max(p.depth for p in tiles)
+
+    Ps, Ls, invs, emits = [], [], [], []
+    for p in tiles:
+        P, L, inv, emit = _tile_tables(p, W_pad, depth)
+        Ps.append(P); Ls.append(L); invs.append(inv); emits.append(emit)
+    Pt = jnp.asarray(np.stack(Ps))      # (T, depth, W, 1+W)
+    Lt = jnp.asarray(np.stack(Ls))      # (T, depth, W, d)
+    invt = jnp.asarray(np.stack(invs))  # (T, depth, W)
+    emitt = jnp.asarray(np.stack(emits))
+
+    B_pad = -(-B // batch_tile) * batch_tile
+    x = jnp.moveaxis(increments, 0, -1)
+    x = jnp.pad(x, ((0, 0), (0, 0), (0, B_pad - B))).astype(jnp.float32)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, M=M, depth=depth),
+        grid=(B_pad // batch_tile, T),
+        in_specs=[
+            pl.BlockSpec((M, d, batch_tile), lambda bi, t: (0, 0, bi)),
+            pl.BlockSpec((1, depth, W_pad, 1 + W_pad), lambda bi, t: (t, 0, 0, 0)),
+            pl.BlockSpec((1, depth, W_pad, d), lambda bi, t: (t, 0, 0, 0)),
+            pl.BlockSpec((1, depth, W_pad), lambda bi, t: (t, 0, 0)),
+            pl.BlockSpec((1, depth, W_pad), lambda bi, t: (t, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1 + W_pad, batch_tile), lambda bi, t: (t, bi)),
+        out_shape=jax.ShapeDtypeStruct((T * (1 + W_pad), B_pad), jnp.float32),
+        interpret=interpret,
+    )(x, Pt, Lt, invt, emitt)
+
+    out = out.reshape(T, 1 + W_pad, B_pad)
+    tile_idx = jnp.asarray([t for t, _ in tplan.gather], dtype=jnp.int32)
+    row_idx = jnp.asarray(
+        [tiles[t].out_rows[k] for t, k in tplan.gather], dtype=jnp.int32)
+    vals = out[tile_idx, row_idx, :B]   # (n_words, B)
+    return vals.T.astype(increments.dtype)

@@ -1,0 +1,226 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import: jax locks the device count on first init.
+# Only this launcher sees 512 placeholder devices; tests/benches see 1.
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import sys  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+import repro.models as M  # noqa: E402
+from repro.configs import ARCH_IDS, get_config  # noqa: E402
+from repro.distributed.ctx import sharding_ctx  # noqa: E402
+from repro.distributed.hlo import collective_stats, remat_duplication  # noqa: E402
+from repro.distributed.sharding import (batch_specs, cache_specs,  # noqa: E402
+                                        opt_state_specs, param_specs)
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch import specs as SP  # noqa: E402
+from repro.optim import adafactor, adamw  # noqa: E402
+from repro.serve import make_prefill_step, make_serve_step  # noqa: E402
+from repro.train import make_train_step  # noqa: E402
+
+# v5e hardware model (roofline constants)
+PEAK_FLOPS = 197e12        # bf16 / chip
+HBM_BW = 819e9             # bytes/s / chip
+ICI_BW = 2 * 50e9          # bytes/s / chip (bidirectional ring per axis)
+
+
+def rules_for(arch: str, shape: str, overrides: dict | None = None) -> dict:
+    rules: dict = {}
+    cfg = get_config(arch)
+    kind = SP.SHAPES.get(shape, {}).get("kind")
+    # NB (§Perf cell A it3/it4, REFUTED): turning dense TP off for MoE and
+    # sharding tokens over 'model' replicates dense compute (it3, t_comp
+    # 0.67->3.1s) or forces remat'd dispatch one-hots to reshard (it4,
+    # t_coll 2.6->3.2s).  Megatron TP for the dense parts + EP stays.
+    if (not cfg.moe) and kind in ("train", "prefill") and \
+            cfg.param_count() <= 60e9:
+        # §Perf cell C, generalized: models far narrower than the mesh are
+        # collective-bound under 16-way TP (every projection's bwd gathers
+        # its ~268MB input).  Pure DP over all 256 chips + ZeRO-3 over both
+        # axes: per-layer weight gathers are small and overlap with compute.
+        # Tokens must shard over 'model' too or dense compute replicates:
+        # batch when divisible (train), else the sequence axis (prefill).
+        rules.update({"heads": None, "kv_heads": None, "ff": None,
+                      "fsdp": ("data", "model")})
+        if SP.SHAPES[shape]["batch"] % 256 == 0:
+            rules["batch"] = ("data", "model")
+        else:
+            rules["seq"] = "model"
+    if kind == "decode":
+        # weight-stationary decode (§Perf cell B): no FSDP re-gather of the
+        # params every token, KV cache sharded over 'model' on the sequence
+        # axis (softmax/PV reductions over the sharded axis become tiny
+        # partial-sum all-reduces under SPMD).  State-cache families
+        # (hybrid/rwkv) keep kv_seq unsharded: their caches are recurrent
+        # states, and seq-sharding the two zamba shared-attn KV blocks
+        # forces a per-step cache reshard (measured 0.026 -> 0.199s; with
+        # kv_seq=None it is 0.00034s).
+        rules.update({"fsdp": None})
+        if cfg.family not in ("hybrid", "rwkv"):
+            rules.update({"kv_seq": "model"})
+    if shape == "long_500k" and cfg.family not in ("hybrid", "rwkv"):
+        # context parallelism: B=1 cells shard the KV/state seq over BOTH
+        # axes ('data' carries no batch when B=1).  hybrid/rwkv long-context
+        # state is O(1) in seq — the decode rules above already apply.
+        rules.update({"kv_seq": ("data", "model"), "batch": ("pod",)})
+    if overrides:
+        rules.update(overrides)
+    return rules
+
+
+def lower_cell(arch: str, shape: str, *, multi_pod: bool = False,
+               opt_name: str = "adafactor", remat: str = "dots",
+               rule_overrides: dict | None = None, mesh=None,
+               keep_hlo: bool = False):
+    """Lower + compile one (arch × shape × mesh) cell.  Returns result dict."""
+    cfg = get_config(arch)
+    ok, why = SP.cell_is_runnable(arch, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape, "skipped": why}
+    mesh = mesh if mesh is not None else make_production_mesh(multi_pod=multi_pod)
+    rules = rules_for(arch, shape, rule_overrides)
+    kind = SP.SHAPES[shape]["kind"]
+    t0 = time.time()
+
+    with sharding_ctx(mesh, rules):
+        params_sds = SP.params_specs_for(cfg)
+        p_specs = param_specs(params_sds, mesh, rules)
+        if kind == "train":
+            opt = adafactor() if opt_name == "adafactor" else adamw()
+            opt_sds = SP.opt_state_specs_for(opt, params_sds)
+            o_specs = opt_state_specs(opt_sds, p_specs, mesh)
+            batch_sds = SP.batch_specs_for(cfg, shape)
+            b_specs = batch_specs(batch_sds, mesh, rules)
+            step = make_train_step(cfg, opt, remat=remat)
+            jitted = jax.jit(step, in_shardings=(p_specs, o_specs, b_specs),
+                             out_shardings=(p_specs, o_specs, None))
+            lowered = jitted.lower(params_sds, opt_sds, batch_sds)
+        elif kind == "prefill":
+            batch_sds = SP.batch_specs_for(cfg, shape)
+            b_specs = batch_specs(batch_sds, mesh, rules)
+            step = make_prefill_step(cfg, remat=remat)
+            jitted = jax.jit(step, in_shardings=(p_specs, b_specs),
+                             out_shardings=None)
+            lowered = jitted.lower(params_sds, batch_sds)
+        else:  # decode
+            tok_sds, cache_sds, rng_sds = SP.decode_inputs_for(cfg, shape)
+            c_specs = cache_specs(cache_sds, mesh, rules)
+            t_specs = batch_specs({"tokens": tok_sds}, mesh, rules)["tokens"]
+            step = make_serve_step(cfg)
+            # cache is donated (aliased in/out) exactly as in production
+            # decode loops — without it every step double-buffers the cache
+            jitted = jax.jit(step, in_shardings=(p_specs, c_specs, t_specs,
+                                                 None),
+                             out_shardings=(None, c_specs),
+                             donate_argnums=(1,))
+            lowered = jitted.lower(params_sds, cache_sds, tok_sds, rng_sds)
+        compiled = lowered.compile()
+
+    t_compile = time.time() - t0
+    n_dev = mesh.devices.size
+    ca = compiled.cost_analysis() or {}
+    mem = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    coll = collective_stats(hlo, default_group=n_dev)
+
+    flops = float(ca.get("flops", 0.0))
+    bytes_accessed = float(ca.get("bytes accessed", 0.0))
+    # cost_analysis on the SPMD-partitioned module is per-device
+    t_compute = flops / PEAK_FLOPS
+    t_memory = bytes_accessed / HBM_BW
+    t_coll = coll.total_wire_bytes / ICI_BW
+    model_flops = SP.flops_estimate(cfg, shape)
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_coll}
+    dominant = max(terms, key=terms.get)
+
+    result = {
+        "arch": arch, "shape": shape, "kind": kind,
+        "mesh": "x".join(map(str, mesh.devices.shape)),
+        "axes": list(mesh.axis_names), "devices": n_dev,
+        "compile_s": round(t_compile, 1),
+        "hlo_flops_per_dev": flops,
+        "hlo_bytes_per_dev": bytes_accessed,
+        "collective_wire_bytes_per_dev": coll.total_wire_bytes,
+        "collectives": {k: {"count": v[0], "result_bytes": v[1],
+                            "wire_bytes": v[2]}
+                        for k, v in coll.by_kind.items()},
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll, "dominant": dominant,
+        "model_flops_global": model_flops,
+        "useful_flops_ratio": model_flops / max(flops * n_dev, 1.0),
+        "remat_dot_duplication": remat_duplication(hlo),
+        "memory_analysis": {
+            "argument_size_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_size_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_size_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "generated_code_size_bytes":
+                getattr(mem, "generated_code_size_in_bytes", None),
+        },
+        "opt": opt_name if kind == "train" else None,
+        "remat": remat if kind != "decode" else None,
+        "rules": {k: str(v) for k, v in rules.items()},
+    }
+    if keep_hlo:
+        result["hlo_text"] = hlo
+    return result
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description="multi-pod dry-run launcher")
+    ap.add_argument("--arch", default="all", help="arch id or 'all'")
+    ap.add_argument("--shape", default="all",
+                    help=f"one of {list(SP.SHAPES)} or 'all'")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true",
+                    help="run single-pod AND multi-pod for each cell")
+    ap.add_argument("--opt", default="adafactor",
+                    choices=["adafactor", "adamw"])
+    ap.add_argument("--remat", default="dots",
+                    choices=["dots", "full", "none"])
+    ap.add_argument("--out", default="runs/dryrun")
+    ap.add_argument("--verbose", action="store_true")
+    args = ap.parse_args(argv)
+
+    archs = ARCH_IDS if args.arch == "all" else [args.arch]
+    shapes = list(SP.SHAPES) if args.shape == "all" else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    os.makedirs(args.out, exist_ok=True)
+
+    n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tag = f"{arch}__{shape}__{'pod2' if mp else 'pod1'}"
+                try:
+                    res = lower_cell(arch, shape, multi_pod=mp,
+                                     opt_name=args.opt, remat=args.remat)
+                except Exception as e:  # a dry-run failure is a bug: report it
+                    n_fail += 1
+                    res = {"arch": arch, "shape": shape, "error": str(e),
+                           "traceback": traceback.format_exc()}
+                    print(f"[FAIL] {tag}: {e}")
+                with open(os.path.join(args.out, tag + ".json"), "w") as f:
+                    json.dump(res, f, indent=2)
+                if "error" not in res:
+                    if res.get("skipped"):
+                        print(f"[SKIP] {tag}: {res['skipped']}")
+                    else:
+                        print(f"[OK]   {tag} compile={res['compile_s']}s "
+                              f"dom={res['dominant']} "
+                              f"tc={res['t_compute_s']:.3e} "
+                              f"tm={res['t_memory_s']:.3e} "
+                              f"tx={res['t_collective_s']:.3e}")
+                        if args.verbose:
+                            print(json.dumps(res, indent=2))
+    sys.exit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

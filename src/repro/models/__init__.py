@@ -1,0 +1,36 @@
+"""Architecture pool: config-driven model builders."""
+from .config import ModelConfig, SigHeadConfig
+from . import transformer, encdec, layers, ssm, sig_head
+
+
+def init_params(key, cfg: ModelConfig, dtype=None):
+    import jax.numpy as jnp
+    dtype = dtype or jnp.float32
+    if cfg.family == "encdec":
+        return encdec.init_params(key, cfg, dtype)
+    return transformer.init_params(key, cfg, dtype)
+
+
+def loss_fn(params, cfg: ModelConfig, batch, remat: str = "dots"):
+    if cfg.family == "encdec":
+        return encdec.lm_loss(params, cfg, batch, remat=remat)
+    return transformer.lm_loss(params, cfg, batch, remat=remat)
+
+
+def init_cache(cfg: ModelConfig, B: int, max_len: int, dtype=None):
+    import jax.numpy as jnp
+    dtype = dtype or jnp.bfloat16
+    if cfg.family == "encdec":
+        return encdec.init_cache(cfg, B, max_len, dtype)
+    return transformer.init_cache(cfg, B, max_len, dtype)
+
+
+def decode_step(params, cfg: ModelConfig, tokens, cache, **kw):
+    if cfg.family == "encdec":
+        return encdec.decode_step(params, cfg, tokens, cache)
+    return transformer.decode_step(params, cfg, tokens, cache, **kw)
+
+
+__all__ = ["ModelConfig", "SigHeadConfig", "init_params", "loss_fn",
+           "init_cache", "decode_step", "transformer", "encdec", "layers",
+           "ssm", "sig_head"]

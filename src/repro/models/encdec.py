@@ -1,0 +1,204 @@
+"""Whisper-style encoder-decoder backbone.
+
+The conv/mel frontend is a STUB per the assignment: ``input_specs()``
+supplies precomputed frame embeddings (B, F, d_model).  Everything after the
+frontend — sinusoidal positions, bidirectional encoder, causal decoder with
+cross-attention — is real and scan-stacked.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.ctx import shard
+from .config import ModelConfig
+from .layers import (_init, _sdpa, _sdpa_decode, attention, init_attention,
+                     init_mlp, mlp, rms_norm)
+from .transformer import _remat, logits_fn, layer_scan
+
+
+def sinusoids(length: int, channels: int) -> np.ndarray:
+    t = np.arange(length)[:, None]
+    inv = np.exp(-np.log(10000.0) * np.arange(channels // 2) / (channels // 2 - 1))
+    ang = t * inv[None]
+    return np.concatenate([np.sin(ang), np.cos(ang)], axis=1).astype(np.float32)
+
+
+def init_params(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    d = cfg.d_model
+    ks = jax.random.split(key, 6)
+
+    def enc_one(k):
+        k1, k2 = jax.random.split(k)
+        return {"ln_attn": jnp.zeros((d,)), "ln_mlp": jnp.zeros((d,)),
+                "attn": init_attention(k1, cfg),
+                "mlp": init_mlp(k2, d, cfg.d_ff, cfg.act)}
+
+    def dec_one(k):
+        k1, k2, k3 = jax.random.split(k, 3)
+        return {"ln_self": jnp.zeros((d,)), "ln_cross": jnp.zeros((d,)),
+                "ln_mlp": jnp.zeros((d,)),
+                "self_attn": init_attention(k1, cfg),
+                "cross_attn": init_attention(k2, cfg),
+                "mlp": init_mlp(k3, d, cfg.d_ff, cfg.act)}
+
+    params = {
+        "enc_layers": jax.vmap(enc_one)(
+            jax.random.split(ks[0], cfg.n_encoder_layers)),
+        "dec_layers": jax.vmap(dec_one)(
+            jax.random.split(ks[1], cfg.n_layers)),
+        "embed": _init(ks[2], (cfg.vocab_size, d), scale=0.02),
+        "pos_dec": _init(ks[3], (cfg.decoder_max_len, d), scale=0.02),
+        "ln_enc": jnp.zeros((d,)), "ln_f": jnp.zeros((d,)),
+    }
+    return jax.tree.map(lambda x: x.astype(dtype)
+                        if x.dtype == jnp.float32 else x, params)
+
+
+def _cross_attention(p, x, enc_kv, cfg):
+    """x: (B,S,d); enc_kv: precomputed (k, v) each (B, F, H, hd)."""
+    B, S, d = x.shape
+    hd = cfg.resolved_head_dim
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"].astype(x.dtype))
+    q = q.reshape(B, S, cfg.n_heads, hd)
+    k, v = enc_kv
+    out = _sdpa(q, k.astype(x.dtype), v.astype(x.dtype), causal=False)
+    return jnp.einsum("bsh,hd->bsd", out, p["wo"].astype(x.dtype))
+
+
+def cross_kv(p, enc_out, cfg):
+    B, F, d = enc_out.shape
+    hd = cfg.resolved_head_dim
+    k = jnp.einsum("bfd,dh->bfh", enc_out, p["wk"].astype(enc_out.dtype))
+    v = jnp.einsum("bfd,dh->bfh", enc_out, p["wv"].astype(enc_out.dtype))
+    return (k.reshape(B, F, cfg.n_kv_heads, hd),
+            v.reshape(B, F, cfg.n_kv_heads, hd))
+
+
+def encode(params, cfg: ModelConfig, frames, remat: str = "dots"):
+    """frames: (B, F, d_model) stub embeddings -> encoder states."""
+    B, F, d = frames.shape
+    pos = jnp.asarray(sinusoids(F, d), frames.dtype)
+    x = shard(frames + pos[None], "batch", "seq", None)
+    positions = jnp.broadcast_to(jnp.arange(F)[None], (B, F))
+
+    def body(p, h):
+        a, _ = attention(p["attn"], rms_norm(h, p["ln_attn"], cfg.norm_eps),
+                         cfg, positions, causal=False)
+        h = h + a
+        return h + mlp(p["mlp"], rms_norm(h, p["ln_mlp"], cfg.norm_eps),
+                       cfg.act), 0.0
+
+    fn = _remat(body, remat)
+
+    def step(carry, p):
+        h, _ = fn(p, carry)
+        return h, None
+
+    x, _ = layer_scan(step, x, params["enc_layers"])
+    return rms_norm(x, params["ln_enc"], cfg.norm_eps)
+
+
+def decode_train(params, cfg: ModelConfig, enc_out, tokens,
+                 remat: str = "dots"):
+    B, S = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = x + params["pos_dec"][:S][None].astype(x.dtype)
+    x = shard(x, "batch", "seq", None)
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+    def body(p, h):
+        a, _ = attention(p["self_attn"],
+                         rms_norm(h, p["ln_self"], cfg.norm_eps), cfg,
+                         positions, causal=True)
+        h = h + a
+        kv = cross_kv(p["cross_attn"], enc_out, cfg)
+        h = h + _cross_attention(p["cross_attn"],
+                                 rms_norm(h, p["ln_cross"], cfg.norm_eps),
+                                 kv, cfg)
+        return h + mlp(p["mlp"], rms_norm(h, p["ln_mlp"], cfg.norm_eps),
+                       cfg.act), 0.0
+
+    fn = _remat(body, remat)
+
+    def step(carry, p):
+        h, _ = fn(p, carry)
+        return h, None
+
+    x, _ = layer_scan(step, x, params["dec_layers"])
+    return rms_norm(x, params["ln_f"], cfg.norm_eps)
+
+
+def lm_loss(params, cfg: ModelConfig, batch, remat: str = "dots"):
+    enc = encode(params, cfg, batch["frames"], remat=remat)
+    hidden = decode_train(params, cfg, enc, batch["tokens"], remat=remat)
+    logits = jnp.einsum("bsd,vd->bsv", hidden,  # tied output embedding
+                        params["embed"].astype(hidden.dtype)).astype(jnp.float32)
+    labels = batch["labels"]
+    valid = (labels >= 0).astype(jnp.float32)
+    safe = jnp.maximum(labels, 0)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, safe[..., None], axis=-1)[..., 0]
+    ntok = jnp.maximum(jnp.sum(valid), 1.0)
+    loss = jnp.sum(nll * valid) / ntok
+    return loss, {"loss": loss, "ntok": ntok}
+
+
+# ---------------------------------------------------------------------------
+# serving: decode one token against precomputed cross-KV
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, B: int, n_frames: int, dtype=jnp.bfloat16):
+    hd = cfg.resolved_head_dim
+    L = cfg.n_layers
+    return {
+        "cross_k": jnp.zeros((L, B, n_frames, cfg.n_kv_heads, hd), dtype),
+        "cross_v": jnp.zeros((L, B, n_frames, cfg.n_kv_heads, hd), dtype),
+        "self_k": jnp.zeros((L, B, cfg.decoder_max_len, cfg.n_kv_heads, hd), dtype),
+        "self_v": jnp.zeros((L, B, cfg.decoder_max_len, cfg.n_kv_heads, hd), dtype),
+        "index": jnp.zeros((L,), jnp.int32),
+    }
+
+
+def prefill_cross(params, cfg, enc_out, cache):
+    """Precompute per-layer cross K/V from encoder output into the cache."""
+    def one(p):
+        return cross_kv(p["cross_attn"], enc_out, cfg)
+    ks, vs = jax.vmap(one)(params["dec_layers"])  # vmapped over layers? params stacked
+    return dict(cache, cross_k=ks.astype(cache["cross_k"].dtype),
+                cross_v=vs.astype(cache["cross_v"].dtype))
+
+
+def decode_step(params, cfg: ModelConfig, tokens, cache):
+    """tokens (B,1) -> (logits, cache).  Cross-KV must be prefilled."""
+    B, S = tokens.shape
+    idx = cache["index"][0]
+    x = jnp.take(params["embed"], tokens, axis=0)
+    pos_emb = jax.lax.dynamic_slice_in_dim(params["pos_dec"], idx,
+                                           1, axis=0)
+    x = x + pos_emb[None].astype(x.dtype)
+    positions = jnp.broadcast_to(idx + jnp.arange(S)[None], (B, S))
+
+    def step(h, inp):
+        p, ck, cv, sk, sv, li = inp
+        a, new_kv = attention(
+            p["self_attn"], rms_norm(h, p["ln_self"], cfg.norm_eps), cfg,
+            positions, cache={"k": sk, "v": sv, "index": li})
+        h = h + a
+        h = h + _cross_attention(
+            p["cross_attn"], rms_norm(h, p["ln_cross"], cfg.norm_eps),
+            (ck, cv), cfg)
+        h = h + mlp(p["mlp"], rms_norm(h, p["ln_mlp"], cfg.norm_eps), cfg.act)
+        return h, (new_kv["k"], new_kv["v"], new_kv["index"])
+
+    x, (nk, nv, ni) = layer_scan(
+        step, x, (params["dec_layers"], cache["cross_k"], cache["cross_v"],
+                  cache["self_k"], cache["self_v"], cache["index"]))
+    hidden = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,vd->bsv", hidden,
+                        params["embed"].astype(hidden.dtype))
+    new_cache = dict(cache, self_k=nk, self_v=nv, index=ni)
+    return logits.astype(jnp.float32), new_cache

@@ -1,0 +1,370 @@
+"""Shared transformer building blocks (pure functions over param pytrees).
+
+Conventions:
+- params are nested dicts of jnp arrays; layer-stacked params carry a leading
+  (n_layers,) axis and are consumed via lax.scan.
+- activations are bf16 by default with f32 softmax/norm accumulations.
+- ``shard(x, *logical_axes)`` annotates activations for GSPMD.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.ctx import shard
+
+
+def _init(key, shape, scale=None, dtype=jnp.float32):
+    scale = scale if scale is not None else 1.0 / math.sqrt(shape[0])
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def rms_norm(x, weight, eps=1e-5):
+    h = x.astype(jnp.float32)
+    h = h * jax.lax.rsqrt(jnp.mean(h * h, axis=-1, keepdims=True) + eps)
+    return (h * (1.0 + weight.astype(jnp.float32))).astype(x.dtype)
+
+
+def act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu,
+            "relu": jax.nn.relu}[name]
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> np.ndarray:
+    return 1.0 / theta ** (np.arange(0, head_dim, 2) / head_dim)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, hd), positions: (B, S) -> rotated (half-split layout)."""
+    hd = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(hd, theta), jnp.float32)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, S, hd/2)
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jax.Array, positions: jax.Array, theta: float,
+                sections: tuple[int, int, int]) -> jax.Array:
+    """Multimodal RoPE (qwen2-vl §3): positions (3, B, S) for (t, h, w);
+    frequency bands are partitioned across the three position streams."""
+    hd = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(hd, theta), jnp.float32)  # (hd/2,)
+    sec = np.cumsum((0,) + tuple(sections))
+    assert sec[-1] == hd // 2, (sections, hd)
+    parts = []
+    for i in range(3):
+        ang = positions[i][..., None].astype(jnp.float32) * freqs[sec[i]:sec[i + 1]]
+        parts.append(ang)
+    ang = jnp.concatenate(parts, axis=-1)                    # (B, S, hd/2)
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention (GQA with optional bias / qk-norm / cache)
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg) -> dict:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    ks = jax.random.split(key, 5)
+    p = {
+        "wq": _init(ks[0], (d, cfg.n_heads * hd)),
+        "wk": _init(ks[1], (d, cfg.n_kv_heads * hd)),
+        "wv": _init(ks[2], (d, cfg.n_kv_heads * hd)),
+        "wo": _init(ks[3], (cfg.n_heads * hd, d)),
+    }
+    if cfg.attn_bias:
+        p["bq"] = jnp.zeros((cfg.n_heads * hd,))
+        p["bk"] = jnp.zeros((cfg.n_kv_heads * hd,))
+        p["bv"] = jnp.zeros((cfg.n_kv_heads * hd,))
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((hd,))
+        p["k_norm"] = jnp.zeros((hd,))
+    return p
+
+
+def _project_qkv(p, x, cfg, positions):
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dh->bsh", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dh->bsh", x, p["wv"].astype(x.dtype))
+    if cfg.attn_bias:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    q = q.reshape(B, S, cfg.n_heads, hd)
+    k = k.reshape(B, S, cfg.n_kv_heads, hd)
+    v = v.reshape(B, S, cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if cfg.rope_type == "rope":
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    elif cfg.rope_type == "mrope":
+        q = apply_mrope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+        k = apply_mrope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+    return q, k, v
+
+
+def _sdpa(q, k, v, causal: bool, q_offset=None):
+    """q: (B, Sq, Hq, hd), k/v: (B, Skv, Hkv, hd) — grouped-query attention."""
+    B, Sq, Hq, hd = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    group = Hq // Hkv
+    q = q.reshape(B, Sq, Hkv, group, hd)
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", q, k).astype(jnp.float32)
+    logits = logits / math.sqrt(hd)
+    if causal:
+        qpos = jnp.arange(Sq)[:, None] if q_offset is None else \
+            (q_offset + jnp.arange(Sq))[:, None]
+        mask = qpos >= jnp.arange(Skv)[None, :]
+        logits = jnp.where(mask[None, None, None], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", w, v)
+    return out.reshape(B, Sq, Hq * hd)
+
+
+def attention(p, x, cfg, positions, causal=True, cache=None):
+    """Returns (out, new_cache).  cache = dict(k, v, index) for decode."""
+    B, S, _ = x.shape
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    q = shard(q, "batch", None, "heads", None)
+    k = shard(k, "batch", "kv_seq", "kv_heads", None)
+    v = shard(v, "batch", "kv_seq", "kv_heads", None)
+    new_cache = None
+    if cache is not None:
+        idx = cache["index"]
+        ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                          (0, idx, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                          (0, idx, 0, 0))
+        new_cache = {"k": ck, "v": cv, "index": idx + S}
+        Skv = ck.shape[1]
+        mask_pos = jnp.arange(Skv) < (idx + S)
+        logits_mask = mask_pos
+        out = _sdpa_decode(q, ck, cv, logits_mask)
+    else:
+        out = _sdpa(q, k, v, causal)
+    out = jnp.einsum("bsh,hd->bsd", out, p["wo"].astype(x.dtype))
+    return shard(out, "batch", "seq", None), new_cache
+
+
+def _sdpa_decode(q, k, v, valid_mask):
+    """Decode attention against a full cache with a validity mask."""
+    B, Sq, Hq, hd = q.shape
+    Hkv = k.shape[2]
+    group = Hq // Hkv
+    q = q.reshape(B, Sq, Hkv, group, hd)
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", q, k.astype(q.dtype))
+    logits = logits.astype(jnp.float32) / math.sqrt(hd)
+    logits = jnp.where(valid_mask[None, None, None, None, :], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", w, v.astype(q.dtype))
+    return out.reshape(B, Sq, Hq * hd)
+
+
+# ---------------------------------------------------------------------------
+# MLA — multi-head latent attention (deepseek-v2)
+# ---------------------------------------------------------------------------
+
+def init_mla(key, cfg) -> dict:
+    d = cfg.d_model
+    r, qr = cfg.kv_lora_rank, cfg.q_lora_rank
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    H = cfg.n_heads
+    ks = jax.random.split(key, 8)
+    p = {
+        "w_dkv": _init(ks[0], (d, r)),            # latent compression
+        "w_krope": _init(ks[1], (d, dr)),          # shared rope key
+        "kv_norm": jnp.zeros((r,)),
+        "w_uk": _init(ks[2], (r, H * dn)),         # latent -> keys
+        "w_uv": _init(ks[3], (r, H * dv)),         # latent -> values
+        "wo": _init(ks[4], (H * dv, d)),
+    }
+    if qr:
+        p["w_dq"] = _init(ks[5], (d, qr))
+        p["q_norm"] = jnp.zeros((qr,))
+        p["w_uq"] = _init(ks[6], (qr, H * (dn + dr)))
+    else:
+        p["wq"] = _init(ks[7], (d, H * (dn + dr)))
+    return p
+
+
+def mla_attention(p, x, cfg, positions, causal=True, cache=None):
+    """MLA: queries/keys split into nope + shared-rope parts; the KV cache
+    stores only the rank-r latent + rope key (the paper's memory saving)."""
+    B, S, d = x.shape
+    H, dn, dr, dv = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    if cfg.q_lora_rank:
+        q = jnp.einsum("bsd,dr->bsr", x, p["w_dq"].astype(x.dtype))
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        q = jnp.einsum("bsr,rh->bsh", q, p["w_uq"].astype(x.dtype))
+    else:
+        q = jnp.einsum("bsd,dh->bsh", x, p["wq"].astype(x.dtype))
+    q = q.reshape(B, S, H, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    c_kv = jnp.einsum("bsd,dr->bsr", x, p["w_dkv"].astype(x.dtype))
+    c_kv = rms_norm(c_kv, p["kv_norm"], cfg.norm_eps)
+    k_rope = jnp.einsum("bsd,dr->bsr", x, p["w_krope"].astype(x.dtype))
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0]
+
+    new_cache = None
+    if cache is not None:
+        idx = cache["index"]
+        cc = jax.lax.dynamic_update_slice(
+            cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), (0, idx, 0))
+        cr = jax.lax.dynamic_update_slice(
+            cache["k_rope"], k_rope.astype(cache["k_rope"].dtype), (0, idx, 0))
+        new_cache = {"c_kv": cc, "k_rope": cr, "index": idx + S}
+        c_kv, k_rope = cc.astype(x.dtype), cr.astype(x.dtype)
+        valid = jnp.arange(c_kv.shape[1]) < (idx + S)
+    else:
+        valid = None
+
+    k_nope = jnp.einsum("btr,rh->bth", c_kv, p["w_uk"].astype(x.dtype))
+    k_nope = k_nope.reshape(B, -1, H, dn)
+    v = jnp.einsum("btr,rh->bth", c_kv, p["w_uv"].astype(x.dtype))
+    v = v.reshape(B, -1, H, dv)
+    k_nope = shard(k_nope, "batch", "kv_seq", "heads", None)
+    v = shard(v, "batch", "kv_seq", "heads", None)
+
+    scale = 1.0 / math.sqrt(dn + dr)
+    logits = (jnp.einsum("bqhd,bkhd->bhqk", q_nope, k_nope) +
+              jnp.einsum("bqhd,bkd->bhqk", q_rope, k_rope)
+              ).astype(jnp.float32) * scale
+    Skv = logits.shape[-1]
+    if valid is not None:
+        logits = jnp.where(valid[None, None, None, :], logits, -1e30)
+    elif causal:
+        mask = jnp.arange(S)[:, None] >= jnp.arange(Skv)[None, :]
+        logits = jnp.where(mask[None, None], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhqk,bkhd->bqhd", w, v).reshape(B, S, H * dv)
+    out = jnp.einsum("bsh,hd->bsd", out, p["wo"].astype(x.dtype))
+    return shard(out, "batch", "seq", None), new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLP + MoE
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d: int, ff: int, act: str) -> dict:
+    ks = jax.random.split(key, 3)
+    p = {"w_up": _init(ks[0], (d, ff)), "w_down": _init(ks[1], (ff, d))}
+    if act in ("silu", "gelu"):
+        p["w_gate"] = _init(ks[2], (d, ff))
+    return p
+
+
+def mlp(p, x, act: str):
+    up = jnp.einsum("bsd,df->bsf", x, p["w_up"].astype(x.dtype))
+    if "w_gate" in p:
+        gate = jnp.einsum("bsd,df->bsf", x, p["w_gate"].astype(x.dtype))
+        up = act_fn(act)(gate) * up
+    else:
+        up = act_fn(act)(up)
+    up = shard(up, "batch", "seq", "ff")
+    out = jnp.einsum("bsf,fd->bsd", up, p["w_down"].astype(x.dtype))
+    return shard(out, "batch", "seq", None)
+
+
+def init_moe(key, cfg) -> dict:
+    d, ff, E = cfg.d_model, cfg.d_ff_expert, cfg.n_experts
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": _init(ks[0], (d, E)),
+        "w_gate": _init(ks[1], (E, d, ff)),
+        "w_up": _init(ks[2], (E, d, ff)),
+        "w_down": _init(ks[3], (E, ff, d)),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = init_mlp(ks[4], d, cfg.n_shared_experts * ff, cfg.act)
+    return p
+
+
+def moe(p, x, cfg):
+    """Top-k routed experts with GROUPED capacity-based one-hot dispatch
+    (GShard-style).  Tokens are split into groups of ``cfg.moe_group_size``
+    and each group gets its own capacity C_g = cf*Tg*k/E, so the dispatch
+    tensors are (G, Tg, E, C_g) — linear in tokens, not quadratic (an
+    ungrouped dispatch has C ~ T and costs ~50x the expert GEMMs at 1M
+    tokens; see EXPERIMENTS.md §Perf).  The dispatch/combine einsums lower
+    to all-to-alls when experts are sharded over the 'expert'/'model' mesh
+    axis.  Returns (out, aux_loss)."""
+    B, S, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    T = B * S
+    xt = x.reshape(T, d)
+    logits = jnp.einsum("td,de->te", xt, p["router"].astype(x.dtype))
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)              # (T, k)
+    gate_vals = gate_vals / (jnp.sum(gate_vals, -1, keepdims=True) + 1e-9)
+
+    # group size: tokens per dispatch group.  Small token counts (decode
+    # steps, smoke tests) get one dropless group so that prefill ==
+    # incremental decode exactly.
+    if T <= 4 * E or cfg.capacity_factor <= 0:
+        G, Tg, C = 1, T, T
+    else:
+        Tg = min(cfg.moe_group_size or T, T)
+        while T % Tg:                       # largest divisor <= requested
+            Tg -= 1
+        G = T // Tg
+        C = max(1, int(cfg.capacity_factor * Tg * k / E))
+    onehot = jax.nn.one_hot(gate_idx, E, dtype=jnp.float32)    # (T, k, E)
+    oh = onehot.reshape(G, Tg, k, E)
+    gates = gate_vals.reshape(G, Tg, k)
+    # capacity slots are assigned over the flattened (token, slot) axis of
+    # each group so different top-k columns of one expert never collide.
+    # Slot positions are computed in f32 (bf16 cannot represent integers
+    # > 256 exactly); only the big 0/1 dispatch tensors are bf16 (exact).
+    ohf = oh.reshape(G, Tg * k, E)
+    posf = jnp.cumsum(ohf, axis=1) - ohf
+    pos = jnp.einsum("gse,gse->gs", posf, ohf).reshape(G, Tg, k)
+    ddt = x.dtype   # bf16 in production (0/1 exact); f32 models stay exact
+    keep = (pos < C).astype(ddt)
+    poh = jax.nn.one_hot(pos, C, dtype=ddt)                    # (G,Tg,k,C)
+    oh16 = oh.astype(ddt)
+    disp = jnp.einsum("gtke,gtk,gtkc->gtec", oh16, keep, poh)  # (G,Tg,E,C)
+    comb = jnp.einsum("gtec,gtke,gtk->gtec", disp, oh16,
+                      gates.astype(ddt))
+    xg = xt.reshape(G, Tg, d)
+    xe = jnp.einsum("gtec,gtd->egcd", disp.astype(x.dtype), xg)
+    # expert slots: experts over 'model' (the EP all-to-all), slot groups
+    # KEEP their 'data' sharding — replicating slots would force the SPMD
+    # partitioner to all-gather every expert activation in the backward
+    # pass (§Perf cell A it2: 16.8 GiB/dev of gathers in a 2-layer probe)
+    xe = shard(xe, "expert", "moe_slots", None, None)
+    xe = xe.reshape(E, G * C, d)                               # expert slots
+    xe = shard(xe, "expert", "moe_slots", None)
+    g = jnp.einsum("ecd,edf->ecf", xe, p["w_gate"].astype(x.dtype))
+    u = jnp.einsum("ecd,edf->ecf", xe, p["w_up"].astype(x.dtype))
+    h = act_fn(cfg.act)(g) * u
+    ye = jnp.einsum("ecf,efd->ecd", h, p["w_down"].astype(x.dtype))
+    ye = shard(ye, "expert", "moe_slots", None)
+    ye = ye.reshape(E, G, C, d)
+    out = jnp.einsum("gtec,egcd->gtd", comb.astype(x.dtype), ye)
+    out = out.reshape(T, d)
+    if cfg.n_shared_experts:
+        out = out + mlp(p["shared"], x, cfg.act).reshape(T, d)
+    # load-balancing aux loss (Switch-style)
+    me = jnp.mean(onehot[:, 0], axis=0)
+    ce = jnp.mean(probs, axis=0)
+    aux = E * jnp.sum(me * ce) * cfg.router_aux_coef
+    return shard(out.reshape(B, S, d), "batch", "seq", None), aux

@@ -1,0 +1,53 @@
+"""SigHead: the paper's technique as a first-class model component.
+
+Pools a hidden-state trajectory (B, S, d_model) through a (projected)
+truncated signature of a learned low-dimensional path — a drop-in,
+fully-differentiable alternative to mean/last-token pooling for any
+architecture in the pool (DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import logsignature, signature, sig_dim, logsig_dim
+from repro.core.projection import projected_signature
+from repro.core.words import WordPlan
+from .config import ModelConfig, SigHeadConfig
+from .layers import _init
+
+
+def feature_dim(sc: SigHeadConfig) -> int:
+    if sc.use_logsig:
+        return logsig_dim(sc.channels, sc.depth) + sc.channels
+    return sig_dim(sc.channels, sc.depth) + sc.channels
+
+
+def init_sig_head(key, cfg: ModelConfig, n_out: int) -> dict:
+    sc = cfg.sig_head
+    k1, k2 = jax.random.split(key)
+    return {"proj": _init(k1, (cfg.d_model, sc.channels)),
+            "out": _init(k2, (feature_dim(sc), n_out))}
+
+
+def sig_pool(p, hidden: jax.Array, cfg: ModelConfig,
+             plan: WordPlan | None = None) -> jax.Array:
+    """(B, S, d_model) -> (B, n_out) sequence-level readout."""
+    sc = cfg.sig_head
+    path = jnp.einsum("bsd,dc->bsc", hidden, p["proj"].astype(hidden.dtype))
+    path = path.astype(jnp.float32)
+    if sc.stride > 1:
+        path = path[:, ::sc.stride]
+    # normalise scale so deep signatures stay well-conditioned
+    path = path / jnp.sqrt(jnp.float32(path.shape[1]))
+    if plan is not None:
+        feats = projected_signature(path, plan.words, sc.channels, plan=plan)
+        feats = jnp.concatenate([feats, path[:, -1] - path[:, 0]], axis=-1)
+    elif sc.use_logsig:
+        feats = logsignature(path, sc.depth)
+        feats = jnp.concatenate([feats, path[:, -1] - path[:, 0]], axis=-1)
+    else:
+        feats = signature(path, sc.depth)
+        feats = jnp.concatenate([feats, path[:, -1] - path[:, 0]], axis=-1)
+    return jnp.einsum("bf,fo->bo", feats.astype(hidden.dtype),
+                      p["out"].astype(hidden.dtype))

@@ -1,0 +1,283 @@
+"""State-space blocks: Mamba2 (SSD, chunked) and RWKV6 (Finch).
+
+Both are linear-time in sequence length (the long_500k shapes route here)
+and expose one-step ``*_decode`` updates with O(1) state caches.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.ctx import shard
+from .layers import _init, act_fn, rms_norm
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 / SSD
+# ---------------------------------------------------------------------------
+
+def mamba_dims(cfg):
+    d_in = cfg.mamba_expand * cfg.d_model
+    nh = d_in // cfg.mamba_head_dim
+    return d_in, nh
+
+
+def init_mamba(key, cfg) -> dict:
+    d, ds = cfg.d_model, cfg.ssm_state
+    d_in, nh = mamba_dims(cfg)
+    conv_ch = d_in + 2 * ds
+    ks = jax.random.split(key, 4)
+    return {
+        "w_in": _init(ks[0], (d, 2 * d_in + 2 * ds + nh)),   # z, xBC, dt
+        "conv_w": _init(ks[1], (cfg.conv_width, conv_ch), scale=0.5),
+        "conv_b": jnp.zeros((conv_ch,)),
+        "dt_bias": jnp.zeros((nh,)),
+        "A_log": jnp.zeros((nh,)),
+        "D": jnp.ones((nh,)),
+        "norm": jnp.zeros((d_in,)),
+        "w_out": _init(ks[2], (d_in, d)),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv: x (B, S, C), w (K, C)."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1]] * w[i][None, None] for i in range(K))
+    return out + b[None, None]
+
+
+def _ssd_chunked(xh, dt, a_log, Bc, Cc, chunk: int):
+    """Chunked SSD scan (Mamba2).  xh: (B,S,nh,hd), dt: (B,S,nh),
+    a_log: per-step log-decay (B,S,nh), Bc/Cc: (B,S,ds)."""
+    B, S, nh, hd = xh.shape
+    ds = Bc.shape[-1]
+    L = min(chunk, S)
+    nc = -(-S // L)
+    pad = nc * L - S
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        a_log = jnp.pad(a_log, ((0, 0), (0, pad), (0, 0)))
+        Bc = jnp.pad(Bc, ((0, 0), (0, pad), (0, 0)))
+        Cc = jnp.pad(Cc, ((0, 0), (0, pad), (0, 0)))
+    f32 = jnp.float32
+    xh = xh.reshape(B, nc, L, nh, hd)
+    dtx = (dt.reshape(B, nc, L, nh)[..., None] * xh).astype(f32)
+    al = a_log.reshape(B, nc, L, nh).astype(f32)
+    Bc = Bc.reshape(B, nc, L, ds).astype(f32)
+    Cc = Cc.reshape(B, nc, L, ds).astype(f32)
+
+    cum = jnp.cumsum(al, axis=2)                            # (B,nc,L,nh)
+    # intra-chunk: scores[t,s] = (C_t·B_s) exp(cum_t - cum_s) [s<=t]
+    cb = jnp.einsum("bctn,bcsn->bcts", Cc, Bc)              # (B,nc,L,L)
+    decay = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # (B,nc,L,L,nh)
+    tri = (jnp.arange(L)[:, None] >= jnp.arange(L)[None, :])
+    m = jnp.where(tri[None, None, :, :, None], jnp.exp(decay), 0.0)
+    scores = cb[..., None] * m                              # (B,nc,L,L,nh)
+    y_intra = jnp.einsum("bctsh,bcshd->bcthd", scores, dtx)
+
+    # chunk-final states: sum_s exp(cum_L - cum_s) dtx_s ⊗ B_s
+    tail = jnp.exp(cum[:, :, -1:, :] - cum)                 # (B,nc,L,nh)
+    st = jnp.einsum("bclh,bclhd,bcln->bchdn", tail, dtx, Bc)  # (B,nc,nh,hd,ds)
+
+    # inter-chunk: scan over chunk axis
+    def step(S_prev, inp):
+        st_c, decay_c = inp                                  # (B,nh,hd,ds),(B,nh)
+        S_new = S_prev * decay_c[..., None, None] + st_c
+        return S_new, S_prev
+
+    decay_chunk = jnp.exp(cum[:, :, -1, :])                  # (B,nc,nh)
+    S0 = jnp.zeros((B, nh, hd, ds), f32)
+    _, S_prevs = jax.lax.scan(step, S0, (jnp.moveaxis(st, 1, 0),
+                                         jnp.moveaxis(decay_chunk, 1, 0)))
+    S_prevs = jnp.moveaxis(S_prevs, 0, 1)                    # (B,nc,nh,hd,ds)
+    y_inter = jnp.einsum("bctn,bcth,bchdn->bcthd",
+                         Cc, jnp.exp(cum), S_prevs)
+    y = (y_intra + y_inter).reshape(B, nc * L, nh, hd)
+    return y[:, :S]
+
+
+def mamba_block(p, x, cfg, chunk: int = 128, cache=None):
+    """Returns (out, new_cache).  cache = {"conv": (B,K-1,C), "ssm": (B,nh,hd,ds)}."""
+    B, S, d = x.shape
+    ds = cfg.ssm_state
+    d_in, nh = mamba_dims(cfg)
+    hd = cfg.mamba_head_dim
+    proj = jnp.einsum("bsd,dk->bsk", x, p["w_in"].astype(x.dtype))
+    z, xBC, dt = jnp.split(proj, [d_in, 2 * d_in + 2 * ds], axis=-1)
+
+    if cache is None:
+        xBC = _causal_conv(xBC, p["conv_w"].astype(x.dtype),
+                           p["conv_b"].astype(x.dtype))
+        new_conv = None
+    else:
+        ctx = jnp.concatenate([cache["conv"].astype(x.dtype), xBC], axis=1)
+        K = p["conv_w"].shape[0]
+        xBC = sum(ctx[:, i:i + S] * p["conv_w"][i][None, None].astype(x.dtype)
+                  for i in range(K)) + p["conv_b"][None, None].astype(x.dtype)
+        new_conv = ctx[:, -(K - 1):]
+    xBC = act_fn("silu")(xBC)
+    xs, Bc, Cc = jnp.split(xBC, [d_in, d_in + ds], axis=-1)
+    xh = xs.reshape(B, S, nh, hd)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, None])
+    a_log = -jnp.exp(p["A_log"].astype(jnp.float32))[None, None] * dt
+
+    new_cache = None
+    if cache is None:
+        y = _ssd_chunked(xh, dt, a_log, Bc, Cc, chunk)
+    else:  # single/few-step decode: recurrent update
+        def step(Sst, inp):
+            xh_t, dt_t, al_t, B_t, C_t = inp
+            Sst = Sst * jnp.exp(al_t)[..., None, None] + \
+                jnp.einsum("bh,bhd,bn->bhdn", dt_t, xh_t, B_t)
+            y_t = jnp.einsum("bn,bhdn->bhd", C_t, Sst)
+            return Sst, y_t
+
+        seq = (jnp.moveaxis(xh.astype(jnp.float32), 1, 0),
+               jnp.moveaxis(dt, 1, 0), jnp.moveaxis(a_log, 1, 0),
+               jnp.moveaxis(Bc.astype(jnp.float32), 1, 0),
+               jnp.moveaxis(Cc.astype(jnp.float32), 1, 0))
+        S_fin, ys = jax.lax.scan(step, cache["ssm"].astype(jnp.float32), seq)
+        y = jnp.moveaxis(ys, 0, 1)
+        new_cache = {"conv": new_conv, "ssm": S_fin}
+
+    y = y + p["D"].astype(jnp.float32)[None, None, :, None] * \
+        xh.astype(jnp.float32)
+    y = y.reshape(B, S, d_in).astype(x.dtype) * act_fn("silu")(z)
+    y = rms_norm(y, p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bsk,kd->bsd", y, p["w_out"].astype(x.dtype))
+    return shard(out, "batch", "seq", None), new_cache
+
+
+def mamba_cache(cfg, B, dtype=jnp.float32):
+    d_in, nh = mamba_dims(cfg)
+    conv_ch = d_in + 2 * cfg.ssm_state
+    return {"conv": jnp.zeros((B, cfg.conv_width - 1, conv_ch), dtype),
+            "ssm": jnp.zeros((B, nh, cfg.mamba_head_dim, cfg.ssm_state),
+                             jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 (Finch): data-dependent decay time mix + channel mix
+# ---------------------------------------------------------------------------
+
+def init_rwkv(key, cfg) -> dict:
+    d, ff = cfg.d_model, cfg.d_ff
+    lora = 64
+    ks = jax.random.split(key, 12)
+    nh = d // cfg.rwkv_head_dim
+    return {
+        "ln1": jnp.zeros((d,)), "ln2": jnp.zeros((d,)),
+        "mu_r": jnp.full((d,), 0.5), "mu_k": jnp.full((d,), 0.5),
+        "mu_v": jnp.full((d,), 0.5), "mu_g": jnp.full((d,), 0.5),
+        "mu_w": jnp.full((d,), 0.5),
+        "w_r": _init(ks[0], (d, d)), "w_k": _init(ks[1], (d, d)),
+        "w_v": _init(ks[2], (d, d)), "w_g": _init(ks[3], (d, d)),
+        "w_o": _init(ks[4], (d, d)),
+        "w0": jnp.full((d,), -4.0),
+        "w_lora_a": _init(ks[5], (d, lora)),
+        "w_lora_b": _init(ks[6], (lora, d), scale=0.01),
+        "u": jnp.zeros((nh, cfg.rwkv_head_dim)),
+        "ln_x": jnp.zeros((d,)),
+        "mu_cr": jnp.full((d,), 0.5), "mu_ck": jnp.full((d,), 0.5),
+        "w_ck": _init(ks[7], (d, ff)), "w_cv": _init(ks[8], (ff, d)),
+        "w_cr": _init(ks[9], (d, d)),
+    }
+
+
+def _token_shift(x, prev):
+    """prev: (B, d) last token of previous call (zeros at start)."""
+    return jnp.concatenate([prev[:, None], x[:, :-1]], axis=1)
+
+
+def _wkv_scan(r, k, v, w, u, state):
+    """WKV6 recurrence.  r,k: (B,S,nh,hk), v: (B,S,nh,hv), w: (B,S,nh,hk)
+    decays in (0,1); u: (nh,hk) bonus.  state: (B,nh,hk,hv)."""
+    def step(S, inp):
+        r_t, k_t, v_t, w_t = inp
+        kv = jnp.einsum("bhk,bhv->bhkv", k_t, v_t)
+        y = jnp.einsum("bhk,bhkv->bhv", r_t, S + u[None, :, :, None] * kv)
+        S = S * w_t[..., None] + kv
+        return S, y
+
+    seq = tuple(jnp.moveaxis(t.astype(jnp.float32), 1, 0)
+                for t in (r, k, v, w))
+    S_fin, ys = jax.lax.scan(step, state.astype(jnp.float32), seq)
+    return jnp.moveaxis(ys, 0, 1), S_fin
+
+
+def rwkv_block(p, x_in, cfg, cache=None):
+    """Full residual RWKV6 block: x + time-mix + channel-mix.
+    Returns (out, new_cache); cache = {"shift_a","shift_c": (B,d),
+    "wkv": (B,nh,hk,hv)}."""
+    B, S, d = x_in.shape
+    hk = cfg.rwkv_head_dim
+    nh = d // hk
+    x = rms_norm(x_in, p["ln1"], cfg.norm_eps)
+    prev_a = cache["shift_a"].astype(x.dtype) if cache is not None else \
+        jnp.zeros((B, d), x.dtype)
+    xs = _token_shift(x, prev_a)
+
+    def lerp(mu):
+        return x + (xs - x) * mu.astype(x.dtype)[None, None]
+
+    r = jnp.einsum("bsd,dk->bsk", lerp(p["mu_r"]), p["w_r"].astype(x.dtype))
+    k = jnp.einsum("bsd,dk->bsk", lerp(p["mu_k"]), p["w_k"].astype(x.dtype))
+    v = jnp.einsum("bsd,dk->bsk", lerp(p["mu_v"]), p["w_v"].astype(x.dtype))
+    g = jnp.einsum("bsd,dk->bsk", lerp(p["mu_g"]), p["w_g"].astype(x.dtype))
+    # data-dependent decay (the Finch contribution)
+    wl = jnp.einsum("bsd,dl->bsl", lerp(p["mu_w"]), p["w_lora_a"].astype(x.dtype))
+    wl = jnp.einsum("bsl,ld->bsd", jnp.tanh(wl), p["w_lora_b"].astype(x.dtype))
+    w = jnp.exp(-jnp.exp((p["w0"][None, None] + wl).astype(jnp.float32)))
+
+    rh = r.reshape(B, S, nh, hk)
+    kh = k.reshape(B, S, nh, hk)
+    vh = v.reshape(B, S, nh, hk)
+    wh = w.reshape(B, S, nh, hk)
+    state = cache["wkv"] if cache is not None else \
+        jnp.zeros((B, nh, hk, hk), jnp.float32)
+    y, S_fin = _wkv_scan(rh, kh, vh, wh, p["u"], state)
+    y = y.reshape(B, S, d).astype(x.dtype)
+    # per-head group norm
+    yh = y.reshape(B, S, nh, hk).astype(jnp.float32)
+    mu = jnp.mean(yh, -1, keepdims=True)
+    var = jnp.var(yh, -1, keepdims=True)
+    yh = (yh - mu) * jax.lax.rsqrt(var + 64e-5)
+    y = (yh.reshape(B, S, d) * (1.0 + p["ln_x"][None, None])).astype(x.dtype)
+    y = y * act_fn("silu")(g)
+    att = jnp.einsum("bsd,dk->bsk", y, p["w_o"].astype(x.dtype))
+
+    # channel mix on the post-attention residual stream
+    res = x_in + att
+    x2 = rms_norm(res, p["ln2"], cfg.norm_eps)
+    prev_c = cache["shift_c"].astype(x.dtype) if cache is not None else \
+        jnp.zeros((B, d), x.dtype)
+    xs2 = _token_shift(x2, prev_c)
+
+    def lerp2(mu):
+        return x2 + (xs2 - x2) * mu.astype(x.dtype)[None, None]
+
+    ck = jnp.einsum("bsd,df->bsf", lerp2(p["mu_ck"]), p["w_ck"].astype(x.dtype))
+    cv = jnp.einsum("bsf,fd->bsd", jnp.square(jax.nn.relu(ck)),
+                    p["w_cv"].astype(x.dtype))
+    cr = jax.nn.sigmoid(
+        jnp.einsum("bsd,dk->bsk", lerp2(p["mu_cr"]), p["w_cr"].astype(x.dtype)))
+    ffn = cr * cv
+
+    new_cache = None
+    if cache is not None:
+        new_cache = {"shift_a": x[:, -1], "shift_c": x2[:, -1], "wkv": S_fin}
+    return res + ffn, new_cache
+
+
+def rwkv_cache(cfg, B, dtype=jnp.float32):
+    d = cfg.d_model
+    nh = d // cfg.rwkv_head_dim
+    return {"shift_a": jnp.zeros((B, d), dtype),
+            "shift_c": jnp.zeros((B, d), dtype),
+            "wkv": jnp.zeros((B, nh, cfg.rwkv_head_dim, cfg.rwkv_head_dim),
+                             jnp.float32)}

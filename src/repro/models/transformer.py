@@ -1,0 +1,334 @@
+"""Decoder LM families: dense/GQA, MoE, MLA, hybrid (Mamba2+shared-attn),
+RWKV6 — one init/forward/decode triple driven by ModelConfig.
+
+All homogeneous stacks use lax.scan over layer-stacked parameters (small HLO,
+fast SPMD compile at 100+ layers).  Remat policy is a forward() argument so
+the perf loop can flip it without touching model code.
+"""
+from __future__ import annotations
+
+import functools
+import math
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def layer_scan(f, init, xs):
+    """lax.scan over stacked layers; REPRO_SCAN_UNROLL=1 fully unrolls so
+    HLO cost analysis sees every layer (used by the roofline probes, which
+    would otherwise count while-loop bodies once)."""
+    unroll = bool(int(os.environ.get("REPRO_SCAN_UNROLL", "0")))
+    return jax.lax.scan(f, init, xs, unroll=True if unroll else 1)
+
+from repro.distributed.ctx import shard
+from .config import ModelConfig
+from .layers import (_init, attention, init_attention, init_mla, init_mlp,
+                     init_moe, mla_attention, mlp, moe, rms_norm)
+from .ssm import (init_mamba, init_rwkv, mamba_block, mamba_cache, rwkv_block,
+                  rwkv_cache)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _stack(key, n, init_one):
+    keys = jax.random.split(key, n)
+    return jax.vmap(init_one)(keys)
+
+
+def _init_decoder_layer(cfg, use_moe):
+    def one(key):
+        ks = jax.random.split(key, 3)
+        p = {"ln_attn": jnp.zeros((cfg.d_model,)),
+             "ln_mlp": jnp.zeros((cfg.d_model,))}
+        p["attn"] = init_mla(ks[0], cfg) if cfg.mla else init_attention(ks[0], cfg)
+        if use_moe:
+            p["moe"] = init_moe(ks[1], cfg)
+        else:
+            p["mlp"] = init_mlp(ks[1], cfg.d_model,
+                                cfg.d_ff_dense or cfg.d_ff, cfg.act)
+        return p
+    return one
+
+
+def init_params(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 8)
+    d = cfg.d_model
+    params: dict = {
+        "embed": _init(ks[0], (cfg.vocab_size, d), scale=0.02),
+        "ln_f": jnp.zeros((d,)),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = _init(ks[1], (d, cfg.vocab_size))
+
+    if cfg.family == "rwkv":
+        params["layers"] = _stack(ks[2], cfg.n_layers,
+                                  lambda k: init_rwkv(k, cfg))
+    elif cfg.family == "hybrid":
+        params["layers"] = _stack(ks[2], cfg.n_layers,
+                                  lambda k: {"ln": jnp.zeros((d,)),
+                                             "mamba": init_mamba(k, cfg)})
+        def shared_one(k):
+            k1, k2 = jax.random.split(k)
+            return {"ln_attn": jnp.zeros((d,)), "ln_mlp": jnp.zeros((d,)),
+                    "attn": init_attention(k1, cfg),
+                    "mlp": init_mlp(k2, d, cfg.d_ff, cfg.act)}
+        params["shared_attn"] = _stack(ks[3], cfg.n_shared_attn_blocks,
+                                       shared_one)
+    else:  # decoder (dense or MoE; MoE may have leading dense layers)
+        n_dense = cfg.moe_layer_start if cfg.moe else cfg.n_layers
+        n_moe = cfg.n_layers - n_dense if cfg.moe else 0
+        if n_dense:
+            params["dense_layers"] = _stack(
+                ks[2], n_dense, _init_decoder_layer(cfg, use_moe=False))
+        if n_moe:
+            params["layers"] = _stack(
+                ks[3], n_moe, _init_decoder_layer(cfg, use_moe=True))
+        elif not cfg.moe:
+            params["layers"] = params.pop("dense_layers")
+    return jax.tree.map(lambda x: x.astype(dtype)
+                        if x.dtype == jnp.float32 else x, params)
+
+
+# ---------------------------------------------------------------------------
+# forward (training path)
+# ---------------------------------------------------------------------------
+
+def _decoder_layer_fwd(p, x, cfg, positions, use_moe, cache=None):
+    h = rms_norm(x, p["ln_attn"], cfg.norm_eps)
+    attn_fn = mla_attention if cfg.mla else attention
+    a, new_kv = attn_fn(p["attn"], h, cfg, positions, cache=cache)
+    x = x + a
+    h = rms_norm(x, p["ln_mlp"], cfg.norm_eps)
+    if use_moe:
+        m, aux = moe(p["moe"], h, cfg)
+    else:
+        m, aux = mlp(p["mlp"], h, cfg.act), 0.0
+    return x + m, aux, new_kv
+
+
+def _remat(fn, mode: str):
+    if mode == "none":
+        return fn
+    if mode == "full":
+        return jax.checkpoint(fn)
+    if mode == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    raise ValueError(mode)
+
+
+def _scan_layers(layer_params, x, body, remat_mode):
+    fn = _remat(body, remat_mode)
+
+    def step(carry, p):
+        x, aux = carry
+        x2, aux2 = fn(p, x)
+        return (x2, aux + aux2), None
+
+    (x, aux), _ = layer_scan(step, (x, 0.0), layer_params)
+    return x, aux
+
+
+def backbone(params, cfg: ModelConfig, tokens=None, embeds=None,
+             positions=None, remat: str = "dots"):
+    """Token/embedding inputs -> final hidden states (B, S, d).  Returns
+    (hidden, aux_loss)."""
+    if embeds is None:
+        x = jnp.take(params["embed"], tokens, axis=0)
+        x = x * math.sqrt(cfg.d_model) if cfg.family == "encdec" else x
+    else:
+        x = embeds
+    B, S = x.shape[:2]
+    x = shard(x, "batch", "seq", None)
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        if cfg.rope_type == "mrope":
+            positions = jnp.broadcast_to(positions[None], (3, B, S))
+
+    aux = 0.0
+    if cfg.family == "rwkv":
+        def body(p, h):
+            h2, _ = rwkv_block(p, h, cfg)
+            return h2, 0.0
+        x, aux = _scan_layers(params["layers"], x, body, remat)
+    elif cfg.family == "hybrid":
+        def mbody(p, h):
+            h2, _ = mamba_block(p["mamba"],
+                                rms_norm(h, p["ln"], cfg.norm_eps), cfg)
+            return h + h2, 0.0
+        per = cfg.hybrid_attn_every
+        n_groups = -(-cfg.n_layers // per)
+        done = 0
+        for g in range(n_groups):
+            take = min(per, cfg.n_layers - done)
+            sl = jax.tree.map(lambda a: a[done:done + take], params["layers"])
+            x, _ = _scan_layers(sl, x, mbody, remat)
+            done += take
+            sb = jax.tree.map(
+                lambda a: a[g % cfg.n_shared_attn_blocks], params["shared_attn"])
+            x, _, _ = _decoder_layer_fwd(sb, x, cfg, positions, use_moe=False)
+    else:
+        n_dense = cfg.moe_layer_start if cfg.moe else 0
+        if cfg.moe and n_dense:
+            def dbody(p, h):
+                h2, a2, _ = _decoder_layer_fwd(p, h, cfg, positions, False)
+                return h2, a2
+            x, aux0 = _scan_layers(params["dense_layers"], x, dbody, remat)
+            aux += aux0
+        def body(p, h):
+            h2, a2, _ = _decoder_layer_fwd(p, h, cfg, positions, cfg.moe)
+            return h2, a2
+        x, aux1 = _scan_layers(params["layers"], x, body, remat)
+        aux += aux1
+    return rms_norm(x, params["ln_f"], cfg.norm_eps), aux
+
+
+def logits_fn(params, cfg, hidden):
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", hidden, w.astype(hidden.dtype))
+    if cfg.logit_softcap:
+        logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+    return shard(logits, "batch", "seq", "vocab")
+
+
+def lm_loss(params, cfg: ModelConfig, batch, remat: str = "dots"):
+    """batch: tokens (B,S) int32, labels (B,S) int32 (-100 = ignore),
+    optional embeds/positions.  Returns (loss, metrics)."""
+    hidden, aux = backbone(params, cfg, tokens=batch.get("tokens"),
+                           embeds=batch.get("embeds"),
+                           positions=batch.get("positions"), remat=remat)
+    logits = logits_fn(params, cfg, hidden).astype(jnp.float32)
+    labels = batch["labels"]
+    valid = (labels >= 0).astype(jnp.float32)
+    safe = jnp.maximum(labels, 0)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, safe[..., None], axis=-1)[..., 0]
+    ntok = jnp.maximum(jnp.sum(valid), 1.0)
+    loss = jnp.sum(nll * valid) / ntok
+    # z-loss for stability at scale
+    zl = 1e-4 * jnp.sum(jax.scipy.special.logsumexp(logits, -1) ** 2 * valid) / ntok
+    return loss + aux + zl, {"loss": loss, "aux": aux, "ntok": ntok}
+
+
+# ---------------------------------------------------------------------------
+# decode path (serving)
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, B: int, max_len: int,
+               dtype=jnp.bfloat16) -> dict:
+    hd = cfg.resolved_head_dim
+    if cfg.family == "rwkv":
+        return {"layers": jax.tree.map(
+            lambda x: jnp.stack([x] * cfg.n_layers),
+            rwkv_cache(cfg, B, dtype))}
+    if cfg.family == "hybrid":
+        mc = jax.tree.map(lambda x: jnp.stack([x] * cfg.n_layers),
+                          mamba_cache(cfg, B, dtype))
+        kv = {"k": jnp.zeros((cfg.n_shared_attn_blocks, B, max_len,
+                              cfg.n_kv_heads, hd), dtype),
+              "v": jnp.zeros((cfg.n_shared_attn_blocks, B, max_len,
+                              cfg.n_kv_heads, hd), dtype),
+              "index": jnp.zeros((cfg.n_shared_attn_blocks,), jnp.int32)}
+        return {"layers": mc, "shared_attn": kv}
+    if cfg.mla:
+        return {"layers": {
+            "c_kv": jnp.zeros((cfg.n_layers, B, max_len, cfg.kv_lora_rank), dtype),
+            "k_rope": jnp.zeros((cfg.n_layers, B, max_len, cfg.qk_rope_dim), dtype),
+            "index": jnp.zeros((cfg.n_layers,), jnp.int32)}}
+    return {"layers": {
+        "k": jnp.zeros((cfg.n_layers, B, max_len, cfg.n_kv_heads, hd), dtype),
+        "v": jnp.zeros((cfg.n_layers, B, max_len, cfg.n_kv_heads, hd), dtype),
+        "index": jnp.zeros((cfg.n_layers,), jnp.int32)}}
+
+
+def decode_step(params, cfg: ModelConfig, tokens, cache, positions=None,
+                embeds=None):
+    """One decoding step.  tokens: (B, 1) (or embeds (B,1,d)).  Returns
+    (logits (B,1,V), new_cache)."""
+    if embeds is None:
+        x = jnp.take(params["embed"], tokens, axis=0)
+    else:
+        x = embeds
+    B, S = x.shape[:2]
+    if positions is None:
+        if cfg.family == "hybrid":
+            pos_scalar = cache["shared_attn"]["index"][0]
+        elif "index" in cache["layers"]:
+            pos_scalar = cache["layers"]["index"][0]
+        else:
+            pos_scalar = jnp.zeros((), jnp.int32)
+        positions = jnp.broadcast_to(pos_scalar + jnp.arange(S)[None], (B, S))
+        if cfg.rope_type == "mrope":
+            positions = jnp.broadcast_to(positions[None], (3, B, S))
+
+    if cfg.family == "rwkv":
+        def step(h, inp):
+            p, c = inp
+            h2, c2 = rwkv_block(p, h, cfg, cache=c)
+            return h2, c2
+        x, new_lc = layer_scan(step, x, (params["layers"], cache["layers"]))
+        new_cache = {"layers": new_lc}
+    elif cfg.family == "hybrid":
+        per = cfg.hybrid_attn_every
+        n_groups = -(-cfg.n_layers // per)
+        done = 0
+        new_m, kvs = [], dict(cache["shared_attn"])
+        def mstep(h, inp):
+            p, c = inp
+            h2, c2 = mamba_block(p["mamba"],
+                                 rms_norm(h, p["ln"], cfg.norm_eps), cfg,
+                                 cache=c)
+            return h + h2, c2
+        for g in range(n_groups):
+            take = min(per, cfg.n_layers - done)
+            sl = jax.tree.map(lambda a: a[done:done + take], params["layers"])
+            cl = jax.tree.map(lambda a: a[done:done + take], cache["layers"])
+            x, c2 = layer_scan(mstep, x, (sl, cl))
+            new_m.append(c2)
+            done += take
+            b = g % cfg.n_shared_attn_blocks
+            sb = jax.tree.map(lambda a: a[b], params["shared_attn"])
+            kvc = {"k": kvs["k"][b], "v": kvs["v"][b], "index": kvs["index"][b]}
+            x, _, kvn = _decoder_layer_fwd(sb, x, cfg, positions, False, kvc)
+            if g < cfg.n_shared_attn_blocks:  # shared blocks share one cache
+                kvs = {"k": kvs["k"].at[b].set(kvn["k"]),
+                       "v": kvs["v"].at[b].set(kvn["v"]),
+                       "index": kvs["index"].at[b].set(kvn["index"])}
+        new_cache = {"layers": jax.tree.map(
+            lambda *xs: jnp.concatenate(xs, 0), *new_m),
+            "shared_attn": kvs}
+    else:
+        use_moe = cfg.moe
+
+        def step(h, inp):
+            p, c = inp
+            h2, _, c2 = _decoder_layer_fwd(p, h, cfg, positions, use_moe,
+                                           cache=c)
+            return h2, c2
+
+        lp = params["layers"]
+        lc = cache["layers"]
+        if cfg.moe and cfg.moe_layer_start:
+            nd = cfg.moe_layer_start
+            dcache = jax.tree.map(lambda a: a[:nd], lc)
+            def dstep(h, inp):
+                p, c = inp
+                h2, _, c2 = _decoder_layer_fwd(p, h, cfg, positions, False, c)
+                return h2, c2
+            x, ndc = layer_scan(dstep, x, (params["dense_layers"], dcache))
+            mcache = jax.tree.map(lambda a: a[nd:], lc)
+            x, nmc = layer_scan(step, x, (lp, mcache))
+            new_lc = jax.tree.map(lambda a, b: jnp.concatenate([a, b], 0),
+                                  ndc, nmc)
+        else:
+            x, new_lc = layer_scan(step, x, (lp, lc))
+        new_cache = {"layers": new_lc}
+
+    hidden = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    return logits_fn(params, cfg, hidden), new_cache

@@ -1,0 +1,10 @@
+from .optimizers import (Optimizer, adamw, adafactor, sgd, global_norm,
+                         clip_by_global_norm, cosine_schedule,
+                         linear_warmup_cosine)
+from .compression import int8_error_feedback_allreduce, compress_int8, \
+    decompress_int8
+
+__all__ = ["Optimizer", "adamw", "adafactor", "sgd", "global_norm",
+           "clip_by_global_norm", "cosine_schedule", "linear_warmup_cosine",
+           "int8_error_feedback_allreduce", "compress_int8",
+           "decompress_int8"]

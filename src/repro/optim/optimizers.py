@@ -1,0 +1,161 @@
+"""Self-contained optimizers (no external deps): AdamW, Adafactor, SGD.
+
+Functional API mirroring optax: ``opt.init(params) -> state``,
+``opt.update(grads, state, params) -> (updates, state)``.  Optimizer states
+inherit the parameter sharding (ZeRO: m/v shard exactly like params), which
+the trainer enforces via matching PartitionSpecs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable  # (grads, state, params) -> (updates, new_state)
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    g = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (g + 1e-9))
+    return jax.tree.map(lambda x: x * scale.astype(x.dtype), tree), g
+
+
+def cosine_schedule(base_lr: float, total_steps: int, min_frac: float = 0.1):
+    def lr(step):
+        t = jnp.minimum(step, total_steps) / max(1, total_steps)
+        return base_lr * (min_frac + (1 - min_frac) * 0.5 *
+                          (1 + jnp.cos(jnp.pi * t)))
+    return lr
+
+
+def linear_warmup_cosine(base_lr: float, warmup: int, total_steps: int,
+                         min_frac: float = 0.05):
+    cos = cosine_schedule(base_lr, max(1, total_steps - warmup), min_frac)
+
+    def lr(step):
+        w = jnp.minimum(step / max(1, warmup), 1.0)
+        return jnp.where(step < warmup, base_lr * w, cos(step - warmup))
+    return lr
+
+
+def adamw(lr=1e-3, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1,
+          clip_norm: float | None = 1.0) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        if clip_norm is not None:
+            grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        g32 = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], g32)
+        v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * g * g,
+                         state["v"], g32)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+        lr_t = lr_fn(step)
+
+        def upd(p, m_, v_):
+            u = (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps)
+            u = u + weight_decay * p.astype(jnp.float32)
+            return (-lr_t * u).astype(p.dtype)
+
+        updates = jax.tree.map(upd, params, m, v)
+        return updates, {"m": m, "v": v, "step": step}
+
+    return Optimizer(init, update)
+
+
+def adafactor(lr=1e-2, decay=0.8, eps=1e-30, clip_threshold=1.0,
+              min_dim_factored=128) -> Optimizer:
+    """Memory-factored second-moment optimizer (for 100B+ params on v5e:
+    ~2 extra bytes/param instead of AdamW's 8)."""
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def factored(p):
+        return p.ndim >= 2 and p.shape[-1] >= min_dim_factored and \
+            p.shape[-2] >= min_dim_factored
+
+    def init(params):
+        def one(p):
+            if factored(p):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                        jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"slots": jax.tree.map(one, params,
+                                      is_leaf=lambda x: hasattr(x, "shape")),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        t = step.astype(jnp.float32)
+        beta = 1.0 - t ** (-decay)
+        lr_t = lr_fn(step)
+
+        def one(p, g, slot):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps
+            if factored(p):
+                vr = beta * slot["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc = beta * slot["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                denom = jnp.sqrt(
+                    vr[..., None] * vc[..., None, :] /
+                    (jnp.mean(vr, axis=-1, keepdims=True)[..., None] + eps))
+                u = g / (denom + eps)
+                new = {"vr": vr, "vc": vc}
+            else:
+                v = beta * slot["v"] + (1 - beta) * g2
+                u = g / (jnp.sqrt(v) + eps)
+                new = {"v": v}
+            rms = jnp.sqrt(jnp.mean(u * u) + eps)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            return (-lr_t * u).astype(p.dtype), new
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_s = tdef.flatten_up_to(state["slots"])
+        outs = [one(p, g, s) for p, g, s in zip(flat_p, flat_g, flat_s)]
+        updates = tdef.unflatten([o[0] for o in outs])
+        slots = tdef.unflatten([o[1] for o in outs])
+        return updates, {"slots": slots, "step": step}
+
+    return Optimizer(init, update)
+
+
+def sgd(lr=1e-2, momentum=0.9) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        return {"mom": jax.tree.map(lambda p: jnp.zeros_like(p,
+                                                             jnp.float32),
+                                    params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        mom = jax.tree.map(lambda m, g: momentum * m + g.astype(jnp.float32),
+                           state["mom"], grads)
+        lr_t = lr_fn(step)
+        updates = jax.tree.map(lambda p, m: (-lr_t * m).astype(p.dtype),
+                               params, mom)
+        return updates, {"mom": mom, "step": step}
+
+    return Optimizer(init, update)

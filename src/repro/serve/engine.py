@@ -1,0 +1,91 @@
+"""Serving: prefill + decode steps and a small batched engine.
+
+``serve_step`` is the unit the decode_* / long_* dry-run cells lower: one new
+token for every sequence in the batch against a seq_len-sized KV/state cache.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+import repro.models as M
+from repro.models import encdec, transformer as T
+from repro.models.config import ModelConfig
+
+
+def make_prefill_step(cfg: ModelConfig, remat: str = "dots"):
+    """Forward over the full prompt; returns last-position logits.
+
+    (The *_prefill dry-run cells lower this: inference forward, no loss.)
+    """
+    if cfg.family == "encdec":
+        def prefill(params, batch):
+            enc = encdec.encode(params, cfg, batch["frames"], remat=remat)
+            hidden = encdec.decode_train(params, cfg, enc, batch["tokens"],
+                                         remat=remat)
+            logits = jnp.einsum("bd,vd->bv", hidden[:, -1],
+                                params["embed"].astype(hidden.dtype))
+            return logits.astype(jnp.float32)
+        return prefill
+
+    def prefill(params, batch):
+        hidden, _ = T.backbone(params, cfg, tokens=batch.get("tokens"),
+                               embeds=batch.get("embeds"),
+                               positions=batch.get("positions"), remat=remat)
+        logits = T.logits_fn(params, cfg, hidden[:, -1:])
+        return logits[:, 0].astype(jnp.float32)
+    return prefill
+
+
+def make_serve_step(cfg: ModelConfig, temperature: float = 0.0):
+    """One decode step: (params, cache, tokens, rng) -> (next_tokens, cache)."""
+
+    def serve_step(params, cache, tokens, rng):
+        logits, cache = M.decode_step(params, cfg, tokens, cache)
+        logits = logits[:, -1].astype(jnp.float32)
+        if temperature > 0:
+            next_tok = jax.random.categorical(rng, logits / temperature)
+        else:
+            next_tok = jnp.argmax(logits, axis=-1)
+        return next_tok[:, None].astype(jnp.int32), cache
+
+    return serve_step
+
+
+@dataclasses.dataclass
+class ServeEngine:
+    """Minimal batched generation engine (CPU-runnable reference).
+
+    Continuous-batching-lite: fixed batch slots, per-slot stop tracking.
+    """
+    cfg: ModelConfig
+    params: dict
+    max_len: int
+    temperature: float = 0.0
+    eos_id: int = -1
+
+    def __post_init__(self):
+        self._step = jax.jit(make_serve_step(self.cfg, self.temperature))
+
+    def generate(self, prompt_tokens, n_steps: int, rng=None):
+        B = prompt_tokens.shape[0]
+        rng = rng if rng is not None else jax.random.PRNGKey(0)
+        cache = M.init_cache(self.cfg, B, self.max_len, jnp.float32)
+        # teacher-forced prefill through decode steps (simple + exact)
+        for j in range(prompt_tokens.shape[1] - 1):
+            _, cache = M.decode_step(self.params, self.cfg,
+                                     prompt_tokens[:, j:j + 1], cache)
+        tok = prompt_tokens[:, -1:]
+        out = [prompt_tokens]
+        done = jnp.zeros((B, 1), bool)
+        for s in range(n_steps):
+            rng, sub = jax.random.split(rng)
+            tok, cache = self._step(self.params, cache, tok, sub)
+            if self.eos_id >= 0:
+                done = done | (tok == self.eos_id)
+                tok = jnp.where(done, self.eos_id, tok)
+            out.append(tok)
+        return jnp.concatenate(out, axis=1)

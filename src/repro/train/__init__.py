@@ -1,0 +1,2 @@
+from .trainer import TrainLoopConfig, make_train_step, make_eval_step, \
+    train_loop

@@ -1,0 +1,123 @@
+"""Training step + loop: mixed precision, microbatch accumulation, remat,
+gradient clipping/compression hooks, checkpoint/restart, straggler-aware
+step timing."""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+import repro.models as M
+from repro.models.config import ModelConfig
+from repro.optim import Optimizer, global_norm
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainLoopConfig:
+    steps: int = 100
+    log_every: int = 10
+    ckpt_every: int = 0                 # 0 = only at exit
+    ckpt_dir: str = ""
+    microbatch: int = 0                 # 0 = no accumulation
+    remat: str = "dots"
+    grad_compression: bool = False      # int8 EF over cross-pod axis
+    straggler_deadline_s: float = 0.0   # 0 = disabled; see train_loop
+
+
+def make_train_step(cfg: ModelConfig, opt: Optimizer, *, remat: str = "dots",
+                    microbatch: int = 0):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state,
+    metrics).  With microbatch > 0, gradients are accumulated over
+    `microbatch` slices of the batch (sequential, constant memory)."""
+
+    def loss_fn(params, batch):
+        return M.loss_fn(params, cfg, batch, remat=remat)
+
+    def grads_of(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+        return loss, metrics, grads
+
+    def train_step(params, opt_state, batch):
+        if microbatch and microbatch > 1:
+            def slice_mb(i, t):
+                def f(x):
+                    mb = x.shape[0] // microbatch
+                    return jax.lax.dynamic_slice_in_dim(x, i * mb, mb, axis=0)
+                return jax.tree.map(f, t)
+
+            def body(i, carry):
+                acc, loss_acc = carry
+                loss, _, grads = grads_of(params, slice_mb(i, batch))
+                acc = jax.tree.map(jnp.add, acc, grads)
+                return acc, loss_acc + loss
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                 params)
+            grads, loss_sum = jax.lax.fori_loop(
+                0, microbatch, body, (zeros, jnp.zeros((), jnp.float32)))
+            grads = jax.tree.map(lambda g: g / microbatch, grads)
+            loss = loss_sum / microbatch
+            metrics = {"loss": loss}
+        else:
+            loss, metrics, grads = grads_of(params, batch)
+        updates, opt_state = opt.update(grads, opt_state, params)
+        params = jax.tree.map(jnp.add, params, updates)
+        metrics = dict(metrics, grad_norm=global_norm(grads), loss=loss)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig, remat: str = "none"):
+    def eval_step(params, batch):
+        loss, metrics = M.loss_fn(params, cfg, batch, remat=remat)
+        return metrics
+    return eval_step
+
+
+def train_loop(cfg: ModelConfig, params, opt: Optimizer, data_iter,
+               loop: TrainLoopConfig,
+               checkpointer=None, start_step: int = 0,
+               on_metrics: Optional[Callable[[int, dict], None]] = None):
+    """CPU-runnable reference loop with checkpoint/restart + straggler guard.
+
+    Fault tolerance: if a checkpointer is given, state is saved every
+    ``ckpt_every`` steps and on KeyboardInterrupt/SIGTERM-style exits; restart
+    resumes from ``start_step`` (see repro.checkpoint).  The straggler guard
+    flags steps slower than ``straggler_deadline_s`` (at pod scale the
+    launcher replaces the slow host; on CPU we log + continue).
+    """
+    step_fn = jax.jit(make_train_step(cfg, opt, remat=loop.remat,
+                                      microbatch=loop.microbatch))
+    opt_state = opt.init(params)
+    if checkpointer is not None and start_step:
+        params, opt_state, _ = checkpointer.restore(params, opt_state,
+                                                    start_step)
+    history = []
+    try:
+        for step in range(start_step, loop.steps):
+            t0 = time.perf_counter()
+            batch = next(data_iter)
+            params, opt_state, metrics = step_fn(params, opt_state, batch)
+            jax.block_until_ready(metrics["loss"])   # honest step timing
+            dt = time.perf_counter() - t0
+            if loop.straggler_deadline_s and dt > loop.straggler_deadline_s:
+                metrics = dict(metrics, straggler=True)
+            if step % loop.log_every == 0 or step == loop.steps - 1:
+                m = {k: float(v) if hasattr(v, "shape") else v
+                     for k, v in metrics.items()}
+                m["step"], m["sec"] = step, dt
+                history.append(m)
+                if on_metrics:
+                    on_metrics(step, m)
+            if checkpointer is not None and loop.ckpt_every and \
+                    step and step % loop.ckpt_every == 0:
+                checkpointer.save(params, opt_state, step)
+    finally:
+        if checkpointer is not None:
+            checkpointer.save(params, opt_state, loop.steps)
+    return params, opt_state, history

@@ -1,0 +1,20 @@
+import os
+
+# Smoke tests and benches must see the single real CPU device; only
+# launch/dryrun.py forces 512 placeholder devices (and only in its own
+# process).  Guard against accidental inheritance.
+os.environ.pop("XLA_FLAGS", None)
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def make_path(rng, B, M, d, scale=0.3):
+    return np.cumsum(rng.normal(size=(B, M + 1, d)) * scale, axis=1).astype(
+        np.float32)

@@ -1,0 +1,111 @@
+"""Backprop tests (paper §4): inverse-reconstruction VJP vs scan autodiff,
+memory-law verification, projected/windowed gradients."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.core as C
+from repro.core.words import make_plan
+from tests.conftest import make_path
+
+
+def _grads(path, depth, backward):
+    def loss(p):
+        s = C.signature(p, depth, backward=backward)
+        return jnp.sum(jnp.tanh(s) * jnp.arange(s.shape[-1]) * 1e-2)
+    return jax.grad(loss)(jnp.asarray(path))
+
+
+@pytest.mark.parametrize("d,N,M", [(2, 4, 13), (3, 3, 21), (4, 2, 7)])
+def test_inverse_vjp_matches_autodiff(rng, d, N, M):
+    path = make_path(rng, 3, M, d)
+    g_ad = _grads(path, N, "autodiff")
+    g_inv = _grads(path, N, "inverse")
+    g_cp = _grads(path, N, "checkpoint")
+    np.testing.assert_allclose(g_inv, g_ad, rtol=1e-3, atol=1e-5)
+    np.testing.assert_allclose(g_cp, g_ad, rtol=1e-3, atol=1e-5)
+
+
+def test_vjp_against_finite_differences(rng):
+    d, N, M = 2, 3, 6
+    path = jnp.asarray(make_path(rng, 1, M, d))
+    w = jnp.asarray(rng.normal(size=(C.sig_dim(d, N),)).astype(np.float32))
+
+    def loss(p):
+        return jnp.sum(C.signature(p, N, backward="inverse") * w)
+
+    g = jax.grad(loss)(path)
+    eps = 1e-3
+    for idx in [(0, 0, 0), (0, 3, 1), (0, M, 0)]:
+        pert = np.zeros(path.shape, np.float32)
+        pert[idx] = eps
+        fd = (loss(path + pert) - loss(path - pert)) / (2 * eps)
+        assert abs(float(g[idx]) - float(fd)) < 5e-2 * max(1.0, abs(float(fd)))
+
+
+def test_projected_vjp_matches_autodiff(rng):
+    d, M = 3, 15
+    words = [(0,), (1, 2), (2, 1, 0), (0, 0, 1)]
+    plan = make_plan(words, d)
+    path = jnp.asarray(make_path(rng, 2, M, d))
+
+    def loss(p, mode):
+        s = C.projected_signature(p, words, d, plan=plan, backward=mode)
+        return jnp.sum(jnp.sin(s))
+
+    g_inv = jax.grad(lambda p: loss(p, "inverse"))(path)
+    g_ad = jax.grad(lambda p: loss(p, "autodiff"))(path)
+    np.testing.assert_allclose(g_inv, g_ad, rtol=1e-3, atol=1e-5)
+
+
+def test_windowed_gradients_flow(rng):
+    path = jnp.asarray(make_path(rng, 2, 20, 2))
+    wins = np.array([[0, 10], [5, 20]], np.int32)
+
+    def loss(p):
+        return jnp.sum(C.windowed_signature(p, wins, 3) ** 2)
+
+    g = jax.grad(loss)(path)
+    assert np.isfinite(np.asarray(g)).all()
+    assert float(jnp.max(jnp.abs(g))) > 0
+
+
+def test_backward_memory_is_M_independent():
+    """The paper's memory law (§4.2, Table 2): inverse-mode residuals hold
+    only the terminal signature; autodiff scan residuals grow with M.
+
+    We verify structurally on the jaxpr: count the total size of
+    scan-carried residual outputs of the forward pass.
+    """
+    d, N = 2, 4
+
+    def resid_bytes(mode, M):
+        path = jnp.zeros((1, M + 1, d), jnp.float32)
+
+        def loss(p):
+            return jnp.sum(C.signature(p, N, backward=mode))
+
+        # output of the vjp-forward: residuals appear as closed-over consts
+        _, vjp = jax.vjp(loss, path)
+        flat, _ = jax.tree_util.tree_flatten(vjp)
+        return sum(int(np.prod(x.shape)) * x.dtype.itemsize
+                   for x in flat if hasattr(x, "shape"))
+
+    grow_inv = resid_bytes("inverse", 256) - resid_bytes("inverse", 32)
+    grow_ad = resid_bytes("autodiff", 256) - resid_bytes("autodiff", 32)
+    # inverse mode grows only by the increments themselves: (256-32)*d*4 bytes
+    inc_growth = (256 - 32) * d * 4
+    assert grow_inv <= 2 * inc_growth, (grow_inv, inc_growth)
+    # autodiff mode must additionally store O(M · D_sig) intermediates
+    assert grow_ad > 10 * inc_growth, (grow_ad, inc_growth)
+
+
+def test_inverse_reconstruction_drift_bounded(rng):
+    """Long-path drift check for the reconstruction backward (§4.2 note)."""
+    path = jnp.asarray(make_path(rng, 1, 800, 2, scale=0.05))
+    g_inv = _grads(path, 3, "inverse")
+    g_cp = _grads(path, 3, "checkpoint")
+    denom = float(jnp.max(jnp.abs(g_cp))) + 1e-12
+    rel = float(jnp.max(jnp.abs(g_inv - g_cp))) / denom
+    assert rel < 5e-3, rel

@@ -1,0 +1,143 @@
+"""Log-signature tests: Lyndon basis, dense vs projected route (paper §3.3)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import repro.core as C
+from repro.core.logsignature import (_projected_tables, logsignature,
+                                     logsignature_projected)
+from repro.core import tensor_ops as tops
+from tests.conftest import make_path
+
+
+def _necklace_dim(d, N):
+    """dim g_{<=N} = sum_n (1/n) sum_{k|n} mu(k) d^(n/k)."""
+    def mu(n):
+        out, m, p = 1, n, 2
+        while p * p <= m:
+            if m % p == 0:
+                m //= p
+                if m % p == 0:
+                    return 0
+                out = -out
+            p += 1
+        return -out if m > 1 else out
+
+    total = 0
+    for n in range(1, N + 1):
+        s = sum(mu(k) * d ** (n // k) for k in range(1, n + 1) if n % k == 0)
+        total += s // n
+    return total
+
+
+@pytest.mark.parametrize("d,N", [(2, 3), (2, 5), (3, 3), (4, 3), (5, 2)])
+def test_lyndon_count_matches_necklace_formula(d, N):
+    assert C.logsig_dim(d, N) == _necklace_dim(d, N)
+
+
+@pytest.mark.parametrize("d,N", [(2, 4), (3, 3), (4, 3), (2, 6), (5, 2),
+                                 (3, 5)])
+def test_projected_matches_dense(rng, d, N):
+    path = make_path(rng, 3, 13, d)
+    np.testing.assert_allclose(logsignature_projected(path, N),
+                               logsignature(path, N), rtol=2e-4, atol=1e-5)
+
+
+def test_projected_skips_top_level_coefficients():
+    """The projection trick computes |W_{<=N-1}| + |Lyndon_N| coefficients,
+    strictly fewer than |W_{<=N}| (the whole point of §3.3)."""
+    d, N = 4, 5
+    plan = _projected_tables(d, N)[0]
+    n_lyndon_top = sum(1 for w in C.lyndon_words(d, N) if len(w) == N)
+    assert len(plan.words) == C.sig_dim(d, N - 1) + n_lyndon_top
+    assert plan.closure_size < C.sig_dim(d, N)
+    # savings are dominated by the top level: d^N - |Lyndon_N| words skipped
+    assert C.sig_dim(d, N) - plan.closure_size >= (d ** N - n_lyndon_top) // 2
+
+
+def test_single_segment_logsig_is_increment(rng):
+    """log(exp(dx)) = dx: only level-1 coordinates survive."""
+    d, N = 3, 4
+    dx = rng.normal(size=(1, d)).astype(np.float32) * 0.4
+    path = np.stack([np.zeros((1, d), np.float32), dx], axis=1)
+    for fn in (logsignature, logsignature_projected):
+        ls = np.asarray(fn(jnp.asarray(path), N))
+        np.testing.assert_allclose(ls[:, :d], dx, rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(ls[:, d:], 0.0, atol=1e-5)
+
+
+def test_reparametrisation_invariance(rng):
+    path = make_path(rng, 2, 9, 3)
+    path2 = np.concatenate([path[:, :4], path[:, 3:4], path[:, 4:]], axis=1)
+    np.testing.assert_allclose(logsignature_projected(path2, 3),
+                               logsignature_projected(path, 3),
+                               rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("route", ["dense", "projected"])
+def test_gradients_flow(rng, route):
+    fn = logsignature if route == "dense" else logsignature_projected
+    path = jnp.asarray(make_path(rng, 2, 8, 3))
+    g = jax.grad(lambda p: jnp.sum(fn(p, 3) ** 2))(path)
+    assert g.shape == path.shape
+    assert bool(jnp.all(jnp.isfinite(g)))
+    assert float(jnp.max(jnp.abs(g))) > 0
+
+
+def test_grad_routes_agree(rng):
+    path = jnp.asarray(make_path(rng, 2, 8, 3))
+    gd = jax.grad(lambda p: jnp.sum(logsignature(p, 3) ** 2))(path)
+    gp = jax.grad(lambda p: jnp.sum(logsignature_projected(p, 3) ** 2))(path)
+    np.testing.assert_allclose(gd, gp, rtol=2e-3, atol=1e-5)
+
+
+@given(st.integers(2, 3), st.integers(2, 4), st.integers(3, 10))
+@settings(max_examples=10, deadline=None)
+def test_logsig_lives_in_lie_algebra_level2(d, N, M):
+    """Level-2 of log(S) is antisymmetric (primitive elements at level 2 are
+    spanned by commutators [e_i, e_j])."""
+    rng = np.random.default_rng(d * 100 + N * 10 + M)
+    path = make_path(rng, 2, M, d)
+    flat = C.signature(path, max(N, 2))
+    logs = tops.tensor_log(tops.flat_to_levels(jnp.asarray(flat), d,
+                                               max(N, 2)))
+    lvl2 = np.asarray(logs[1]).reshape(-1, d, d)
+    np.testing.assert_allclose(lvl2 + np.swapaxes(lvl2, 1, 2), 0.0,
+                               atol=1e-4)
+
+
+def test_basepoint_flag(rng):
+    path = jnp.asarray(make_path(rng, 2, 7, 3))
+    with_bp = logsignature(path, 3, basepoint=True)
+    manual = jnp.concatenate([jnp.zeros_like(path[:, :1]), path], axis=1)
+    np.testing.assert_allclose(with_bp, logsignature(manual, 3),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_hybrid_engine_matches_word_table_engine(rng):
+    """The hybrid dense+top engine equals the generic word-table engine on
+    the §3.3 plan (all words <N ++ Lyndon_N), values and gradients."""
+    from repro.core.hybrid import hybrid_low_plus_top
+    from repro.core.logsignature import _projected_tables
+    from repro.core.projection import projected_signature_from_increments
+    from repro.core import tensor_ops as tops
+
+    d, N = 3, 4
+    path = jnp.asarray(make_path(rng, 2, 9, d))
+    incs = tops.path_increments(path)
+    plan = _projected_tables(d, N)[0]
+    top = [w for w in C.lyndon_words(d, N) if len(w) == N]
+    a = hybrid_low_plus_top(incs, top, N)
+    b = projected_signature_from_increments(incs, plan)
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-6)
+
+    ga = jax.grad(lambda x: jnp.sum(hybrid_low_plus_top(x, top, N) ** 2))(incs)
+    gb = jax.grad(lambda x: jnp.sum(
+        projected_signature_from_increments(x, plan) ** 2))(incs)
+    np.testing.assert_allclose(ga, gb, rtol=1e-3, atol=1e-5)
+    # inverse-reconstruction VJP == autodiff-through-scan VJP
+    gc = jax.grad(lambda x: jnp.sum(
+        hybrid_low_plus_top(x, top, N, backward="autodiff") ** 2))(incs)
+    np.testing.assert_allclose(ga, gc, rtol=1e-3, atol=1e-5)

@@ -1,0 +1,95 @@
+"""MoE grouped-dispatch correctness (the §Perf cell-A engine).
+
+The grouped capacity dispatch (GShard-style) must agree exactly with a
+dense dropless reference when capacity is ample, must drop deterministically
+when it is not, and must keep prefill == decode parity.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduce_config
+from repro.models import layers as L
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _cfg(**kw):
+    base = reduce_config(get_config("phi3.5-moe-42b-a6.6b"))
+    return dataclasses.replace(base, **kw)
+
+
+def _dense_reference(p, x, cfg):
+    """Dropless oracle: every token through its top-k experts, dense loop."""
+    B, S, d = x.shape
+    T = B * S
+    xt = x.reshape(T, d)
+    logits = xt @ p["router"].astype(x.dtype)
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, cfg.top_k)
+    gate_vals = gate_vals / (jnp.sum(gate_vals, -1, keepdims=True) + 1e-9)
+    out = jnp.zeros((T, d), jnp.float32)
+    act = {"silu": jax.nn.silu, "gelu": jax.nn.gelu}[cfg.act]
+    for e in range(cfg.n_experts):
+        g = xt @ p["w_gate"][e].astype(x.dtype)
+        u = xt @ p["w_up"][e].astype(x.dtype)
+        y = (act(g) * u) @ p["w_down"][e].astype(x.dtype)
+        for k in range(cfg.top_k):
+            w = jnp.where(gate_idx[:, k] == e, gate_vals[:, k], 0.0)
+            out = out + w[:, None] * y.astype(jnp.float32)
+    if cfg.n_shared_experts:
+        out = out + L.mlp(p["shared"], x, cfg.act).reshape(T, d)
+    return out.reshape(B, S, d).astype(x.dtype)
+
+
+@pytest.mark.parametrize("group", [0, 8, 16])
+def test_grouped_dispatch_matches_dropless_reference(group):
+    cfg = _cfg(capacity_factor=8.0, moe_group_size=group)  # ample capacity
+    B, S = 2, 16
+    p = L.init_moe(jax.random.split(KEY)[0], cfg)
+    x = jax.random.normal(jax.random.split(KEY)[1], (B, S, cfg.d_model),
+                          jnp.float32) * 0.3
+    got, aux = L.moe(p, x, cfg)
+    want = _dense_reference(p, x, cfg)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+    assert np.isfinite(float(aux))
+
+
+def test_small_token_counts_are_dropless():
+    """T <= 4E uses one dropless group: prefill == sum of decode steps."""
+    cfg = _cfg()
+    p = L.init_moe(KEY, cfg)
+    x = jax.random.normal(KEY, (1, 3, cfg.d_model), jnp.float32) * 0.3
+    full, _ = L.moe(p, x, cfg)
+    stepwise = jnp.concatenate(
+        [L.moe(p, x[:, i:i + 1], cfg)[0] for i in range(3)], axis=1)
+    np.testing.assert_allclose(full, stepwise, rtol=1e-4, atol=1e-5)
+
+
+def test_tight_capacity_drops_but_stays_finite():
+    cfg = _cfg(capacity_factor=0.5, moe_group_size=8)
+    p = L.init_moe(KEY, cfg)
+    x = jax.random.normal(KEY, (2, 64, cfg.d_model), jnp.float32)
+    out, aux = L.moe(p, x, cfg)
+    ref = _dense_reference(p, x, cfg)
+    assert bool(jnp.all(jnp.isfinite(out)))
+    # capacity drops make the output differ from dropless — by construction
+    assert float(jnp.max(jnp.abs(out - ref))) > 0
+
+
+def test_grouped_dispatch_gradients_flow():
+    cfg = _cfg(capacity_factor=2.0, moe_group_size=8)
+    p = L.init_moe(KEY, cfg)
+    x = jax.random.normal(KEY, (2, 16, cfg.d_model), jnp.float32) * 0.3
+
+    def loss(p):
+        out, aux = L.moe(p, x, cfg)
+        return jnp.sum(out ** 2) + aux
+
+    g = jax.grad(loss)(p)
+    for path, leaf in jax.tree_util.tree_flatten_with_path(g)[0]:
+        assert bool(jnp.all(jnp.isfinite(leaf))), path
+    assert float(jnp.max(jnp.abs(g["w_up"]))) > 0

@@ -1,0 +1,138 @@
+"""Projection / anisotropic / windows / log-signature behaviour tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.core as C
+from repro.core import tensor_ops as tops
+from repro.core.words import flat_index, make_plan
+from tests.conftest import make_path
+
+
+def test_projection_matches_truncation_subset(rng):
+    d, N = 3, 4
+    path = make_path(rng, 3, 10, d)
+    dense = C.signature(path, N)
+    words = [(0,), (2, 2), (1, 0, 2), (0, 1, 2, 0)]
+    proj = C.projected_signature(path, words, d)
+    for k, w in enumerate(words):
+        np.testing.assert_allclose(proj[:, k], dense[:, flat_index(w, d)],
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_dag_projection(rng):
+    d = 3
+    ws = C.dag_words([(0, 1), (1, 2), (2, 0)], d, 3)
+    path = make_path(rng, 2, 8, d)
+    proj = C.projected_signature(path, ws, d)
+    dense = C.signature(path, 3)
+    for k, w in enumerate(ws):
+        np.testing.assert_allclose(proj[:, k], dense[:, flat_index(w, d)],
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_anisotropic_signature(rng):
+    """Def. 7.1: anisotropic = projection onto W^γ_{<=r}."""
+    gamma, r, d = [1.0, 2.0], 4.0, 2
+    ws = C.anisotropic_words(gamma, r)
+    path = make_path(rng, 2, 9, d)
+    proj = C.projected_signature(path, ws, d)
+    dense = C.signature(path, 4)
+    for k, w in enumerate(ws):
+        np.testing.assert_allclose(proj[:, k], dense[:, flat_index(w, d)],
+                                   rtol=1e-4, atol=1e-5)
+    # uniform weights + integer cutoff reduce to plain truncation
+    ws_unif = C.anisotropic_words([1.0] * d, 3.0)
+    assert set(ws_unif) == set(C.all_words(d, 3))
+
+
+def test_logsignature_dense_vs_projected(rng):
+    for d, N in [(2, 4), (3, 3), (2, 6)]:
+        path = make_path(rng, 2, 12, d)
+        a = C.logsignature(path, N)
+        b = C.logsignature_projected(path, N)
+        assert a.shape == (2, C.logsig_dim(d, N))
+        np.testing.assert_allclose(a, b, rtol=1e-3, atol=1e-5)
+
+
+def test_logsignature_level1_is_increment(rng):
+    path = make_path(rng, 2, 9, 3)
+    ls = C.logsignature(path, 3)
+    np.testing.assert_allclose(ls[:, :3], path[:, -1] - path[:, 0],
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_logsignature_bch_two_segments():
+    """log sig of two segments = BCH(a, b): check level 2 = [a,b]/2."""
+    a = np.array([0.3, -0.2], np.float32)
+    b = np.array([0.1, 0.4], np.float32)
+    path = np.stack([np.zeros(2, np.float32), a, a + b])[None]
+    ls = C.logsignature(jnp.asarray(path), 2)
+    # Lyndon basis at d=2, N=2: words (0,), (1,), (0,1)
+    np.testing.assert_allclose(ls[0, :2], a + b, rtol=1e-5, atol=1e-6)
+    area = 0.5 * (a[0] * b[1] - a[1] * b[0])
+    np.testing.assert_allclose(ls[0, 2], area, rtol=1e-4, atol=1e-6)
+
+
+def test_logsig_gradients(rng):
+    path = jnp.asarray(make_path(rng, 1, 7, 2))
+
+    def loss_a(p):
+        return jnp.sum(C.logsignature(p, 4) ** 2)
+
+    def loss_b(p):
+        return jnp.sum(C.logsignature_projected(p, 4) ** 2)
+
+    ga, gb = jax.grad(loss_a)(path), jax.grad(loss_b)(path)
+    np.testing.assert_allclose(ga, gb, rtol=1e-3, atol=1e-4)
+
+
+def test_windowed_signature_matches_slices(rng):
+    path = make_path(rng, 3, 25, 2)
+    wins = np.array([[0, 25], [3, 9], [9, 25], [24, 25]], np.int32)
+    out = C.windowed_signature(path, wins, 3)
+    for k, (l, r) in enumerate(wins):
+        np.testing.assert_allclose(out[:, k], C.signature(path[:, l:r + 1], 3),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_windowed_chen_route_agrees(rng):
+    path = make_path(rng, 2, 20, 2)
+    wins = C.sliding_windows(20, 5, 3)
+    a = C.windowed_signature(path, wins, 3)
+    b = C.windowed_signature_chen(path, wins, 3)
+    np.testing.assert_allclose(a, b, rtol=1e-3, atol=1e-4)
+
+
+def test_window_helpers():
+    e = C.expanding_windows(10, 2)
+    assert (e[:, 0] == 0).all() and list(e[:, 1]) == [2, 4, 6, 8, 10]
+    s = C.sliding_windows(10, 4, 2)
+    assert [tuple(x) for x in s] == [(0, 4), (2, 6), (4, 8), (6, 10)]
+    dy = C.dyadic_windows(8, 3)
+    assert (dy[:, 1] > dy[:, 0]).all()
+
+
+def test_windowed_projection(rng):
+    d = 2
+    plan = make_plan([(0,), (1, 0), (0, 1, 1)], d)
+    path = make_path(rng, 2, 16, d)
+    wins = np.array([[0, 8], [4, 16]], np.int32)
+    out = C.windowed_projection(path, wins, plan)
+    for k, (l, r) in enumerate(wins):
+        want = C.projected_signature(path[:, l:r + 1], plan.words, d, plan=plan)
+        np.testing.assert_allclose(out[:, k], want, rtol=1e-4, atol=1e-5)
+
+
+def test_lead_lag_quadratic_variation(rng):
+    """§8: the lead-lag level-2 area encodes discrete quadratic variation."""
+    d, M = 1, 50
+    path = make_path(rng, 1, M, d, scale=0.2)
+    ll = C.lead_lag(path)                       # channels: [lag, lead]
+    s = C.signature(ll, 2)
+    lvl2 = np.asarray(s[:, 2:]).reshape(1, 2, 2)
+    qv = float(np.sum(np.diff(path[0, :, 0]) ** 2))
+    # antisymmetric part of (lag, lead) block = QV / 2
+    area = float(lvl2[0, 1, 0] - lvl2[0, 0, 1])
+    np.testing.assert_allclose(area, qv, rtol=1e-3, atol=1e-5)

@@ -1,0 +1,123 @@
+"""Signature engine tests: Horner scan vs exp/Chen oracle, algebraic laws."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import repro.core as C
+from repro.core import tensor_ops as tops
+from tests.conftest import make_path
+
+
+@pytest.mark.parametrize("d,N", [(2, 5), (3, 4), (5, 3), (8, 2), (1, 4)])
+def test_horner_matches_oracle(rng, d, N):
+    path = make_path(rng, 4, 17, d)
+    incs = tops.path_increments(jnp.asarray(path))
+    np.testing.assert_allclose(
+        C.signature(path, N), tops.signature_exp_chen(incs, N),
+        rtol=1e-5, atol=1e-5)
+
+
+def test_level1_is_total_increment(rng):
+    path = make_path(rng, 3, 9, 4)
+    s = C.signature(path, 3)
+    np.testing.assert_allclose(s[:, :4], path[:, -1] - path[:, 0],
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_level2_shuffle_identity(rng):
+    """sym(S^(2)) = S^(1) ⊗ S^(1) / 2 — the first shuffle relation."""
+    d = 3
+    path = make_path(rng, 5, 11, d)
+    s = C.signature(path, 2)
+    s1, s2 = s[:, :d], s[:, d:].reshape(-1, d, d)
+    sym = 0.5 * (s2 + np.swapaxes(np.asarray(s2), 1, 2))
+    np.testing.assert_allclose(
+        sym, 0.5 * np.einsum("bi,bj->bij", np.asarray(s1), np.asarray(s1)),
+        rtol=1e-4, atol=1e-5)
+
+
+def test_chen_relation(rng):
+    """S_{0,T} = S_{0,u} ⊗ S_{u,T} (Thm 3.2)."""
+    path = make_path(rng, 2, 20, 3)
+    full = C.signature(path, 4)
+    left = C.signature(path[:, :11], 4)
+    right = C.signature(path[:, 10:], 4)
+    np.testing.assert_allclose(C.signature_combine(left, right, 3, 4), full,
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_time_reversal_inverse(rng):
+    """S(X)^{-1} = S(reversed X) (Lemma 4.5)."""
+    path = make_path(rng, 2, 15, 3)
+    fwd = C.signature(path, 3)
+    bwd = C.signature(path[:, ::-1], 3)
+    np.testing.assert_allclose(C.signature_inverse(fwd, 3, 3), bwd,
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_reparametrisation_invariance(rng):
+    """Signatures are invariant under time reparametrisation (§1)."""
+    path = make_path(rng, 2, 10, 3)
+    # insert a repeated sample (zero increment) — a reparametrisation
+    path2 = np.concatenate([path[:, :5], path[:, 4:5], path[:, 5:]], axis=1)
+    np.testing.assert_allclose(C.signature(path2, 4), C.signature(path, 4),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_single_linear_segment_is_tensor_exponential(rng):
+    """Prop 3.1: one affine segment -> S = exp(ΔX)."""
+    d, N = 4, 5
+    dx = rng.normal(size=(1, d)).astype(np.float32) * 0.5
+    path = np.stack([np.zeros((1, d), np.float32), dx[0][None]], axis=1)
+    s = C.signature(path, N)
+    e = tops.levels_to_flat(tops.tensor_exp(jnp.asarray(dx), N))
+    np.testing.assert_allclose(s, e, rtol=1e-5, atol=1e-6)
+
+
+def test_stream_mode_prefix_signatures(rng):
+    path = make_path(rng, 2, 8, 2)
+    stream = C.signature(path, 3, stream=True)
+    for j in (1, 4, 8):
+        np.testing.assert_allclose(stream[:, j - 1],
+                                   C.signature(path[:, :j + 1], 3),
+                                   rtol=1e-5, atol=1e-6)
+
+
+@given(st.integers(2, 4), st.integers(1, 4), st.integers(2, 12))
+@settings(max_examples=15, deadline=None)
+def test_scaling_property(d, N, M):
+    """S^(n)(λX) = λ^n S^(n)(X) — gradedness property check."""
+    rng = np.random.default_rng(d * 100 + N * 10 + M)
+    path = make_path(rng, 2, M, d)
+    lam = 0.7
+    s1 = np.asarray(C.signature(path, N))
+    s2 = np.asarray(C.signature(lam * path, N))
+    off = 0
+    for n in range(1, N + 1):
+        blk = slice(off, off + d ** n)
+        np.testing.assert_allclose(s2[:, blk], lam ** n * s1[:, blk],
+                                   rtol=1e-4, atol=1e-5)
+        off += d ** n
+
+
+def test_tensor_log_exp_roundtrip(rng):
+    path = make_path(rng, 3, 12, 2)
+    s = tops.flat_to_levels(jnp.asarray(C.signature(path, 4)), 2, 4)
+    logs = tops.tensor_log(s)
+    # exp(log(S)) = S : rebuild exp via series of the log element
+    one = [jnp.zeros_like(l) for l in logs]
+    term = [jnp.zeros_like(l) for l in logs]
+    acc = one
+    term_k = logs
+    acc = [a + t for a, t in zip(acc, term_k)]
+    fact = 1.0
+    power = logs
+    for k in range(2, 5):
+        power = tops.chen_mul(power, logs, a0=0.0, b0=0.0,
+                              min_level_a=k - 1, min_level_b=1)
+        fact *= k
+        acc = [a + p / fact for a, p in zip(acc, power)]
+    for a, b in zip(acc, s):
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5)

@@ -1,0 +1,240 @@
+"""Substrate tests: trainer, checkpointing, optimizers, compression, data
+pipeline, serving engine, HLO accounting."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.models as M
+from repro.checkpoint import Checkpointer, latest_step
+from repro.configs import get_config, reduce_config
+from repro.data.pipeline import ShardedLoader, TokenStream, fbm_paths
+from repro.distributed.hlo import collective_stats, remat_duplication
+from repro.optim import (adafactor, adamw, clip_by_global_norm,
+                         compress_int8, decompress_int8, global_norm,
+                         linear_warmup_cosine, sgd)
+from repro.optim.compression import init_error_state
+from repro.serve import ServeEngine
+from repro.train import TrainLoopConfig, make_train_step, train_loop
+
+KEY = jax.random.PRNGKey(0)
+
+
+def tiny_cfg():
+    import dataclasses
+    return dataclasses.replace(reduce_config(get_config("qwen3-4b")),
+                               n_layers=2, d_model=32, n_heads=2,
+                               n_kv_heads=2, head_dim=16, d_ff=64,
+                               vocab_size=64)
+
+
+# --------------------------------------------------------------- optimizers
+
+@pytest.mark.parametrize("make_opt", [adamw, adafactor, sgd])
+def test_optimizer_reduces_quadratic(make_opt):
+    opt = make_opt(lr=0.1)
+    params = {"w": jnp.ones((4, 130)) * 3.0}    # >=128 cols: adafactor factors
+    state = opt.init(params)
+
+    def loss(p):
+        return jnp.sum(p["w"] ** 2)
+
+    l0 = float(loss(params))
+    for _ in range(25):
+        g = jax.grad(loss)(params)
+        upd, state = opt.update(g, state, params)
+        params = jax.tree.map(jnp.add, params, upd)
+    assert float(loss(params)) < 0.5 * l0
+
+
+def test_schedule_warmup_then_decay():
+    lr = linear_warmup_cosine(1.0, warmup=10, total_steps=100)
+    vals = [float(lr(s)) for s in range(0, 100, 5)]
+    assert vals[0] < vals[1]                 # warming up
+    assert vals[-1] < max(vals)              # decayed
+    assert abs(float(lr(10)) - 1.0) < 1e-6   # peak at end of warmup
+
+
+def test_clip_by_global_norm():
+    tree = {"a": jnp.ones((10,)) * 10.0}
+    clipped, gn = clip_by_global_norm(tree, 1.0)
+    assert abs(float(global_norm(clipped)) - 1.0) < 1e-5
+    assert float(gn) > 1.0
+
+
+# -------------------------------------------------------------- compression
+
+def test_int8_roundtrip_error_bound(rng):
+    x = jnp.asarray(rng.normal(size=(256,)).astype(np.float32))
+    q, s = compress_int8(x)
+    err = jnp.max(jnp.abs(decompress_int8(q, s) - x))
+    assert float(err) <= float(s) * 0.5 + 1e-6   # half-ulp of the int8 grid
+
+
+def test_error_feedback_compensates(rng):
+    """With EF, the *accumulated* quantised signal tracks the accumulated
+    true signal (bias-free compression) — the EF-SGD guarantee."""
+    g = jnp.asarray(rng.normal(size=(64,)).astype(np.float32)) * 1e-3
+    e = jnp.zeros_like(g)
+    acc_q, acc_g = jnp.zeros_like(g), jnp.zeros_like(g)
+    for _ in range(50):
+        q, s = compress_int8(g + e)
+        deq = decompress_int8(q, s)
+        e = (g + e) - deq
+        acc_q = acc_q + deq
+        acc_g = acc_g + g
+    # residual error is bounded by one quantisation step, not 50 of them
+    assert float(jnp.max(jnp.abs(acc_q - acc_g))) <= float(s) + 1e-6
+
+
+# ---------------------------------------------------------------- data pipe
+
+def test_token_stream_deterministic_and_seekable():
+    a = TokenStream(64, 2, 8, seed=3)
+    b1, b2 = next(a), next(a)
+    b = TokenStream(64, 2, 8, seed=3)
+    b.restore({"step": 1, "seed": 3})
+    b2_again = next(b)
+    np.testing.assert_array_equal(b2["tokens"], b2_again["tokens"])
+    assert not np.array_equal(b1["tokens"], b2["tokens"])
+
+
+def test_sharded_loader_splits_batch():
+    s0 = ShardedLoader(TokenStream(64, 4, 8, seed=1), 0, 2)
+    s1 = ShardedLoader(TokenStream(64, 4, 8, seed=1), 1, 2)
+    b0, b1 = next(s0), next(s1)
+    assert b0["tokens"].shape == (2, 8)
+    assert not np.array_equal(b0["tokens"], b1["tokens"])
+    full = next(TokenStream(64, 4, 8, seed=1))
+    np.testing.assert_array_equal(
+        np.concatenate([b0["tokens"], b1["tokens"]]), full["tokens"])
+
+
+def test_fbm_scaling_exponent():
+    """E[X_t^2] = t^(2H): check the generator's covariance structure."""
+    rng = np.random.default_rng(0)
+    for H in (0.3, 0.7):
+        X = fbm_paths(rng, 400, 64, H, d=1)
+        var_half = np.var(X[:, 32, 0])
+        var_full = np.var(X[:, 64, 0])
+        est = 0.5 * np.log2(var_full / var_half)   # t doubles: ratio = 2^{2H}
+        assert abs(est - H) < 0.12, (H, est)
+
+
+# ------------------------------------------------------------ checkpointing
+
+def test_checkpoint_roundtrip_and_gc(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=2, async_save=False)
+    params = {"w": jnp.arange(6.0).reshape(2, 3)}
+    opt_state = {"m": jnp.ones((2, 3)), "step": jnp.int32(7)}
+    for step in (1, 2, 3):
+        ck.save(params, opt_state, step, extra={"data_step": step * 10})
+    assert latest_step(str(tmp_path)) == 3
+    assert sorted(os.listdir(tmp_path)) == ["step_2", "step_3"]  # gc keep=2
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    zstate = jax.tree.map(jnp.zeros_like, opt_state)
+    p, s, extra = ck.restore(zeros, zstate, 3)
+    np.testing.assert_array_equal(p["w"], params["w"])
+    np.testing.assert_array_equal(s["step"], opt_state["step"])
+    assert extra == {"data_step": 30}
+
+
+def test_checkpoint_async_save(tmp_path):
+    ck = Checkpointer(str(tmp_path), async_save=True)
+    params = {"w": jnp.ones((4,))}
+    ck.save(params, {"v": jnp.zeros((4,))}, 5)
+    ck.wait()
+    assert latest_step(str(tmp_path)) == 5
+
+
+# ------------------------------------------------------------------ trainer
+
+def test_microbatch_accumulation_matches_full_batch():
+    cfg = tiny_cfg()
+    params = M.init_params(KEY, cfg, jnp.float32)
+    opt = sgd(lr=0.0)   # lr=0: isolate the gradient computation
+    batch = {"tokens": jnp.ones((4, 8), jnp.int32),
+             "labels": jnp.arange(32, dtype=jnp.int32).reshape(4, 8) % 64}
+    full = make_train_step(cfg, opt, microbatch=0)
+    acc = make_train_step(cfg, opt, microbatch=2)
+    _, _, m_full = jax.jit(full)(params, opt.init(params), batch)
+    _, _, m_acc = jax.jit(acc)(params, opt.init(params), batch)
+    assert abs(float(m_full["loss"]) - float(m_acc["loss"])) < 1e-4
+    np.testing.assert_allclose(float(m_full["grad_norm"]),
+                               float(m_acc["grad_norm"]), rtol=1e-3)
+
+
+def test_train_loop_with_restart(tmp_path):
+    cfg = tiny_cfg()
+    params = M.init_params(KEY, cfg, jnp.float32)
+    opt = adamw(lr=1e-3)
+    stream = TokenStream(cfg.vocab_size, 2, 8, seed=0)
+    ck = Checkpointer(str(tmp_path), async_save=False)
+    loop = TrainLoopConfig(steps=4, log_every=1, ckpt_every=2)
+    params, opt_state, hist = train_loop(cfg, params, opt, iter(stream),
+                                         loop, checkpointer=ck)
+    assert latest_step(str(tmp_path)) == 4      # exit save
+    assert len(hist) >= 2
+    # restart from step 2 and run to 4 — must not raise, losses finite
+    p2 = M.init_params(jax.random.PRNGKey(9), cfg, jnp.float32)
+    loop2 = TrainLoopConfig(steps=4, log_every=1)
+    stream2 = TokenStream(cfg.vocab_size, 2, 8, seed=0, step=2)
+    params2, _, hist2 = train_loop(cfg, p2, opt, iter(stream2), loop2,
+                                   checkpointer=ck, start_step=2)
+    assert all(np.isfinite(h["loss"]) for h in hist2)
+
+
+# ------------------------------------------------------------------ serving
+
+def test_serve_engine_greedy_deterministic():
+    cfg = tiny_cfg()
+    params = M.init_params(KEY, cfg, jnp.float32)
+    eng = ServeEngine(cfg, params, max_len=32, temperature=0.0)
+    prompts = jnp.asarray([[1, 2, 3], [4, 5, 6]], jnp.int32)
+    out1 = eng.generate(prompts, 8)
+    out2 = eng.generate(prompts, 8)
+    np.testing.assert_array_equal(out1, out2)
+    assert out1.shape == (2, 3 + 8)
+    assert int(out1.max()) < cfg.vocab_size
+
+
+def test_serve_engine_eos_freezes():
+    cfg = tiny_cfg()
+    params = M.init_params(KEY, cfg, jnp.float32)
+    eng = ServeEngine(cfg, params, max_len=32, temperature=0.0, eos_id=0)
+    out = eng.generate(jnp.asarray([[1, 2]], jnp.int32), 12)
+    toks = out[0, 2:].tolist()
+    if 0 in toks:                                # once EOS appears, it stays
+        first = toks.index(0)
+        assert all(t == 0 for t in toks[first:])
+
+
+# -------------------------------------------------------------- HLO parsing
+
+HLO_SAMPLE = """
+HloModule test
+  %ag = bf16[64,128] all-gather(%x), replica_groups=[2,8]<=[16], dimensions={0}
+  %ar = f32[1024] all-reduce(%y), replica_groups={{0,1,2,3}}, to_apply=%add
+  %cp = f32[16] collective-permute(%z), source_target_pairs={{0,1}}
+  %dot1 = f32[8,8] dot(%a, %b)
+  %dot2 = f32[8,8] dot(%a, %b)
+"""
+
+
+def test_collective_stats_parses_kinds():
+    st = collective_stats(HLO_SAMPLE, default_group=4)
+    assert set(st.by_kind) == {"all-gather", "all-reduce",
+                               "collective-permute"}
+    ag = st.by_kind["all-gather"]
+    assert ag[0] == 1 and ag[1] == 64 * 128 * 2          # bf16 result bytes
+    assert abs(ag[2] - ag[1] * 7 / 8) < 1e-6             # ring, group of 8
+    ar = st.by_kind["all-reduce"]
+    assert ar[1] == 4096 and abs(ar[2] - 2 * 4096 * 3 / 4) < 1e-6
+    assert st.total_wire_bytes > 0
+
+
+def test_remat_duplication_counts_duplicate_dots():
+    assert remat_duplication(HLO_SAMPLE) == 2.0
+    assert remat_duplication("no dots here") == 1.0

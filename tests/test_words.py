@@ -1,0 +1,152 @@
+"""Word algebra unit + property tests (paper §2.3, Appendix A)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import words as W
+
+
+# ---------------------------------------------------------------------------
+# encoding (Appendix A)
+# ---------------------------------------------------------------------------
+
+@given(st.integers(2, 6), st.lists(st.integers(0, 5), min_size=0, max_size=8))
+def test_encode_decode_roundtrip(d, letters):
+    word = tuple(l % d for l in letters)
+    assert W.decode(W.encode(word, d), len(word), d) == word
+
+
+@given(st.integers(2, 5), st.integers(1, 5), st.data())
+def test_encode_preserves_lex_order(d, n, data):
+    w1 = tuple(data.draw(st.integers(0, d - 1)) for _ in range(n))
+    w2 = tuple(data.draw(st.integers(0, d - 1)) for _ in range(n))
+    if w1 < w2:
+        assert W.encode(w1, d) < W.encode(w2, d)  # Prop. A.2
+
+
+@given(st.integers(2, 5), st.data())
+def test_concat_prefix_suffix_codes(d, data):
+    u = tuple(data.draw(st.integers(0, d - 1))
+              for _ in range(data.draw(st.integers(1, 4))))
+    v = tuple(data.draw(st.integers(0, d - 1))
+              for _ in range(data.draw(st.integers(1, 4))))
+    cu, cv = W.encode(u, d), W.encode(v, d)
+    cw = W.concat_codes(cu, cv, len(v), d)          # Prop. A.3
+    assert cw == W.encode(u + v, d)
+    assert W.prefix_code(cw, len(u) + len(v), len(u), d) == cu   # Cor. A.4
+    assert W.suffix_code(cw, len(v), d) == cv                    # Cor. A.5
+
+
+def test_sig_dim_and_offsets():
+    assert W.sig_dim(3, 4) == 3 + 9 + 27 + 81
+    offs = W.level_offsets(3, 4)
+    assert offs[1] == 0 and offs[2] == 3 and offs[3] == 12 and offs[4] == 39
+    assert W.flat_index((1, 2), 3) == 3 + 1 * 3 + 2
+
+
+# ---------------------------------------------------------------------------
+# word-set constructors (paper §7)
+# ---------------------------------------------------------------------------
+
+def test_all_words_counts():
+    assert len(W.all_words(4, 3)) == 4 + 16 + 64
+
+
+def test_lyndon_counts_match_necklace_formula():
+    # Witt formula: L_n(d) = (1/n) sum_{e|n} mu(e) d^{n/e}
+    def mobius(n):
+        if n == 1:
+            return 1
+        p, m, r = 2, n, 1
+        while p * p <= m:
+            if m % p == 0:
+                m //= p
+                if m % p == 0:
+                    return 0
+                r = -r
+            p += 1
+        if m > 1:
+            r = -r
+        return r
+
+    for d in (2, 3, 5):
+        lw = W.lyndon_words(d, 6)
+        for n in range(1, 7):
+            want = sum(mobius(e) * d ** (n // e)
+                       for e in range(1, n + 1) if n % e == 0) // n
+            got = sum(1 for w in lw if len(w) == n)
+            assert got == want, (d, n, got, want)
+
+
+def test_lyndon_words_are_lyndon():
+    for w in W.lyndon_words(3, 5):
+        rotations = [w[i:] + w[:i] for i in range(1, len(w))]
+        assert all(w < r for r in rotations), w
+
+
+@given(st.integers(2, 4), st.lists(
+    st.floats(0.5, 3.0, allow_nan=False), min_size=2, max_size=4),
+    st.floats(1.0, 5.0, allow_nan=False))
+@settings(max_examples=25, deadline=None)
+def test_anisotropic_sets_prefix_closed_and_correct(d, gamma, r):
+    gamma = gamma[:d] + [1.0] * max(0, d - len(gamma))
+    ws = W.anisotropic_words(gamma[:d], r)
+    s = set(ws)
+    for w in ws:
+        assert sum(gamma[i] for i in w) <= r + 1e-9
+        for k in range(1, len(w)):
+            assert w[:k] in s  # prefix-closed (Def. 3.3)
+
+
+def test_dag_words_respect_edges():
+    ws = W.dag_words([(0, 1), (1, 2)], 3, 3)
+    assert (0, 1, 2) in ws and (0, 2) not in ws and (2,) in ws
+
+
+def test_generated_words_sparse_leadlag():
+    from repro.core.transforms import sparse_leadlag_generators
+    gens = sparse_leadlag_generators(2)     # d=2 -> alphabet size 4
+    ws = W.generated_words(gens, 4)
+    # redundancy reduction claim of §8: strictly sparser than truncation
+    assert len(ws) < len(W.all_words(4, 4))
+    assert (2,) in ws and (0, 2) in ws and (0, 1) not in ws
+
+
+# ---------------------------------------------------------------------------
+# plans & tiling (paper §3.1-3.2)
+# ---------------------------------------------------------------------------
+
+@given(st.integers(2, 4), st.data())
+@settings(max_examples=30, deadline=None)
+def test_plan_invariants(d, data):
+    n_words = data.draw(st.integers(1, 12))
+    ws = [tuple(data.draw(st.integers(0, d - 1))
+                for _ in range(data.draw(st.integers(1, 5))))
+          for _ in range(n_words)]
+    plan = W.make_plan(ws, d)
+    closure = set(plan.closure)
+    for w in plan.closure:
+        for k in range(1, len(w)):
+            assert w[:k] in closure
+    # the Horner tables: divisor at step j is 1/(n-j) (paper Alg. 1)
+    for r, w in enumerate(plan.closure):
+        n = len(w)
+        for j in range(n):
+            assert plan.inv[r, j] == pytest.approx(1.0 / (n - j))
+            assert plan.letters[r, j] == w[j]
+        assert plan.emit[r, n - 1] == 1.0
+
+
+@given(st.integers(2, 3), st.integers(8, 64))
+@settings(max_examples=10, deadline=None)
+def test_tiled_plan_covers_and_is_prefix_closed(d, max_rows):
+    ws = W.all_words(d, 3)
+    tp = W.make_tiled_plan(ws, d, max_rows=max_rows)
+    covered = set()
+    for t in tp.tiles:
+        cs = set(t.closure)
+        for w in t.closure:
+            for k in range(1, len(w)):
+                assert w[:k] in cs
+        covered.update(t.words)
+    assert covered == set(ws)
