@@ -14,7 +14,10 @@ that pay fixed overhead K times.  Compared engines:
 """
 from __future__ import annotations
 
+import os
+
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (sliding_windows, windowed_signature,
@@ -22,6 +25,8 @@ from repro.core import (sliding_windows, windowed_signature,
 from repro.core.signature import signature_from_increments
 from repro.core import tensor_ops as tops
 from .common import header, make_paths, row, time_fn
+
+BACKEND = os.environ.get("PATHSIG_BACKEND", "auto")
 
 
 @jax.jit
@@ -52,8 +57,16 @@ def run(quick: bool = True) -> None:
         windows = sliding_windows(M, wlen, stride=wlen // 2)[:K]
         assert windows.shape[0] == K, (windows.shape, K)
 
-        batched = jax.jit(lambda p: windowed_signature(p, windows, N))
+        # one call through the engine dispatch: windows folded into batch
+        batched = jax.jit(lambda p: windowed_signature(p, windows, N,
+                                                       backend=BACKEND))
         t_b = time_fn(batched, path, warmup=1, iters=iters)
+        # training path: kernel forward + inverse-reconstruction backward
+        # through the same dispatch, per window
+        train = jax.jit(jax.grad(lambda p: jnp.sum(
+            windowed_signature(p, windows, N, backend=BACKEND,
+                               backward="inverse") ** 2)))
+        t_t = time_fn(train, path, warmup=1, iters=iters)
         chen = jax.jit(lambda p: windowed_signature_chen(p, windows, N))
         t_c = time_fn(chen, path, warmup=1, iters=iters)
         per_window = _make_per_window(N)
@@ -62,6 +75,7 @@ def run(quick: bool = True) -> None:
 
         tag = f"B={B};K={K};wlen={wlen};d={d};N={N}"
         row("fig3/batched", f"{t_b*1e3:.3f}", "ms", tag)
+        row("fig3/batched_train", f"{t_t*1e3:.3f}", "ms", tag)
         row("fig3/per_window", f"{t_p*1e3:.3f}", "ms", tag)
         row("fig3/chen_stream", f"{t_c*1e3:.3f}", "ms", tag)
         row("fig3/speedup_vs_per_window", f"{t_p/t_b:.1f}", "x", tag)

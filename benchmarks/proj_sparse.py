@@ -9,15 +9,18 @@ here (they are combinatorial facts, device-independent).
 """
 from __future__ import annotations
 
+import os
+
 import jax
 import jax.numpy as jnp
 
 from repro.core import (dag_words, generated_words, lead_lag, make_plan,
                         sig_dim, sparse_leadlag_generators)
-from repro.core.projection import projected_signature_from_increments
-from repro.core.signature import signature_from_increments
 from repro.core import tensor_ops as tops
+from repro.kernels import ops
 from .common import header, make_paths, row, time_fn
+
+BACKEND = os.environ.get("PATHSIG_BACKEND", "auto")
 
 
 def run(quick: bool = True) -> None:
@@ -38,9 +41,11 @@ def run(quick: bool = True) -> None:
     row("proj/leadlag/closure_size", plan.closure_size, "coeffs",
         f"{tag};computed coefficients incl. prefix closure")
 
-    full = jax.jit(lambda x: signature_from_increments(x, N))
-    sparse = jax.jit(
-        lambda x: projected_signature_from_increments(x, plan))
+    # both routes go through the engine dispatch (repro.kernels.ops): the
+    # forward is the resolved backend's kernel, the backward the §4.2
+    # inverse reconstruction — forward benchmark == trained path.
+    full = jax.jit(lambda x: ops.signature(x, N, backend=BACKEND))
+    sparse = jax.jit(lambda x: ops.projected(x, plan, backend=BACKEND))
     t_full = time_fn(full, incs, warmup=1, iters=iters)
     t_sparse = time_fn(sparse, incs, warmup=1, iters=iters)
     row("proj/leadlag/full", f"{t_full*1e3:.3f}", "ms", tag)
@@ -48,9 +53,9 @@ def run(quick: bool = True) -> None:
     row("proj/leadlag/speedup", f"{t_full/t_sparse:.2f}", "x", tag)
 
     g_full = jax.jit(jax.grad(
-        lambda x: jnp.sum(signature_from_increments(x, N) ** 2)))
+        lambda x: jnp.sum(ops.signature(x, N, backend=BACKEND) ** 2)))
     g_sparse = jax.jit(jax.grad(
-        lambda x: jnp.sum(projected_signature_from_increments(x, plan) ** 2)))
+        lambda x: jnp.sum(ops.projected(x, plan, backend=BACKEND) ** 2)))
     tg_full = time_fn(g_full, incs, warmup=1, iters=iters)
     tg_sparse = time_fn(g_sparse, incs, warmup=1, iters=iters)
     row("proj/leadlag/train_speedup", f"{tg_full/tg_sparse:.2f}", "x", tag)
@@ -64,8 +69,8 @@ def run(quick: bool = True) -> None:
     tag2 = f"d={d2};N={N2};band=1"
     row("proj/dag/full_dim", sig_dim(d2, N2), "coeffs", tag2)
     row("proj/dag/dag_dim", len(words2), "coeffs", tag2)
-    full2 = jax.jit(lambda x: signature_from_increments(x, N2))
-    dag = jax.jit(lambda x: projected_signature_from_increments(x, plan2))
+    full2 = jax.jit(lambda x: ops.signature(x, N2, backend=BACKEND))
+    dag = jax.jit(lambda x: ops.projected(x, plan2, backend=BACKEND))
     t_f2 = time_fn(full2, incs2, warmup=1, iters=iters)
     t_d2 = time_fn(dag, incs2, warmup=1, iters=iters)
     row("proj/dag/speedup", f"{t_f2/t_d2:.2f}", "x", tag2)

@@ -2,12 +2,18 @@
 
 Compares three in-repo engines on identical workloads:
 
-- ``pathsig``    — word-basis levelwise Horner scan + inverse-reconstruction
-                   VJP (the paper's algorithm; repro.core.signature).
+- ``pathsig``    — the engine dispatch (repro.kernels.ops): the resolved
+                   backend's forward (Pallas kernel on TPU, levelwise Horner
+                   scan elsewhere) + inverse-reconstruction VJP, i.e. the
+                   paper's algorithm exactly as the training path runs it.
 - ``exp_chen``   — materialise exp(ΔX_j), Chen-multiply (the textbook
                    recursion the paper replaces; iisignature/esig shape).
 - ``cumulative`` — keras_sig-style: keep ALL prefix signatures S_{0,t_j}
                    and autodiff through them (O(B·M·D) memory/time shape).
+
+``PATHSIG_BACKEND`` (env; default ``auto``) pins the dispatch backend, so
+``PATHSIG_BACKEND=pallas_interpret`` exercises the kernel forward with the
+§4.2 backward even on CPU (slow: interpret mode).
 
 The paper's claims validated here (as CPU ratios, not H200 wall-clock):
 speedup grows with depth N; pathsig advantage shrinks with M (it does not
@@ -15,15 +21,20 @@ parallelise the time axis) but holds; training (fwd+bwd) gap persists.
 """
 from __future__ import annotations
 
+import os
+
 import jax
 import jax.numpy as jnp
 
 from repro.core import tensor_ops as tops
-from repro.core.signature import signature_from_increments
+from repro.kernels import ops
 from .common import header, make_paths, row, time_fn
 
+BACKEND = os.environ.get("PATHSIG_BACKEND", "auto")
+
 ENGINES = {
-    "pathsig": lambda incs, depth: signature_from_increments(incs, depth),
+    "pathsig": lambda incs, depth: ops.signature(
+        incs, depth, backend=BACKEND, backward="inverse"),
     "exp_chen": lambda incs, depth: tops.signature_exp_chen(incs, depth),
     "cumulative": lambda incs, depth: tops.signature_cumulative(
         incs, depth)[-1],
@@ -51,7 +62,8 @@ SWEEP_BATCH = [(b, 200, 10, 3) for b in (1, 16, 64, 128)]
 
 
 def run(quick: bool = True) -> None:
-    header("table1: truncated signature runtime (paper Table 1 / Fig 1)")
+    header(f"table1: truncated signature runtime (paper Table 1 / Fig 1); "
+           f"pathsig backend={BACKEND}")
     cells = SWEEP_DEPTH + SWEEP_SEQLEN + SWEEP_BATCH
     iters = 3 if quick else 10
     for B, M, d, N in cells:

@@ -38,16 +38,22 @@ def _lyndon_flat_indices(d: int, depth: int) -> np.ndarray:
 
 
 def logsignature(path: jax.Array, depth: int, *, basepoint: bool = False,
-                 backward: str = "inverse") -> jax.Array:
-    """Dense route: log of the full truncated signature at Lyndon words."""
+                 backward: str = "inverse",
+                 backend: str = "jax") -> jax.Array:
+    """Dense route: log of the full truncated signature at Lyndon words.
+
+    The underlying truncated signature rides the engine dispatch
+    (:mod:`repro.kernels.ops`); the tensor log is plain jnp algebra, so the
+    whole route stays differentiable on every backend.
+    """
     if path.ndim == 2:
         return logsignature(path[None], depth, basepoint=basepoint,
-                            backward=backward)[0]
+                            backward=backward, backend=backend)[0]
     if basepoint:
         path = jnp.concatenate([jnp.zeros_like(path[:, :1]), path], axis=1)
     d = path.shape[-1]
     flat = signature_from_increments(tops.path_increments(path), depth,
-                                     backward=backward)
+                                     backward=backward, backend=backend)
     logs = tops.tensor_log(tops.flat_to_levels(flat, d, depth))
     log_flat = tops.levels_to_flat(logs)
     return jnp.take(log_flat, jnp.asarray(_lyndon_flat_indices(d, depth)),
@@ -107,18 +113,29 @@ def _projected_tables(d: int, depth: int):
 
 def logsignature_projected(path: jax.Array, depth: int, *,
                            basepoint: bool = False,
-                           backward: str = "inverse") -> jax.Array:
-    """Paper route: never materialises non-Lyndon level-N coefficients."""
+                           backward: str = "inverse",
+                           backend: str = "jax") -> jax.Array:
+    """Paper route: never materialises non-Lyndon level-N coefficients.
+
+    On the jax engine the hybrid dense+top engine computes the §3.3 word set;
+    on the pallas engines the word kernel runs over the same plan via the
+    dispatch layer, with the §4.2 inverse-reconstruction backward.
+    """
     if path.ndim == 2:
         return logsignature_projected(path[None], depth, basepoint=basepoint,
-                                      backward=backward)[0]
+                                      backward=backward, backend=backend)[0]
     if basepoint:
         path = jnp.concatenate([jnp.zeros_like(path[:, :1]), path], axis=1)
     d = path.shape[-1]
     plan, comp_idx, comp_coef, comp_tgt, top_rows, low_rows, lown = \
         _projected_tables(d, depth)
     incs = tops.path_increments(path)
-    if depth >= 2:
+    from repro.kernels import ops  # deferred: ops imports this package
+    engine, _ = ops.resolve_backend(backend)
+    if engine != "jax":
+        coeffs = ops.projected(incs, plan, backend=backend,
+                               backward=backward)            # (B, |I|)
+    elif depth >= 2:
         # hybrid engine (§Perf kernel note): dense reshape-broadcast Horner
         # for W_{<=N-1}, per-word chains only for Lyndon_N.  plan.words is
         # all_words(N-1) ++ Lyndon_N in exactly the hybrid output order.

@@ -16,6 +16,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .signature import _fold_chunks, default_chunk
 from .words import WordPlan, make_plan
 from . import tensor_ops as tops
 
@@ -64,6 +65,39 @@ def _scan_projected(increments: jax.Array, plan: WordPlan,
     return jnp.take(final, out_rows, axis=1)
 
 
+def _closure_init(B: int, plan: WordPlan, dtype) -> jax.Array:
+    return jnp.concatenate([jnp.ones((B, 1), dtype),
+                            jnp.zeros((B, plan.closure_size), dtype)], axis=1)
+
+
+def projected_inverse_bwd_scan(increments: jax.Array, S_T: jax.Array,
+                               g_out: jax.Array, plan: WordPlan) -> jax.Array:
+    """§4.2 backward for word projections: invert the closure update step by
+    step (the closure is prefix-closed, so the inverse step is exact) while
+    accumulating cotangents.  ``S_T`` is the terminal closure buffer
+    (B, 1 + W); any forward that produces it (JAX scan or the Pallas word
+    kernel run over the closure) can pair with this backward."""
+    tables = _plan_tables(plan)
+
+    def step_fn(S, dx):
+        return projected_step(S, dx, *tables)
+
+    # scatter the projection cotangent back onto the closure buffer
+    G_T = jnp.zeros_like(S_T).at[:, jnp.asarray(plan.out_rows)].add(g_out)
+
+    def step(carry, dx):
+        S, G = carry
+        S_prev = step_fn(S, -dx)
+        _, vjp_fn = jax.vjp(step_fn, S_prev, dx)
+        G_prev, g_dx = vjp_fn(G)
+        return (S_prev, G_prev), g_dx
+
+    (_, _), g_rev = jax.lax.scan(step, (S_T, G_T),
+                                 jnp.moveaxis(increments, 1, 0),
+                                 reverse=True)
+    return jnp.moveaxis(g_rev, 0, 1)
+
+
 @lru_cache(maxsize=None)
 def _make_projected_vjp(plan: WordPlan):
     tables = _plan_tables(plan)
@@ -81,30 +115,68 @@ def _make_projected_vjp(plan: WordPlan):
         def step(S, dx):
             return step_fn(S, dx), None
 
-        S0 = jnp.concatenate(
-            [jnp.ones((B, 1), increments.dtype),
-             jnp.zeros((B, plan.closure_size), increments.dtype)], axis=1)
+        S0 = _closure_init(B, plan, increments.dtype)
         S_T, _ = jax.lax.scan(step, S0, jnp.moveaxis(increments, 1, 0))
         out = jnp.take(S_T, jnp.asarray(plan.out_rows), axis=1)
         return out, (increments, S_T)
 
     def bwd(res, g_out):
         increments, S_T = res
+        return (projected_inverse_bwd_scan(increments, S_T, g_out, plan),)
+
+    proj.defvjp(fwd, bwd)
+    return proj
+
+
+@lru_cache(maxsize=None)
+def _make_projected_checkpoint_vjp(plan: WordPlan, chunk: int):
+    """√M-checkpoint VJP for projections (beyond paper): store closure states
+    at chunk boundaries, recompute within chunks on the backward — immune to
+    inverse-reconstruction drift on very long paths."""
+    tables = _plan_tables(plan)
+
+    def chunk_fn(S, incs):  # incs: (c, B, d)
+        def step(S, dx):
+            return projected_step(S, dx, *tables), None
+        out, _ = jax.lax.scan(step, S, incs)
+        return out
+
+    def fold(increments):
+        return _fold_chunks(increments, chunk)
+
+    @jax.custom_vjp
+    def proj(increments):
+        return _scan_projected(increments, plan, stream=False)
+
+    def fwd(increments):
         B, M, d = increments.shape
-        # scatter the projection cotangent back onto the closure buffer
-        G_T = jnp.zeros_like(S_T).at[:, jnp.asarray(plan.out_rows)].add(g_out)
+        incs = fold(increments)
 
-        def step(carry, dx):
-            S, G = carry
-            S_prev = step_fn(S, -dx)                   # closure is prefix-closed,
-            _, vjp_fn = jax.vjp(step_fn, S_prev, dx)   # so the inverse step is exact
-            G_prev, g_dx = vjp_fn(G)
-            return (S_prev, G_prev), g_dx
+        def outer(S, c_incs):
+            return chunk_fn(S, c_incs), S  # boundary BEFORE the chunk
 
-        (_, _), g_rev = jax.lax.scan(step, (S_T, G_T),
-                                     jnp.moveaxis(increments, 1, 0),
-                                     reverse=True)
-        return (jnp.moveaxis(g_rev, 0, 1),)
+        S_T, boundaries = jax.lax.scan(outer, _closure_init(
+            B, plan, increments.dtype), incs)
+        out = jnp.take(S_T, jnp.asarray(plan.out_rows), axis=1)
+        return out, (increments, boundaries)
+
+    def bwd(res, g_out):
+        increments, boundaries = res
+        B, M, d = increments.shape
+        incs = fold(increments)
+        n_chunks = incs.shape[0]
+        G = jnp.zeros((B, 1 + plan.closure_size), g_out.dtype
+                      ).at[:, jnp.asarray(plan.out_rows)].add(g_out)
+
+        def outer(G, xs):
+            bound, c_incs = xs
+            _, vjp_fn = jax.vjp(chunk_fn, bound, c_incs)
+            G_prev, g_incs = vjp_fn(G)
+            return G_prev, g_incs
+
+        _, g_rev = jax.lax.scan(outer, G, (boundaries, incs), reverse=True)
+        g = jnp.moveaxis(g_rev.reshape(n_chunks * chunk, B, d), 0, 1)
+        return (g[:, :M],)
 
     proj.defvjp(fwd, bwd)
     return proj
@@ -113,13 +185,26 @@ def _make_projected_vjp(plan: WordPlan):
 def projected_signature_from_increments(increments: jax.Array,
                                         plan: WordPlan, *,
                                         stream: bool = False,
-                                        backward: str = "inverse") -> jax.Array:
-    """π_I(S_{0,T}(X)) for the plan's word set I.  (B, M, d) -> (B, |I|)."""
+                                        backward: str = "inverse",
+                                        backend: str = "jax") -> jax.Array:
+    """π_I(S_{0,T}(X)) for the plan's word set I.  (B, M, d) -> (B, |I|).
+
+    ``backend`` other than ``"jax"`` routes through the engine dispatch in
+    :mod:`repro.kernels.ops`; ``stream=True`` always uses the JAX scan.
+    """
     increments, squeeze = _as_batched(increments)
+    if backend != "jax" and not stream:
+        from repro.kernels import ops  # deferred: ops imports this module
+        out = ops.projected(increments, plan, backend=backend,
+                            backward=backward)
+        return out[0] if squeeze else out
     if stream or backward == "autodiff":
         out = _scan_projected(increments, plan, stream=stream)
     elif backward == "inverse":
         out = _make_projected_vjp(plan)(increments)
+    elif backward == "checkpoint":
+        out = _make_projected_checkpoint_vjp(
+            plan, default_chunk(increments.shape[1]))(increments)
     else:
         raise ValueError(f"unknown backward mode {backward!r}")
     return out[0] if squeeze else out
@@ -127,7 +212,8 @@ def projected_signature_from_increments(increments: jax.Array,
 
 def projected_signature(path: jax.Array, words, d: int | None = None, *,
                         plan: WordPlan | None = None, stream: bool = False,
-                        backward: str = "inverse") -> jax.Array:
+                        backward: str = "inverse",
+                        backend: str = "jax") -> jax.Array:
     """Signature coefficients of an arbitrary word set (paper §7.1).
 
     ``words`` is an iterable of letter tuples (0-based) or a prebuilt plan.
@@ -139,7 +225,8 @@ def projected_signature(path: jax.Array, words, d: int | None = None, *,
         plan = make_plan(tuple(tuple(w) for w in words), d)
     incs = tops.path_increments(path)
     out = projected_signature_from_increments(incs, plan, stream=stream,
-                                              backward=backward)
+                                              backward=backward,
+                                              backend=backend)
     return out[0] if squeeze else out
 
 

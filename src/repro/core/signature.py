@@ -61,6 +61,30 @@ def _scan_forward(increments: jax.Array, depth: int,
 # custom VJP: inverse reconstruction (paper §4.2)
 # ---------------------------------------------------------------------------
 
+def inverse_bwd_scan(increments: jax.Array, out_flat: jax.Array,
+                     g_flat: jax.Array, depth: int) -> jax.Array:
+    """§4.2 backward sweep: reconstruct S_{0,t_{j-1}} = S_{0,t_j} ⊗ exp(-ΔX_j)
+    and accumulate cotangents in one reverse scan.
+
+    Engine-agnostic: any forward producing ``out_flat`` (pure-JAX scan or a
+    Pallas kernel) can pair with this backward — memory stays O(B·D_sig).
+    """
+    B, M, d = increments.shape
+    S_T = tops.flat_to_levels(out_flat, d, depth)
+    G_T = tops.flat_to_levels(g_flat, d, depth)
+
+    def step(carry, dx):
+        S, G = carry  # S = S_{0,t_j}, G = ∂L/∂S_{0,t_j}
+        S_prev = tops.horner_step(S, -dx)          # Prop. 4.6
+        _, vjp_fn = jax.vjp(tops.horner_step, S_prev, dx)
+        G_prev, g_dx = vjp_fn(G)
+        return (S_prev, G_prev), g_dx
+
+    (_, _), g_rev = jax.lax.scan(
+        step, (S_T, G_T), jnp.moveaxis(increments, 1, 0), reverse=True)
+    return jnp.moveaxis(g_rev, 0, 1)
+
+
 @lru_cache(maxsize=None)
 def _make_inverse_vjp(depth: int):
     @jax.custom_vjp
@@ -73,20 +97,7 @@ def _make_inverse_vjp(depth: int):
 
     def bwd(res, g_flat):
         increments, out_flat = res
-        B, M, d = increments.shape
-        S_T = tops.flat_to_levels(out_flat, d, depth)
-        G_T = tops.flat_to_levels(g_flat, d, depth)
-
-        def step(carry, dx):
-            S, G = carry  # S = S_{0,t_j}, G = ∂L/∂S_{0,t_j}
-            S_prev = tops.horner_step(S, -dx)          # Prop. 4.6
-            _, vjp_fn = jax.vjp(tops.horner_step, S_prev, dx)
-            G_prev, g_dx = vjp_fn(G)
-            return (S_prev, G_prev), g_dx
-
-        (_, _), g_rev = jax.lax.scan(
-            step, (S_T, G_T), jnp.moveaxis(increments, 1, 0), reverse=True)
-        return (jnp.moveaxis(g_rev, 0, 1),)
+        return (inverse_bwd_scan(increments, out_flat, g_flat, depth),)
 
     sig.defvjp(fwd, bwd)
     return sig
@@ -96,27 +107,59 @@ def _make_inverse_vjp(depth: int):
 # custom VJP: sqrt(M) checkpointing (beyond paper)
 # ---------------------------------------------------------------------------
 
+def _chunk_scan(levels, incs, depth: int):
+    """Advance a levels state through one chunk of increments (c, B, d)."""
+    def step(lv, dx):
+        return tops.horner_step(lv, dx), None
+    out, _ = jax.lax.scan(step, levels, incs)
+    return out
+
+
+def _fold_chunks(increments: jax.Array, chunk: int):
+    """(B, M, d) -> time-major (n_chunks, chunk, B, d), zero-padded."""
+    B, M, d = increments.shape
+    n_chunks = -(-M // chunk)
+    pad = n_chunks * chunk - M
+    incs = jnp.pad(increments, ((0, 0), (0, pad), (0, 0)))  # zero incs = identity
+    return jnp.moveaxis(incs, 1, 0).reshape(n_chunks, chunk, B, d)
+
+
+def checkpoint_bwd_scan(increments: jax.Array, boundaries, g_flat: jax.Array,
+                        depth: int, chunk: int) -> jax.Array:
+    """√M-checkpoint backward: recompute within chunks from stored boundary
+    states (levels stacked along a leading n_chunks axis).  Shared by the
+    pure-JAX and Pallas-forward checkpoint VJPs."""
+    B, M, d = increments.shape
+    incs = _fold_chunks(increments, chunk)
+    n_chunks = incs.shape[0]
+    G = tops.flat_to_levels(g_flat, d, depth)
+
+    def chunk_fn(levels, c_incs):
+        return _chunk_scan(levels, c_incs, depth)
+
+    def outer(G, xs):
+        bound, c_incs = xs
+        _, vjp_fn = jax.vjp(chunk_fn, bound, c_incs)
+        G_prev, g_incs = vjp_fn(G)
+        return G_prev, g_incs
+
+    _, g_rev = jax.lax.scan(outer, G, (boundaries, incs), reverse=True)
+    g = jnp.moveaxis(g_rev.reshape(n_chunks * chunk, B, d), 0, 1)
+    return g[:, :M]
+
+
 @lru_cache(maxsize=None)
 def _make_checkpoint_vjp(depth: int, chunk: int):
-    def chunk_fn(levels, incs):  # incs: (c, B, d)
-        def step(lv, dx):
-            return tops.horner_step(lv, dx), None
-        out, _ = jax.lax.scan(step, levels, incs)
-        return out
-
     @jax.custom_vjp
     def sig(increments):
         return _scan_forward(increments, depth, stream=False)
 
     def fwd(increments):
         B, M, d = increments.shape
-        n_chunks = -(-M // chunk)
-        pad = n_chunks * chunk - M
-        incs = jnp.pad(increments, ((0, 0), (0, pad), (0, 0)))  # zero incs = identity
-        incs = jnp.moveaxis(incs, 1, 0).reshape(n_chunks, chunk, B, d)
+        incs = _fold_chunks(increments, chunk)
 
         def outer(levels, c_incs):
-            new = chunk_fn(levels, c_incs)
+            new = _chunk_scan(levels, c_incs, depth)
             return new, [lv for lv in levels]  # boundary BEFORE the chunk
 
         init = tops.zero_levels((B,), d, depth, increments.dtype)
@@ -125,22 +168,8 @@ def _make_checkpoint_vjp(depth: int, chunk: int):
 
     def bwd(res, g_flat):
         increments, boundaries = res
-        B, M, d = increments.shape
-        n_chunks = -(-M // chunk)
-        pad = n_chunks * chunk - M
-        incs = jnp.pad(increments, ((0, 0), (0, pad), (0, 0)))
-        incs = jnp.moveaxis(incs, 1, 0).reshape(n_chunks, chunk, B, d)
-        G = tops.flat_to_levels(g_flat, d, depth)
-
-        def outer(G, xs):
-            bound, c_incs = xs
-            _, vjp_fn = jax.vjp(chunk_fn, bound, c_incs)
-            G_prev, g_incs = vjp_fn(G)
-            return G_prev, g_incs
-
-        _, g_rev = jax.lax.scan(outer, G, (boundaries, incs), reverse=True)
-        g = jnp.moveaxis(g_rev.reshape(n_chunks * chunk, B, d), 0, 1)
-        return (g[:, :M],)
+        return (checkpoint_bwd_scan(increments, boundaries, g_flat, depth,
+                                    chunk),)
 
     sig.defvjp(fwd, bwd)
     return sig
@@ -150,20 +179,36 @@ def _make_checkpoint_vjp(depth: int, chunk: int):
 # public API
 # ---------------------------------------------------------------------------
 
+def default_chunk(M: int) -> int:
+    """√M chunk length for the checkpoint backward (paper-adjacent default)."""
+    return max(1, int(math.isqrt(max(M, 1))))
+
+
 def signature_from_increments(increments: jax.Array, depth: int, *,
                               stream: bool = False,
-                              backward: str = "inverse") -> jax.Array:
-    """Truncated signature from increments (B, M, d) -> (B, D_sig)."""
+                              backward: str = "inverse",
+                              backend: str = "jax") -> jax.Array:
+    """Truncated signature from increments (B, M, d) -> (B, D_sig).
+
+    ``backend`` other than ``"jax"`` routes through the engine dispatch in
+    :mod:`repro.kernels.ops` (Pallas kernels with the same custom VJPs);
+    ``stream=True`` always uses the JAX scan (the output is inherently O(M)).
+    """
     increments, squeeze = _as_batched(increments)
     if depth < 1:
         raise ValueError("depth must be >= 1")
+    if backend != "jax" and not stream:
+        from repro.kernels import ops  # deferred: ops imports this module
+        out = ops.signature(increments, depth, backend=backend,
+                            backward=backward)
+        return out[0] if squeeze else out
     if stream:
         out = _scan_forward(increments, depth, stream=True)
     elif backward == "inverse":
         out = _make_inverse_vjp(depth)(increments)
     elif backward == "checkpoint":
         M = increments.shape[1]
-        out = _make_checkpoint_vjp(depth, max(1, int(math.isqrt(M))))(increments)
+        out = _make_checkpoint_vjp(depth, default_chunk(M))(increments)
     elif backward == "autodiff":
         out = _scan_forward(increments, depth, stream=False)
     else:
@@ -172,17 +217,20 @@ def signature_from_increments(increments: jax.Array, depth: int, *,
 
 
 def signature(path: jax.Array, depth: int, *, stream: bool = False,
-              basepoint: bool = False, backward: str = "inverse") -> jax.Array:
+              basepoint: bool = False, backward: str = "inverse",
+              backend: str = "jax") -> jax.Array:
     """Truncated signature of a piecewise-linear path (B, M+1, d).
 
     ``basepoint=True`` prepends X_0 = 0 (so translation information is kept).
+    ``backend`` selects the compute engine via :mod:`repro.kernels.ops`
+    (``"jax"`` | ``"pallas"`` | ``"pallas_interpret"`` | ``"auto"``).
     """
     path, squeeze = _as_batched(path)
     if basepoint:
         path = jnp.concatenate([jnp.zeros_like(path[:, :1]), path], axis=1)
     incs = tops.path_increments(path)
     out = signature_from_increments(incs, depth, stream=stream,
-                                    backward=backward)
+                                    backward=backward, backend=backend)
     return out[0] if squeeze else out
 
 

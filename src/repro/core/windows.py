@@ -21,13 +21,30 @@ from . import tensor_ops as tops
 from .projection import projected_signature_from_increments
 from .signature import signature_from_increments, signature_inverse, \
     signature_combine
-from .words import WordPlan
+from .words import WordPlan, sig_dim
 
 
-def _window_increments(path: jax.Array, windows) -> jax.Array:
-    """(B, M+1, d), (K, 2) -> (B, K, L_max, d) zero-padded increment slices."""
-    windows_np = np.asarray(windows, dtype=np.int32)       # host: shapes are
-    L_max = int((windows_np[:, 1] - windows_np[:, 0]).max())  # static
+def _check_windows(windows, M: int) -> np.ndarray:
+    """Validate (K, 2) index pairs against a path of M increments."""
+    windows_np = np.asarray(windows, dtype=np.int32).reshape(-1, 2)
+    if windows_np.shape[0]:
+        if (windows_np[:, 0] < 0).any() or (windows_np[:, 1] > M).any():
+            raise ValueError(
+                f"window indices must lie in [0, {M}] (M = number of path "
+                f"increments); got {windows_np.tolist()}")
+        if (windows_np[:, 0] > windows_np[:, 1]).any():
+            raise ValueError(f"windows must satisfy l <= r; got "
+                             f"{windows_np.tolist()}")
+    return windows_np
+
+
+def _window_increments(path: jax.Array, windows_np: np.ndarray) -> jax.Array:
+    """(B, M+1, d) x validated (K, 2) -> (B, K, L_max, d) zero-padded slices.
+
+    ``windows_np`` must come from :func:`_check_windows` (host-side: shapes
+    are static).
+    """
+    L_max = int((windows_np[:, 1] - windows_np[:, 0]).max())
     windows = jnp.asarray(windows_np)
     K = windows.shape[0]
     incs = tops.path_increments(path)                      # (B, M, d)
@@ -43,30 +60,44 @@ def _window_increments(path: jax.Array, windows) -> jax.Array:
 
 
 def windowed_signature(path: jax.Array, windows, depth: int, *,
-                       backward: str = "inverse") -> jax.Array:
-    """(B, M+1, d) x (K, 2) -> (B, K, D_sig) in one batched evaluation."""
+                       backward: str = "inverse",
+                       backend: str = "jax") -> jax.Array:
+    """(B, M+1, d) x (K, 2) -> (B, K, D_sig) in one batched evaluation.
+
+    Folded windows ride the engine dispatch (:mod:`repro.kernels.ops`), so
+    every backend's kernel forward + O(1)-in-length backward applies per
+    window.  An empty window set yields an empty (B, 0, D_sig) result.
+    """
     if path.ndim == 2:
         return windowed_signature(path[None], windows, depth,
-                                  backward=backward)[0]
-    B = path.shape[0]
+                                  backward=backward, backend=backend)[0]
+    B, d = path.shape[0], path.shape[-1]
+    windows = _check_windows(windows, path.shape[1] - 1)
+    if windows.shape[0] == 0:
+        return jnp.zeros((B, 0, sig_dim(d, depth)), path.dtype)
     g = _window_increments(path, windows)                  # (B, K, L, d)
     K, L, d = g.shape[1:]
     flat = signature_from_increments(g.reshape(B * K, L, d), depth,
-                                     backward=backward)
+                                     backward=backward, backend=backend)
     return flat.reshape(B, K, -1)
 
 
 def windowed_projection(path: jax.Array, windows, plan: WordPlan, *,
-                        backward: str = "inverse") -> jax.Array:
+                        backward: str = "inverse",
+                        backend: str = "jax") -> jax.Array:
     """Windowed + word-projected signatures in one call (B, K, |I|)."""
     if path.ndim == 2:
         return windowed_projection(path[None], windows, plan,
-                                   backward=backward)[0]
+                                   backward=backward, backend=backend)[0]
     B = path.shape[0]
+    windows = _check_windows(windows, path.shape[1] - 1)
+    if windows.shape[0] == 0:
+        return jnp.zeros((B, 0, len(plan.words)), path.dtype)
     g = _window_increments(path, windows)
     K, L, d = g.shape[1:]
     out = projected_signature_from_increments(g.reshape(B * K, L, d), plan,
-                                              backward=backward)
+                                              backward=backward,
+                                              backend=backend)
     return out.reshape(B, K, -1)
 
 
@@ -75,7 +106,9 @@ def windowed_signature_chen(path: jax.Array, windows, depth: int) -> jax.Array:
     if path.ndim == 2:
         return windowed_signature_chen(path[None], windows, depth)[0]
     d = path.shape[-1]
-    windows = jnp.asarray(windows, dtype=jnp.int32)
+    windows = jnp.asarray(_check_windows(windows, path.shape[1] - 1))
+    if windows.shape[0] == 0:
+        return jnp.zeros((path.shape[0], 0, sig_dim(d, depth)), path.dtype)
     stream = signature_from_increments(tops.path_increments(path), depth,
                                        stream=True)        # (B, M, D)
     # prepend the identity signature for l = 0
@@ -89,11 +122,23 @@ def windowed_signature_chen(path: jax.Array, windows, depth: int) -> jax.Array:
 
 
 def expanding_windows(M: int, stride: int = 1) -> np.ndarray:
+    """[0, stride], [0, 2·stride], ..., always ending with the full [0, M]
+    window (the path tail is never silently dropped when stride ∤ M)."""
+    if M < 1 or stride < 1:
+        raise ValueError(f"need M >= 1 and stride >= 1, got M={M}, "
+                         f"stride={stride}")
     r = np.arange(stride, M + 1, stride, dtype=np.int32)
+    if r.size == 0 or r[-1] != M:
+        r = np.concatenate([r, np.asarray([M], np.int32)])
     return np.stack([np.zeros_like(r), r], axis=1)
 
 
 def sliding_windows(M: int, length: int, stride: int = 1) -> np.ndarray:
+    if not 1 <= length <= M:
+        raise ValueError(f"window length must satisfy 1 <= length <= M; got "
+                         f"length={length}, M={M}")
+    if stride < 1:
+        raise ValueError(f"stride must be >= 1, got {stride}")
     l = np.arange(0, M - length + 1, stride, dtype=np.int32)
     return np.stack([l, l + length], axis=1)
 

@@ -1,14 +1,45 @@
-"""jit'd dispatch layer over the signature engines.
+"""The engine-dispatch layer: every public signature entry point routes here.
+
+``repro.core.signature``, ``repro.core.projection``, ``repro.core.windows``,
+``repro.core.logsignature`` and ``repro.models.sig_head`` all funnel their
+``backend=`` / ``backward=`` arguments into :func:`signature` and
+:func:`projected`, so kernel selection and differentiation policy live in
+exactly one place.
 
 ``backend`` selection:
 
-- ``"jax"``      — pure-JAX levelwise Horner scan (works everywhere, used for
-                   gradients: the Pallas forwards are wrapped in the same
-                   inverse-reconstruction custom VJP).
+- ``"jax"``      — pure-JAX levelwise Horner scan (works everywhere).
 - ``"pallas"``   — Pallas TPU kernels, compiled for the accelerator.
 - ``"pallas_interpret"`` — same kernels executed in interpret mode (CPU
                    validation; the container's default).
 - ``"auto"``     — pallas on TPU, jax elsewhere.
+
+Backend × backward support matrix
+---------------------------------
+
+Every cell is differentiable via ``jax.grad``; cells marked (jax) fall back
+to the pure-JAX engine because the Pallas forward cannot supply the
+residuals that backward mode needs (no autodiff rule through ``pallas_call``;
+no chunk-boundary output for the word kernel):
+
+=====================  ============================  =====================  ==========
+engine                 backward="inverse"            "checkpoint"           "autodiff"
+=====================  ============================  =====================  ==========
+jax, truncated         scan fwd + §4.2 reverse       √M boundaries + replay scan AD
+jax, projected         scan fwd + §4.2 reverse       √M boundaries + replay scan AD
+pallas, truncated      kernel fwd + §4.2 reverse     kernel chunk fwd,      (jax)
+                                                     Chen-combined, √M bwd
+pallas, projected      closure-kernel fwd +          (jax)                  (jax)
+                       §4.2 reverse
+=====================  ============================  =====================  ==========
+
+The Pallas ``inverse`` rows are the paper's headline training path: the
+kernel computes the forward, the backward reconstructs
+S_{0,t_{j-1}} = S_{0,t_j} ⊗ exp(−ΔX_j) in O(B·D_sig) memory, independent of
+sequence length (§4.2).  The ``checkpoint`` row for truncated signatures runs
+the kernel over √M-length chunks folded into the batch axis, Chen-combines
+the chunk signatures (storing the √M boundary states), and replays chunks on
+the backward — drift-immune on very long paths.
 
 Also provides ``signature_time_parallel``: a beyond-paper optimisation that
 splits the time axis into C chunks, computes chunk signatures independently
@@ -19,26 +50,31 @@ tree.  The paper explicitly does not parallelise over sequence length
 """
 from __future__ import annotations
 
-import functools
-import math
+from functools import lru_cache
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import tensor_ops as tops
-from repro.core.signature import signature_from_increments
-from repro.core.projection import projected_signature_from_increments
+from repro.core.signature import (checkpoint_bwd_scan, default_chunk,
+                                  inverse_bwd_scan, signature_from_increments)
+from repro.core.projection import (projected_inverse_bwd_scan,
+                                   projected_signature_from_increments)
 from repro.core.words import TiledPlan, WordPlan, make_plan, make_tiled_plan
 from .sig_trunc import sig_trunc
 from .sig_words import sig_words
+
+BACKENDS = ("jax", "pallas", "pallas_interpret", "auto")
+BACKWARDS = ("inverse", "checkpoint", "autodiff")
 
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-def _resolve(backend: str) -> tuple[str, bool]:
-    """-> (engine, interpret)"""
+def resolve_backend(backend: str) -> tuple[str, bool]:
+    """backend string -> (engine, interpret)."""
     if backend == "auto":
         return ("pallas", False) if _on_tpu() else ("jax", False)
     if backend == "pallas":
@@ -47,58 +83,250 @@ def _resolve(backend: str) -> tuple[str, bool]:
         return "pallas", True
     if backend == "jax":
         return "jax", False
-    raise ValueError(f"unknown backend {backend!r}")
+    raise ValueError(f"unknown backend {backend!r}; expected one of {BACKENDS}")
 
+
+_resolve = resolve_backend  # back-compat alias
+
+
+def _check_backward(backward: str) -> None:
+    if backward not in BACKWARDS:
+        raise ValueError(
+            f"unknown backward mode {backward!r}; expected one of {BACKWARDS}")
+
+
+# ---------------------------------------------------------------------------
+# truncated signatures: Pallas forwards, §4.2 custom VJPs
+# ---------------------------------------------------------------------------
+
+@lru_cache(maxsize=None)
+def _pallas_sig_inverse(depth: int, batch_tile: int, split: int | None,
+                        interpret: bool):
+    """Kernel forward + inverse-reconstruction backward (paper §4.2)."""
+    def kernel(increments):
+        return sig_trunc(increments, depth, batch_tile=batch_tile,
+                         split=split, interpret=interpret)
+
+    @jax.custom_vjp
+    def sig(increments):
+        return kernel(increments)
+
+    def fwd(increments):
+        out = kernel(increments)
+        return out, (increments, out)
+
+    def bwd(res, g_flat):
+        increments, out_flat = res
+        return (inverse_bwd_scan(increments, out_flat, g_flat, depth),)
+
+    sig.defvjp(fwd, bwd)
+    return sig
+
+
+@lru_cache(maxsize=None)
+def _pallas_sig_checkpoint(depth: int, chunk: int, batch_tile: int,
+                           split: int | None, interpret: bool):
+    """Kernel chunk forward + √M-checkpoint backward.
+
+    Forward: fold √M-length time chunks into the batch axis, run the Pallas
+    kernel once over all chunks, Chen-combine the chunk signatures in a scan
+    whose carry traces out exactly the boundary states the backward needs.
+    Backward: the shared chunk-replay sweep from ``repro.core.signature``.
+    """
+    def kernel(increments):
+        return sig_trunc(increments, depth, batch_tile=batch_tile,
+                         split=split, interpret=interpret)
+
+    @jax.custom_vjp
+    def sig(increments):
+        out, _ = _forward(increments)
+        return out
+
+    def _forward(increments):
+        B, M, d = increments.shape
+        n_chunks = -(-M // chunk)
+        pad = n_chunks * chunk - M
+        x = jnp.pad(increments, ((0, 0), (0, pad), (0, 0)))  # zero = identity
+        folded = x.reshape(B, n_chunks, chunk, d).reshape(B * n_chunks,
+                                                          chunk, d)
+        chunk_flat = kernel(folded)                         # (B*C, D_sig)
+        chunk_lv = tops.flat_to_levels(chunk_flat, d, depth)
+        # -> time-major levels: each (n_chunks, B, d**n)
+        chunk_lv = [jnp.moveaxis(a.reshape(B, n_chunks, -1), 1, 0)
+                    for a in chunk_lv]
+
+        def combine(levels, c_lv):
+            new = tops.chen_mul(levels, c_lv)
+            return new, [lv for lv in levels]  # boundary BEFORE the chunk
+
+        init = tops.zero_levels((B,), d, depth, chunk_flat.dtype)
+        final, boundaries = jax.lax.scan(combine, init, chunk_lv)
+        return tops.levels_to_flat(final), boundaries
+
+    def fwd(increments):
+        out, boundaries = _forward(increments)
+        return out, (increments, boundaries)
+
+    def bwd(res, g_flat):
+        increments, boundaries = res
+        return (checkpoint_bwd_scan(increments, boundaries, g_flat, depth,
+                                    chunk),)
+
+    sig.defvjp(fwd, bwd)
+    return sig
+
+
+# ---------------------------------------------------------------------------
+# plan normalisation + caches (host-side, identity/value keyed)
+# ---------------------------------------------------------------------------
+
+@lru_cache(maxsize=None)
+def _plan_for_words(words: tuple, d: int) -> WordPlan:
+    return make_plan(words, d)
+
+
+@lru_cache(maxsize=None)
+def _wplan_of_tiled(tplan: TiledPlan) -> WordPlan:
+    return make_plan(tplan.words, tplan.d)
+
+
+@lru_cache(maxsize=None)
+def _tiled_of_wplan(wplan: WordPlan, max_rows: int) -> TiledPlan:
+    return make_tiled_plan(wplan.words, wplan.d, max_rows=max_rows)
+
+
+@lru_cache(maxsize=None)
+def _closure_tiled_plan(wplan: WordPlan, max_rows: int) -> TiledPlan:
+    """Tiled plan whose *requested* words are the closure of ``wplan`` — the
+    kernel computes the closure rows anyway, so asking for them adds output
+    gather only, and the terminal closure state is what the §4.2 backward
+    reconstructs from."""
+    return make_tiled_plan(wplan.closure, wplan.d, max_rows=max_rows)
+
+
+def _normalise_plans(plan, d: int) -> tuple[WordPlan, TiledPlan | None]:
+    """-> (WordPlan, TiledPlan-or-None) from any accepted plan spelling."""
+    if isinstance(plan, TiledPlan):
+        return _wplan_of_tiled(plan), plan
+    if isinstance(plan, WordPlan):
+        return plan, None
+    return _plan_for_words(tuple(tuple(w) for w in plan), d), None
+
+
+# ---------------------------------------------------------------------------
+# projected signatures: Pallas closure forward, §4.2 custom VJP
+# ---------------------------------------------------------------------------
+
+@lru_cache(maxsize=None)
+def _pallas_proj_inverse(wplan: WordPlan, batch_tile: int, max_rows: int,
+                         interpret: bool):
+    """Word-kernel forward over the prefix closure + §4.2 backward."""
+    closure_tplan = _closure_tiled_plan(wplan, max_rows)
+    out_rows = np.asarray(wplan.out_rows)
+
+    def closure_state(increments):
+        cw = sig_words(increments, closure_tplan, batch_tile=batch_tile,
+                       interpret=interpret)               # (B, W), closure order
+        ones = jnp.ones((cw.shape[0], 1), cw.dtype)
+        return jnp.concatenate([ones, cw], axis=1)        # (B, 1 + W)
+
+    @jax.custom_vjp
+    def proj(increments):
+        return jnp.take(closure_state(increments), out_rows, axis=1)
+
+    def fwd(increments):
+        S_T = closure_state(increments)
+        return jnp.take(S_T, out_rows, axis=1), (increments, S_T)
+
+    def bwd(res, g_out):
+        increments, S_T = res
+        return (projected_inverse_bwd_scan(increments, S_T, g_out, wplan),)
+
+    proj.defvjp(fwd, bwd)
+    return proj
+
+
+# ---------------------------------------------------------------------------
+# public dispatch
+# ---------------------------------------------------------------------------
 
 def signature(increments: jax.Array, depth: int, *, backend: str = "auto",
-              batch_tile: int = 128, split: int | None = None,
-              time_chunks: int = 1) -> jax.Array:
-    """Truncated signature (B, M, d) -> (B, D_sig)."""
-    engine, interpret = _resolve(backend)
-    if engine == "jax":
-        return signature_from_increments(increments, depth)
+              backward: str = "inverse", batch_tile: int = 128,
+              split: int | None = None, time_chunks: int = 1) -> jax.Array:
+    """Truncated signature (B, M, d) -> (B, D_sig), differentiable on every
+    backend (see the support matrix in the module docstring)."""
+    engine, interpret = resolve_backend(backend)
+    _check_backward(backward)
+    if engine == "jax" or backward == "autodiff":
+        # autodiff has no Pallas rule: route to the jax engine entirely so
+        # the forward actually produces the residuals the scan AD consumes.
+        return signature_from_increments(increments, depth, backward=backward,
+                                         backend="jax")
     if time_chunks > 1:
         return signature_time_parallel(increments, depth, time_chunks,
-                                       backend=backend, batch_tile=batch_tile,
-                                       split=split)
-    return sig_trunc(increments, depth, batch_tile=batch_tile, split=split,
-                     interpret=interpret)
+                                       backend=backend, backward=backward,
+                                       batch_tile=batch_tile, split=split)
+    if backward == "checkpoint":
+        chunk = default_chunk(increments.shape[1])
+        return _pallas_sig_checkpoint(depth, chunk, batch_tile, split,
+                                      interpret)(increments)
+    return _pallas_sig_inverse(depth, batch_tile, split, interpret)(increments)
 
 
 def projected(increments: jax.Array, plan, *, backend: str = "auto",
-              batch_tile: int = 128, max_rows: int = 256) -> jax.Array:
-    """Projected signature over a word set / plan (B, M, d) -> (B, |I|)."""
-    engine, interpret = _resolve(backend)
-    if isinstance(plan, TiledPlan):
-        tplan, wplan = plan, None
-    elif isinstance(plan, WordPlan):
-        tplan, wplan = None, plan
-    else:  # iterable of words
-        wplan = make_plan(tuple(tuple(w) for w in plan), increments.shape[-1])
-        tplan = None
+              backward: str = "inverse", batch_tile: int = 128,
+              max_rows: int = 256) -> jax.Array:
+    """Projected signature over a word set / plan (B, M, d) -> (B, |I|),
+    differentiable on every backend.  ``plan`` may be a WordPlan, a
+    TiledPlan, or an iterable of letter tuples."""
+    engine, interpret = resolve_backend(backend)
+    _check_backward(backward)
+    wplan, tplan = _normalise_plans(plan, increments.shape[-1])
+    if engine == "jax" or backward != "inverse":
+        # checkpoint needs chunk-boundary closure states the word kernel
+        # cannot emit; autodiff needs scan residuals — both run on jax.
+        return projected_signature_from_increments(
+            increments, wplan, backward=backward, backend="jax")
+    if tplan is not None:  # keep the caller's tile granularity
+        max_rows = max(p.closure_size for p in tplan.tiles)
+    return _pallas_proj_inverse(wplan, batch_tile, max_rows,
+                                interpret)(increments)
+
+
+def projected_forward_only(increments: jax.Array, plan, *,
+                           backend: str = "auto", batch_tile: int = 128,
+                           max_rows: int = 256) -> jax.Array:
+    """Inference-only projected signature: skips the closure readout (the
+    kernel gathers just the requested rows).  Not differentiable on the
+    pallas engines — use :func:`projected` for training."""
+    engine, interpret = resolve_backend(backend)
+    wplan, tplan = _normalise_plans(plan, increments.shape[-1])
     if engine == "jax":
-        if wplan is None:
-            wplan = make_plan(tplan.words, tplan.d)
-        return projected_signature_from_increments(increments, wplan)
+        return projected_signature_from_increments(increments, wplan,
+                                                   backend="jax")
     if tplan is None:
-        tplan = make_tiled_plan(wplan.words, wplan.d, max_rows=max_rows)
+        tplan = _tiled_of_wplan(wplan, max_rows)
     return sig_words(increments, tplan, batch_tile=batch_tile,
                      interpret=interpret)
 
 
 def signature_time_parallel(increments: jax.Array, depth: int,
                             time_chunks: int, *, backend: str = "auto",
-                            batch_tile: int = 128,
+                            backward: str = "inverse", batch_tile: int = 128,
                             split: int | None = None) -> jax.Array:
-    """Chunked-time signature: fold chunks into batch, tree-Chen-combine."""
+    """Chunked-time signature: fold chunks into batch, tree-Chen-combine.
+
+    Differentiable end to end: the per-chunk signatures carry the dispatch
+    layer's custom VJPs and the combination tree is plain jnp algebra.
+    """
     B, M, d = increments.shape
     C = max(1, min(time_chunks, M))
     Mc = -(-M // C)
     pad = C * Mc - M
     x = jnp.pad(increments, ((0, 0), (0, pad), (0, 0)))  # zero incs = identity
     x = x.reshape(B, C, Mc, d).reshape(B * C, Mc, d)
-    flat = signature(x, depth, backend=backend, batch_tile=batch_tile,
-                     split=split, time_chunks=1)          # (B*C, D)
+    flat = signature(x, depth, backend=backend, backward=backward,
+                     batch_tile=batch_tile, split=split, time_chunks=1)
     parts = flat.reshape(B, C, -1)
     # log-depth Chen combination tree
     while parts.shape[1] > 1:

@@ -12,6 +12,8 @@ class SigHeadConfig:
     depth: int = 3             # truncation depth
     use_logsig: bool = False
     stride: int = 1            # subsample hidden trajectory before signing
+    backend: str = "auto"      # engine dispatch (repro.kernels.ops)
+    backward: str = "inverse"  # inverse | checkpoint | autodiff
 
 
 @dataclasses.dataclass(frozen=True)

@@ -40,14 +40,20 @@ def sig_pool(p, hidden: jax.Array, cfg: ModelConfig,
         path = path[:, ::sc.stride]
     # normalise scale so deep signatures stay well-conditioned
     path = path / jnp.sqrt(jnp.float32(path.shape[1]))
+    # all three feature routes ride the engine dispatch (repro.kernels.ops):
+    # the configured backend's kernel forward + O(1)-in-length backward is
+    # exactly the path jax.grad differentiates during training.
     if plan is not None:
-        feats = projected_signature(path, plan.words, sc.channels, plan=plan)
+        feats = projected_signature(path, plan.words, sc.channels, plan=plan,
+                                    backend=sc.backend, backward=sc.backward)
         feats = jnp.concatenate([feats, path[:, -1] - path[:, 0]], axis=-1)
     elif sc.use_logsig:
-        feats = logsignature(path, sc.depth)
+        feats = logsignature(path, sc.depth, backend=sc.backend,
+                             backward=sc.backward)
         feats = jnp.concatenate([feats, path[:, -1] - path[:, 0]], axis=-1)
     else:
-        feats = signature(path, sc.depth)
+        feats = signature(path, sc.depth, backend=sc.backend,
+                          backward=sc.backward)
         feats = jnp.concatenate([feats, path[:, -1] - path[:, 0]], axis=-1)
     return jnp.einsum("bf,fo->bo", feats.astype(hidden.dtype),
                       p["out"].astype(hidden.dtype))

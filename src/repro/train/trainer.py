@@ -25,13 +25,33 @@ class TrainLoopConfig:
     remat: str = "dots"
     grad_compression: bool = False      # int8 EF over cross-pod axis
     straggler_deadline_s: float = 0.0   # 0 = disabled; see train_loop
+    sig_backend: str = ""               # "" = honour cfg.sig_head.backend;
+    sig_backward: str = ""              # else override the engine dispatch
+
+
+def _apply_sig_overrides(cfg: ModelConfig, sig_backend: str,
+                         sig_backward: str) -> ModelConfig:
+    """Override the sig head's engine-dispatch routing (repro.kernels.ops)
+    so a launch config can pin the trained path to a specific backend."""
+    if cfg.sig_head is None or not (sig_backend or sig_backward):
+        return cfg
+    sc = cfg.sig_head
+    if sig_backend:
+        sc = dataclasses.replace(sc, backend=sig_backend)
+    if sig_backward:
+        sc = dataclasses.replace(sc, backward=sig_backward)
+    return dataclasses.replace(cfg, sig_head=sc)
 
 
 def make_train_step(cfg: ModelConfig, opt: Optimizer, *, remat: str = "dots",
-                    microbatch: int = 0):
+                    microbatch: int = 0, sig_backend: str = "",
+                    sig_backward: str = ""):
     """Returns train_step(params, opt_state, batch) -> (params, opt_state,
     metrics).  With microbatch > 0, gradients are accumulated over
-    `microbatch` slices of the batch (sequential, constant memory)."""
+    `microbatch` slices of the batch (sequential, constant memory).
+    ``sig_backend``/``sig_backward`` pin the signature head's engine dispatch
+    for this training run (the speed path is the trained path)."""
+    cfg = _apply_sig_overrides(cfg, sig_backend, sig_backward)
 
     def loss_fn(params, batch):
         return M.loss_fn(params, cfg, batch, remat=remat)
@@ -92,7 +112,9 @@ def train_loop(cfg: ModelConfig, params, opt: Optimizer, data_iter,
     launcher replaces the slow host; on CPU we log + continue).
     """
     step_fn = jax.jit(make_train_step(cfg, opt, remat=loop.remat,
-                                      microbatch=loop.microbatch))
+                                      microbatch=loop.microbatch,
+                                      sig_backend=loop.sig_backend,
+                                      sig_backward=loop.sig_backward))
     opt_state = opt.init(params)
     if checkpointer is not None and start_step:
         params, opt_state, _ = checkpointer.restore(params, opt_state,

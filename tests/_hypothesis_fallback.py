@@ -1,0 +1,133 @@
+"""Deterministic stand-in for ``hypothesis`` (tier-1 unblock).
+
+This container cannot install hypothesis, and five test modules import it at
+collection time.  ``conftest.py`` installs this module into
+``sys.modules["hypothesis"]`` when the real package is missing, so the suite
+collects and runs either way.
+
+The stand-in draws a small, fixed number of deterministic examples per test
+(seeded from the test's qualified name), covering the subset of the API the
+suite uses: ``given``, ``settings``, and the strategies ``integers``,
+``floats``, ``lists``, ``tuples``, ``sampled_from``, ``data``.  It is NOT a
+property-based tester — no shrinking, no example database — just enough
+deterministic coverage to keep the property tests meaningful.
+"""
+from __future__ import annotations
+
+import zlib
+
+import numpy as np
+
+__version__ = "0.0-fallback"
+
+_MAX_EXAMPLES = 5  # handful of deterministic examples per test
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def map(self, fn):
+        return _Strategy(lambda rng: fn(self._draw(rng)))
+
+    def filter(self, pred):
+        def draw(rng):
+            for _ in range(1000):
+                x = self._draw(rng)
+                if pred(x):
+                    return x
+            raise ValueError("filter predicate never satisfied")
+        return _Strategy(draw)
+
+
+class _DataObject:
+    """Stand-in for the object st.data() passes to the test."""
+
+    def __init__(self, rng):
+        self._rng = rng
+
+    def draw(self, strategy, label=None):
+        return strategy._draw(self._rng)
+
+
+class _DataStrategy(_Strategy):
+    def __init__(self):
+        super().__init__(lambda rng: _DataObject(rng))
+
+
+class strategies:  # noqa: N801 — mirrors the `hypothesis.strategies` module
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Strategy(
+            lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+    @staticmethod
+    def floats(min_value, max_value, **_kw):
+        return _Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+    @staticmethod
+    def lists(elements, min_size=0, max_size=10, **_kw):
+        def draw(rng):
+            n = int(rng.integers(min_size, max_size + 1))
+            return [elements._draw(rng) for _ in range(n)]
+        return _Strategy(draw)
+
+    @staticmethod
+    def tuples(*elements):
+        return _Strategy(lambda rng: tuple(e._draw(rng) for e in elements))
+
+    @staticmethod
+    def sampled_from(seq):
+        seq = list(seq)
+        return _Strategy(lambda rng: seq[int(rng.integers(len(seq)))])
+
+    @staticmethod
+    def data():
+        return _DataStrategy()
+
+
+def settings(**kw):
+    """Decorator recording settings; only max_examples is honoured (capped)."""
+    def deco(fn):
+        if getattr(fn, "_fallback_given", False):
+            return fn  # settings applied outside given: nothing left to do
+        fn._fallback_settings = kw
+        return fn
+    return deco
+
+
+def given(*strategy_args, **strategy_kwargs):
+    if strategy_kwargs:
+        raise NotImplementedError(
+            "the hypothesis fallback only supports positional strategies")
+
+    def deco(fn):
+        declared = getattr(fn, "_fallback_settings", {}).get(
+            "max_examples", _MAX_EXAMPLES)
+        n_examples = min(int(declared), _MAX_EXAMPLES)
+
+        def wrapper():
+            for i in range(n_examples):
+                seed = zlib.adler32(f"{fn.__module__}.{fn.__qualname__}"
+                                    f"#{i}".encode())
+                rng = np.random.default_rng(seed)
+                fn(*[s._draw(rng) for s in strategy_args])
+
+        # pytest inspects the signature to map fixtures: expose a zero-arg
+        # callable (the suite never mixes fixtures with @given)
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        wrapper._fallback_given = True
+        return wrapper
+    return deco
+
+
+class HealthCheck:
+    too_slow = data_too_large = filter_too_much = all = None
+
+
+def assume(condition):
+    if not condition:
+        raise ValueError("fallback assume() violated: restructure the draw")

@@ -77,6 +77,45 @@ def test_window_helpers():
     assert len(dw) == 1 + 2 + 4
 
 
+def test_expanding_windows_keeps_path_tail():
+    """stride ∤ M used to silently drop the tail: [0, M] must always close."""
+    ew = expanding_windows(10, stride=3)
+    assert list(ew[:, 1]) == [3, 6, 9, 10]
+    assert tuple(ew[-1]) == (0, 10)
+    # stride > M degenerates to the single full window
+    assert [tuple(w) for w in expanding_windows(4, stride=7)] == [(0, 4)]
+    with pytest.raises(ValueError):
+        expanding_windows(0)
+
+
+def test_sliding_windows_validates_length():
+    with pytest.raises(ValueError, match="length"):
+        sliding_windows(8, 9)              # length > M used to yield 0 windows
+    with pytest.raises(ValueError, match="length"):
+        sliding_windows(8, 0)
+    with pytest.raises(ValueError, match="stride"):
+        sliding_windows(8, 4, stride=0)
+    assert [tuple(w) for w in sliding_windows(8, 8)] == [(0, 8)]
+
+
+def test_empty_window_set_returns_empty_result(rng):
+    """Used to crash with 'zero-size array to reduction operation maximum'."""
+    path = jnp.asarray(make_path(rng, 2, 10, 3))
+    out = windowed_signature(path, np.zeros((0, 2), np.int32), 3)
+    assert out.shape == (2, 0, C.sig_dim(3, 3))
+    plan = make_plan([(0,), (2, 1)], 3)
+    proj = windowed_projection(path, np.zeros((0, 2), np.int32), plan)
+    assert proj.shape == (2, 0, 2)
+
+
+def test_out_of_range_windows_raise(rng):
+    path = jnp.asarray(make_path(rng, 1, 10, 2))
+    with pytest.raises(ValueError, match="window indices"):
+        windowed_signature(path, np.asarray([[0, 11]], np.int32), 2)
+    with pytest.raises(ValueError, match="l <= r"):
+        windowed_signature(path, np.asarray([[5, 3]], np.int32), 2)
+
+
 @given(st.integers(2, 3), st.integers(1, 3),
        st.lists(st.tuples(st.integers(0, 10), st.integers(1, 14)),
                 min_size=1, max_size=5))
