@@ -6,12 +6,15 @@ from .words import (Word, all_words, anisotropic_words, dag_words, decode,
                     prefix_closure, sig_dim, truncation_plan, WordPlan,
                     TiledPlan)
 from .signature import (signature, signature_from_increments,
-                        signature_combine, signature_inverse)
+                        signature_combine, signature_inverse,
+                        stream_emit_steps)
 from .projection import projected_signature, projected_signature_from_increments
 from .logsignature import logsignature, logsignature_projected, logsig_dim
 from .windows import (windowed_signature, windowed_projection,
                       windowed_signature_chen, expanding_windows,
-                      sliding_windows, dyadic_windows)
+                      sliding_windows, dyadic_windows, select_route)
+from .stream import (SignatureStream, signature_stream_init,
+                     signature_stream_extend, signature_stream_rolling_drop)
 from .transforms import (lead_lag, time_augment, basepoint_augment,
                          sparse_leadlag_generators)
 from . import tensor_ops
@@ -22,10 +25,12 @@ __all__ = [
     "level_offsets", "lyndon_words", "lyndon_dim", "make_plan",
     "make_tiled_plan", "prefix_closure", "sig_dim", "truncation_plan",
     "signature", "signature_from_increments", "signature_combine",
-    "signature_inverse", "projected_signature",
+    "signature_inverse", "stream_emit_steps", "projected_signature",
     "projected_signature_from_increments", "logsignature",
     "logsignature_projected", "logsig_dim", "windowed_signature",
     "windowed_projection", "windowed_signature_chen", "expanding_windows",
-    "sliding_windows", "dyadic_windows", "lead_lag", "time_augment",
+    "sliding_windows", "dyadic_windows", "select_route", "SignatureStream",
+    "signature_stream_init", "signature_stream_extend",
+    "signature_stream_rolling_drop", "lead_lag", "time_augment",
     "basepoint_augment", "sparse_leadlag_generators", "tensor_ops",
 ]

@@ -16,7 +16,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .signature import _fold_chunks, default_chunk
+from .signature import (_fold_chunks, _subsample_stream, default_chunk,
+                        stream_emit_steps, unsupported_stream_backward)
 from .words import WordPlan, make_plan
 from . import tensor_ops as tops
 
@@ -47,7 +48,7 @@ def projected_step(S: jax.Array, dx: jax.Array, prefix_idx, letters, inv,
 
 
 def _scan_projected(increments: jax.Array, plan: WordPlan,
-                    stream: bool) -> jax.Array:
+                    stream: bool, stream_stride: int = 1) -> jax.Array:
     B, M, d = increments.shape
     tables = _plan_tables(plan)
 
@@ -61,7 +62,8 @@ def _scan_projected(increments: jax.Array, plan: WordPlan,
     final, ys = jax.lax.scan(step, S0, jnp.moveaxis(increments, 1, 0))
     out_rows = jnp.asarray(plan.out_rows)
     if stream:
-        return jnp.moveaxis(jnp.take(ys, out_rows, axis=2), 0, 1)
+        out = jnp.moveaxis(jnp.take(ys, out_rows, axis=2), 0, 1)
+        return _subsample_stream(out, M, stream_stride)
     return jnp.take(final, out_rows, axis=1)
 
 
@@ -128,6 +130,79 @@ def _make_projected_vjp(plan: WordPlan):
     return proj
 
 
+def projected_stream_inverse_bwd_scan(increments: jax.Array, S_T: jax.Array,
+                                      g_steps: jax.Array, plan: WordPlan,
+                                      stride: int = 1) -> jax.Array:
+    """§4.2 backward for *streamed* word projections: cotangents arrive at
+    every emitted step; one reverse scan inverts the closure update while
+    folding each step's (closure-scattered) cotangent in just before the
+    pull-back.  ``S_T`` is the terminal closure buffer (B, 1 + W) — the only
+    residual besides the increments, whichever forward produced it (JAX scan
+    or the streamed Pallas word kernel over the closure)."""
+    B, M, d = increments.shape
+    tables = _plan_tables(plan)
+    out_rows = jnp.asarray(plan.out_rows)
+
+    def step_fn(S, dx):
+        return projected_step(S, dx, *tables)
+
+    # scatter the per-step projection cotangents onto closure buffers, then
+    # (for stride > 1) onto the full time axis
+    g_close = jnp.zeros((*g_steps.shape[:2], S_T.shape[-1]), g_steps.dtype
+                        ).at[:, :, out_rows].add(g_steps)
+    steps = stream_emit_steps(M, stride)
+    if len(steps) == M:
+        g_dense = g_close
+    else:
+        g_dense = jnp.zeros((B, M, S_T.shape[-1]), g_steps.dtype
+                            ).at[:, jnp.asarray(steps)].set(g_close)
+
+    def step(carry, xs):
+        S, G = carry
+        dx, g_j = xs
+        G = G + g_j
+        S_prev = step_fn(S, -dx)
+        _, vjp_fn = jax.vjp(step_fn, S_prev, dx)
+        G_prev, g_dx = vjp_fn(G)
+        return (S_prev, G_prev), g_dx
+
+    (_, _), g_rev = jax.lax.scan(step, (S_T, jnp.zeros_like(S_T)),
+                                 (jnp.moveaxis(increments, 1, 0),
+                                  jnp.moveaxis(g_dense, 1, 0)), reverse=True)
+    return jnp.moveaxis(g_rev, 0, 1)
+
+
+@lru_cache(maxsize=None)
+def _make_projected_stream_vjp(plan: WordPlan, stride: int):
+    tables = _plan_tables(plan)
+
+    @jax.custom_vjp
+    def proj(increments):
+        return _scan_projected(increments, plan, stream=True,
+                               stream_stride=stride)
+
+    def fwd(increments):
+        B, M, d = increments.shape
+        out_rows = jnp.asarray(plan.out_rows)
+
+        def step(S, dx):
+            new = projected_step(S, dx, *tables)
+            return new, jnp.take(new, out_rows, axis=1)
+
+        S_T, ys = jax.lax.scan(step, _closure_init(B, plan, increments.dtype),
+                               jnp.moveaxis(increments, 1, 0))
+        out = _subsample_stream(jnp.moveaxis(ys, 0, 1), M, stride)
+        return out, (increments, S_T)
+
+    def bwd(res, g_steps):
+        increments, S_T = res
+        return (projected_stream_inverse_bwd_scan(increments, S_T, g_steps,
+                                                  plan, stride),)
+
+    proj.defvjp(fwd, bwd)
+    return proj
+
+
 @lru_cache(maxsize=None)
 def _make_projected_checkpoint_vjp(plan: WordPlan, chunk: int):
     """√M-checkpoint VJP for projections (beyond paper): store closure states
@@ -185,21 +260,34 @@ def _make_projected_checkpoint_vjp(plan: WordPlan, chunk: int):
 def projected_signature_from_increments(increments: jax.Array,
                                         plan: WordPlan, *,
                                         stream: bool = False,
+                                        stream_stride: int = 1,
                                         backward: str = "inverse",
                                         backend: str = "jax") -> jax.Array:
     """π_I(S_{0,T}(X)) for the plan's word set I.  (B, M, d) -> (B, |I|).
 
     ``backend`` other than ``"jax"`` routes through the engine dispatch in
-    :mod:`repro.kernels.ops`; ``stream=True`` always uses the JAX scan.
+    :mod:`repro.kernels.ops` — including ``stream=True``, which emits every
+    ``stream_stride``-th per-step projection as (B, M_out, |I|).
     """
     increments, squeeze = _as_batched(increments)
-    if backend != "jax" and not stream:
+    if backend != "jax":
         from repro.kernels import ops  # deferred: ops imports this module
         out = ops.projected(increments, plan, backend=backend,
-                            backward=backward)
+                            backward=backward, stream=stream,
+                            stream_stride=stream_stride)
         return out[0] if squeeze else out
-    if stream or backward == "autodiff":
-        out = _scan_projected(increments, plan, stream=stream)
+    if stream:
+        if backward == "inverse":
+            out = _make_projected_stream_vjp(plan, stream_stride)(increments)
+        elif backward == "autodiff":
+            out = _scan_projected(increments, plan, stream=True,
+                                  stream_stride=stream_stride)
+        elif backward == "checkpoint":
+            raise unsupported_stream_backward(backward)
+        else:
+            raise ValueError(f"unknown backward mode {backward!r}")
+    elif backward == "autodiff":
+        out = _scan_projected(increments, plan, stream=False)
     elif backward == "inverse":
         out = _make_projected_vjp(plan)(increments)
     elif backward == "checkpoint":
@@ -212,7 +300,7 @@ def projected_signature_from_increments(increments: jax.Array,
 
 def projected_signature(path: jax.Array, words, d: int | None = None, *,
                         plan: WordPlan | None = None, stream: bool = False,
-                        backward: str = "inverse",
+                        stream_stride: int = 1, backward: str = "inverse",
                         backend: str = "jax") -> jax.Array:
     """Signature coefficients of an arbitrary word set (paper §7.1).
 
@@ -225,6 +313,7 @@ def projected_signature(path: jax.Array, words, d: int | None = None, *,
         plan = make_plan(tuple(tuple(w) for w in words), d)
     incs = tops.path_increments(path)
     out = projected_signature_from_increments(incs, plan, stream=stream,
+                                              stream_stride=stream_stride,
                                               backward=backward,
                                               backend=backend)
     return out[0] if squeeze else out

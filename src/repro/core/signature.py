@@ -4,7 +4,13 @@ Public API
 ----------
 ``signature(path, depth, ...)``              (B, M+1, d) -> (B, D_sig)
 ``signature_from_increments(incs, depth)``   (B, M, d)   -> (B, D_sig)
-``signature(..., stream=True)``              -> (B, M, D_sig) expanding windows
+``signature(..., stream=True)``              -> (B, M_out, D_sig) prefix
+signatures at every ``stream_stride``-th step (terminal step always emitted;
+see :func:`stream_emit_steps`).  Streaming is a first-class axis: every
+backend routes through the engine dispatch, and the ``inverse`` backward is
+the §4.2 reverse sweep generalised to cotangents arriving at every emitted
+step (:func:`stream_inverse_bwd_scan`) — one reverse scan, O(B·D_sig) live
+memory.
 
 Three backward modes:
 
@@ -24,9 +30,24 @@ from functools import lru_cache, partial
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from . import tensor_ops as tops
 from .words import sig_dim
+
+
+def stream_emit_steps(M: int, stride: int = 1) -> np.ndarray:
+    """0-based scan steps emitted by a streamed forward: stride-1, 2·stride-1,
+    ..., with the terminal step M-1 always included.  len == ceil(M/stride);
+    step j holds the prefix signature S_{0,t_{j+1}} (over j+1 increments)."""
+    if stride < 1:
+        raise ValueError(f"stream_stride must be >= 1, got {stride}")
+    if M == 0:
+        return np.zeros((0,), np.int64)
+    steps = np.arange(stride - 1, M, stride, dtype=np.int64)
+    if steps.size == 0 or steps[-1] != M - 1:
+        steps = np.append(steps, M - 1)
+    return steps
 
 
 def _as_batched(x: jax.Array) -> tuple[jax.Array, bool]:
@@ -98,6 +119,76 @@ def _make_inverse_vjp(depth: int):
     def bwd(res, g_flat):
         increments, out_flat = res
         return (inverse_bwd_scan(increments, out_flat, g_flat, depth),)
+
+    sig.defvjp(fwd, bwd)
+    return sig
+
+
+# ---------------------------------------------------------------------------
+# streamed custom VJP: §4.2 generalised to cotangents at every emitted step
+# ---------------------------------------------------------------------------
+
+def stream_inverse_bwd_scan(increments: jax.Array, terminal_flat: jax.Array,
+                            g_steps: jax.Array, depth: int,
+                            stride: int = 1) -> jax.Array:
+    """§4.2 reverse sweep for a *streamed* forward: cotangents ``g_steps``
+    (B, M_out, D_sig) arrive at every emitted step, and one reverse scan
+    reconstructs S_{0,t_{j-1}} = S_{0,t_j} ⊗ exp(-ΔX_j) while folding in the
+    step-j cotangent just before pulling it back — still O(B·D_sig) live
+    memory.  The non-streamed :func:`inverse_bwd_scan` is the special case
+    where only the terminal cotangent is non-zero.
+
+    Engine-agnostic: any forward emitting :func:`stream_emit_steps` (the JAX
+    scan or the streamed Pallas kernel) pairs with this backward; only the
+    terminal signature ``terminal_flat`` (B, D_sig) is needed as residual.
+    """
+    B, M, d = increments.shape
+    steps = stream_emit_steps(M, stride)
+    if len(steps) == M:
+        g_dense = g_steps
+    else:  # scatter strided cotangents onto the full time axis
+        g_dense = jnp.zeros((B, M, g_steps.shape[-1]), g_steps.dtype
+                            ).at[:, jnp.asarray(steps)].set(g_steps)
+    S_T = tops.flat_to_levels(terminal_flat, d, depth)
+    G_T = [jnp.zeros_like(a) for a in S_T]
+
+    def step(carry, xs):
+        S, G = carry  # S = S_{0,t_j}, G = ∂L/∂S_{0,t_j} from steps > j
+        dx, g_j = xs
+        G = [a + b for a, b in zip(G, tops.flat_to_levels(g_j, d, depth))]
+        S_prev = tops.horner_step(S, -dx)          # Prop. 4.6
+        _, vjp_fn = jax.vjp(tops.horner_step, S_prev, dx)
+        G_prev, g_dx = vjp_fn(G)
+        return (S_prev, G_prev), g_dx
+
+    (_, _), g_rev = jax.lax.scan(
+        step, (S_T, G_T), (jnp.moveaxis(increments, 1, 0),
+                           jnp.moveaxis(g_dense, 1, 0)), reverse=True)
+    return jnp.moveaxis(g_rev, 0, 1)
+
+
+def _subsample_stream(out: jax.Array, M: int, stride: int) -> jax.Array:
+    """(B, M, D) full stream -> (B, M_out, D) at the emitted steps."""
+    if stride == 1:
+        return out
+    return out[:, jnp.asarray(stream_emit_steps(M, stride))]
+
+
+@lru_cache(maxsize=None)
+def _make_stream_inverse_vjp(depth: int, stride: int):
+    @jax.custom_vjp
+    def sig(increments):
+        out = _scan_forward(increments, depth, stream=True)
+        return _subsample_stream(out, increments.shape[1], stride)
+
+    def fwd(increments):
+        out = sig(increments)
+        return out, (increments, out[:, -1])  # terminal step always emitted
+
+    def bwd(res, g_steps):
+        increments, terminal = res
+        return (stream_inverse_bwd_scan(increments, terminal, g_steps, depth,
+                                        stride),)
 
     sig.defvjp(fwd, bwd)
     return sig
@@ -184,26 +275,52 @@ def default_chunk(M: int) -> int:
     return max(1, int(math.isqrt(max(M, 1))))
 
 
+def unsupported_stream_backward(backward: str) -> NotImplementedError:
+    """The error raised for stream=True × backward cells without a kernel
+    (kept in one place so dispatch and the pure-JAX route agree)."""
+    return NotImplementedError(
+        f"stream=True does not support backward={backward!r}: the streamed "
+        "output already materialises every emitted prefix, so use "
+        "backward='inverse' (one generalised §4.2 reverse scan, O(B·D_sig) "
+        "live memory) or backward='autodiff'")
+
+
 def signature_from_increments(increments: jax.Array, depth: int, *,
-                              stream: bool = False,
+                              stream: bool = False, stream_stride: int = 1,
                               backward: str = "inverse",
                               backend: str = "jax") -> jax.Array:
     """Truncated signature from increments (B, M, d) -> (B, D_sig).
 
     ``backend`` other than ``"jax"`` routes through the engine dispatch in
-    :mod:`repro.kernels.ops` (Pallas kernels with the same custom VJPs);
-    ``stream=True`` always uses the JAX scan (the output is inherently O(M)).
+    :mod:`repro.kernels.ops` (Pallas kernels with the same custom VJPs) —
+    including ``stream=True``, which emits every ``stream_stride``-th prefix
+    signature as (B, M_out, D_sig).  ``stream`` with ``backward="checkpoint"``
+    raises (see the support matrix in :mod:`repro.kernels.ops`).
     """
     increments, squeeze = _as_batched(increments)
     if depth < 1:
         raise ValueError("depth must be >= 1")
-    if backend != "jax" and not stream:
+    if backend != "jax":
         from repro.kernels import ops  # deferred: ops imports this module
         out = ops.signature(increments, depth, backend=backend,
-                            backward=backward)
+                            backward=backward, stream=stream,
+                            stream_stride=stream_stride)
         return out[0] if squeeze else out
     if stream:
-        out = _scan_forward(increments, depth, stream=True)
+        M = increments.shape[1]
+        if M == 0:  # no steps -> no emissions (the custom VJPs need M >= 1)
+            out = jnp.zeros((increments.shape[0], 0, sig_dim(
+                increments.shape[-1], depth)), increments.dtype)
+        elif backward == "inverse":
+            out = _make_stream_inverse_vjp(depth, stream_stride)(increments)
+        elif backward == "autodiff":
+            out = _subsample_stream(_scan_forward(increments, depth,
+                                                  stream=True),
+                                    M, stream_stride)
+        elif backward == "checkpoint":
+            raise unsupported_stream_backward(backward)
+        else:
+            raise ValueError(f"unknown backward mode {backward!r}")
     elif backward == "inverse":
         out = _make_inverse_vjp(depth)(increments)
     elif backward == "checkpoint":
@@ -217,19 +334,22 @@ def signature_from_increments(increments: jax.Array, depth: int, *,
 
 
 def signature(path: jax.Array, depth: int, *, stream: bool = False,
-              basepoint: bool = False, backward: str = "inverse",
-              backend: str = "jax") -> jax.Array:
+              stream_stride: int = 1, basepoint: bool = False,
+              backward: str = "inverse", backend: str = "jax") -> jax.Array:
     """Truncated signature of a piecewise-linear path (B, M+1, d).
 
     ``basepoint=True`` prepends X_0 = 0 (so translation information is kept).
     ``backend`` selects the compute engine via :mod:`repro.kernels.ops`
     (``"jax"`` | ``"pallas"`` | ``"pallas_interpret"`` | ``"auto"``).
+    ``stream=True`` returns all prefix signatures, strided by
+    ``stream_stride`` (terminal always included).
     """
     path, squeeze = _as_batched(path)
     if basepoint:
         path = jnp.concatenate([jnp.zeros_like(path[:, :1]), path], axis=1)
     incs = tops.path_increments(path)
     out = signature_from_increments(incs, depth, stream=stream,
+                                    stream_stride=stream_stride,
                                     backward=backward, backend=backend)
     return out[0] if squeeze else out
 

@@ -1,0 +1,183 @@
+"""Online signature state: the ``SignatureStream`` carry.
+
+The streamed kernels answer "all prefix signatures of a path I already have";
+this module answers the *online* question: path steps arrive chunk by chunk
+(serving, sensors, tick data) and per-window signature features must stay
+current without ever recomputing from scratch.  The carry is
+
+- ``sig``    — (B, D_sig) flat signature of every increment in the current
+               window, updated by Chen's identity  S' = S ⊗ S(chunk)  (one
+               dispatch call per chunk, any backend);
+- ``ring``   — (B, R, d) ring buffer holding exactly the window's increments,
+               so the *left* end of the window can move too: dropping the
+               oldest increment is the exact group operation
+               S' = exp(-ΔX_oldest) ⊗ S  (Lemma 4.5 / Prop. 4.6 applied from
+               the left — exact only because ΔX_oldest IS the leftmost
+               increment of ``sig``, which the ring invariant guarantees);
+- ``length`` / ``end`` — window length and ring write head.  These are
+  *static* host ints: chunk sizes and drop counts fix them at trace time, so
+  occupancy violations raise immediately instead of silently corrupting the
+  window (a ring overwrite of an increment still covered by ``sig`` would
+  make every later drop inexact).
+
+All array operations are functional (a new ``SignatureStream`` is returned),
+jit- and grad-compatible: the carry is a registered pytree with static
+(d, depth, length, end) metadata.  ``extend(..., return_stream=True)``
+additionally emits the per-step features S_{window_start, t} for every new
+step — the carried prefix Chen-combined with the *streamed* chunk signature
+from the engine dispatch, so the hot loop stays on the configured backend.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from . import tensor_ops as tops
+from .signature import signature_from_increments
+from .words import sig_dim
+
+
+@dataclasses.dataclass(frozen=True)
+class SignatureStream:
+    """Carry for online signature updates (see module docstring).
+
+    Construct with :func:`signature_stream_init`; update with
+    :meth:`extend` / :meth:`rolling_drop` (both return new carries).
+    """
+    sig: jax.Array      # (B, D_sig) signature of the current window
+    ring: jax.Array     # (B, capacity, d) the window's increments (R may be 0)
+    length: int         # static: increments covered by ``sig``
+    end: int            # static: ring write position
+    d: int              # static: path dimension
+    depth: int          # static: truncation depth
+
+    @property
+    def capacity(self) -> int:
+        return self.ring.shape[1]
+
+    @property
+    def batch(self) -> int:
+        return self.sig.shape[0]
+
+    def extend(self, increments: jax.Array, **kw):
+        return signature_stream_extend(self, increments, **kw)
+
+    def rolling_drop(self, n: int):
+        return signature_stream_rolling_drop(self, n)
+
+
+jax.tree_util.register_dataclass(
+    SignatureStream, data_fields=("sig", "ring"),
+    meta_fields=("length", "end", "d", "depth"))
+
+
+def signature_stream_init(batch: int, d: int, depth: int, *,
+                          capacity: int = 0,
+                          dtype=jnp.float32) -> SignatureStream:
+    """Fresh carry: identity signature, empty ring.
+
+    ``capacity`` is the ring size R: with a ring, the window may never hold
+    more than R increments (extend past that raises — drop first), and up to
+    ``length`` oldest increments can be dropped at any time.  ``capacity=0``
+    disables the ring: expanding-window only, unbounded length.
+    """
+    if depth < 1:
+        raise ValueError("depth must be >= 1")
+    if capacity < 0:
+        raise ValueError("capacity must be >= 0")
+    return SignatureStream(
+        sig=jnp.zeros((batch, sig_dim(d, depth)), dtype),
+        ring=jnp.zeros((batch, capacity, d), dtype),
+        length=0, end=0, d=d, depth=depth)
+
+
+def _combine_flat(prefix_flat: jax.Array, chunk_flat: jax.Array, d: int,
+                  depth: int) -> jax.Array:
+    """Chen combine with broadcasting: prefix (B, D) ⊗ chunk (B, T, D)."""
+    a = [jnp.broadcast_to(lv[:, None], (*chunk_flat.shape[:2], lv.shape[-1]))
+         for lv in tops.flat_to_levels(prefix_flat, d, depth)]
+    b = tops.flat_to_levels(chunk_flat, d, depth)
+    return tops.levels_to_flat(tops.chen_mul(a, b))
+
+
+def signature_stream_extend(state: SignatureStream, increments: jax.Array, *,
+                            backend: str = "jax", backward: str = "inverse",
+                            return_stream: bool = False,
+                            stream_stride: int = 1):
+    """Append a chunk of m new increments (B, m, d) to the window.
+
+    Returns the new carry, or ``(carry, features)`` when
+    ``return_stream=True`` — features (B, m_out, D_sig) are the per-step
+    signatures S_{window_start, t} for every emitted step of the chunk
+    (terminal step always included), fully differentiable.
+
+    With a ring, ``length + m`` must stay within capacity (call
+    :func:`signature_stream_rolling_drop` first to make room) — that is the
+    invariant that keeps later drops exact.
+    """
+    B, m, d = increments.shape
+    if d != state.d:
+        raise ValueError(f"increment dim {d} != stream dim {state.d}")
+    if B != state.batch:
+        raise ValueError(f"batch {B} != stream batch {state.batch}")
+    R = state.capacity
+    if R and state.length + m > R:
+        raise ValueError(
+            f"extending by {m} would hold {state.length + m} increments in a "
+            f"ring of capacity {R}; rolling_drop at least "
+            f"{state.length + m - R} first")
+    increments = increments.astype(state.sig.dtype)
+    if return_stream:
+        chunk = signature_from_increments(
+            increments, state.depth, stream=True, stream_stride=stream_stride,
+            backward=backward, backend=backend)        # (B, m_out, D)
+        feats = _combine_flat(state.sig, chunk, state.d, state.depth)
+        new_sig = feats[:, -1]
+    else:
+        chunk = signature_from_increments(increments, state.depth,
+                                          backward=backward, backend=backend)
+        new_sig = _combine_flat(state.sig, chunk[:, None], state.d,
+                                state.depth)[:, 0]
+    if R == 0:
+        new = dataclasses.replace(state, sig=new_sig,
+                                  length=state.length + m)
+    else:
+        idx = (state.end + jnp.arange(m)) % R
+        new = dataclasses.replace(
+            state, sig=new_sig, ring=state.ring.at[:, idx].set(increments),
+            length=state.length + m, end=(state.end + m) % R)
+    return (new, feats) if return_stream else new
+
+
+def signature_stream_rolling_drop(state: SignatureStream,
+                                  n: int) -> SignatureStream:
+    """Drop the n oldest increments from the window: for each, the exact
+    left-inverse update S ← exp(-ΔX_oldest) ⊗ S."""
+    if state.capacity == 0:
+        raise ValueError("rolling_drop needs a ring buffer: init the stream "
+                         "with capacity > 0")
+    if not 0 <= n <= state.length:
+        raise ValueError(f"cannot drop {n} increments from a window of "
+                         f"length {state.length}")
+    if n == 0:
+        return state
+    if n == state.length:
+        # dropping the whole window: the exact result is the identity —
+        # skip the n-step inverse scan (and its accumulated float error)
+        return dataclasses.replace(state, sig=jnp.zeros_like(state.sig),
+                                   length=0)
+    R = state.capacity
+    start = (state.end - state.length) % R          # oldest retained slot
+    idx = (start + jnp.arange(n)) % R
+    dropped = jnp.take(state.ring, idx, axis=1)     # (B, n, d) oldest-first
+
+    def step(levels, dx):
+        e = tops.tensor_exp(-dx, state.depth)
+        return tops.chen_mul(e, levels), None
+
+    levels = tops.flat_to_levels(state.sig, state.d, state.depth)
+    levels, _ = jax.lax.scan(step, levels, jnp.moveaxis(dropped, 1, 0))
+    return dataclasses.replace(state, sig=tops.levels_to_flat(levels),
+                               length=state.length - n)

@@ -1,15 +1,24 @@
-"""Windowed signature computation (paper §5).
+"""Windowed signature computation (paper §5) with unified route selection.
 
 Given index pairs (l_i, r_i), pathsig returns all S_{t_{l_i}, t_{r_i}}(X) in a
-single evaluation.  We materialise per-window increment slices (zero-padded to
-the longest window — zero increments are identity Chen updates, so padding is
-exact) and fold the window axis into the batch axis: windows become an extra
-axis of parallelism, exactly the paper's saturation argument.
+single evaluation.  Two physical routes compute the same answer:
 
-The Chen alternative S_{l,r} = S_{0,l}^{-1} ⊗ S_{0,r} is provided as
-``windowed_signature_chen`` (the paper notes it is cheaper only for heavily
-overlapping windows and can be numerically unstable; benchmarked in
-benchmarks/fig3_windows.py).
+- ``"fold"``  — materialise per-window increment slices (zero-padded to the
+  longest window; zero increments are identity Chen updates, so padding is
+  exact) and fold the window axis into the batch axis: windows become an
+  extra axis of parallelism, exactly the paper's saturation argument.
+  Work ∝ Σ-of-padded-lengths = K · L_max.
+- ``"chen"``  — the Signatory-style identity S_{l,r} = S_{0,l}^{-1} ⊗ S_{0,r}
+  over ONE streamed forward pass of the whole path (the engine dispatch's
+  ``stream=True`` axis, so it runs on every backend and stays differentiable
+  through the streamed §4.2 reverse sweep).  Work ∝ M + c·K — for heavily
+  overlapping sliding windows this is O(M + K) instead of O(Σ L_i).
+
+``route="auto"`` picks between them with a host-side cost model (windows are
+host arrays, so the choice is static and free): the chen route wins when the
+total padded sliced length exceeds the streamed pass plus the per-window
+combines by a safety factor (the paper notes the chen route is numerically
+delicate, so ties go to fold).
 """
 from __future__ import annotations
 
@@ -21,7 +30,15 @@ from . import tensor_ops as tops
 from .projection import projected_signature_from_increments
 from .signature import signature_from_increments, signature_inverse, \
     signature_combine
-from .words import WordPlan, sig_dim
+from .words import WordPlan, flat_index, sig_dim
+
+ROUTES = ("auto", "fold", "chen")
+
+# cost-model constants: a window's inverse + Chen combine costs about as much
+# as a few Horner scan steps, and the chen route must win by a clear margin
+# before we accept its numerics (S^{-1} ⊗ S cancellation on long prefixes).
+_CHEN_COMBINE_STEPS = 4
+_CHEN_ADVANTAGE = 2.0
 
 
 def _check_windows(windows, M: int) -> np.ndarray:
@@ -36,6 +53,30 @@ def _check_windows(windows, M: int) -> np.ndarray:
             raise ValueError(f"windows must satisfy l <= r; got "
                              f"{windows_np.tolist()}")
     return windows_np
+
+
+def select_route(route: str, windows_np: np.ndarray, M: int,
+                 chen_cost_scale: float = 1.0,
+                 backward: str = "inverse") -> str:
+    """Host-side cost model: fold work = K · L_max padded scan steps, chen
+    work = one length-M streamed pass + ~_CHEN_COMBINE_STEPS steps per window
+    (scaled by ``chen_cost_scale`` when the streamed pass runs over a larger
+    basis than the fold route, e.g. full truncation vs a small closure).
+
+    ``backward="checkpoint"`` pins ``"auto"`` to the fold route: the chen
+    route rides the streamed forward, which has no checkpoint backward (the
+    support matrix in :mod:`repro.kernels.ops`)."""
+    if route not in ROUTES:
+        raise ValueError(f"unknown route {route!r}; expected one of {ROUTES}")
+    if route != "auto":
+        return route
+    if windows_np.shape[0] == 0 or backward == "checkpoint":
+        return "fold"
+    lengths = windows_np[:, 1] - windows_np[:, 0]
+    K, L_max = len(lengths), int(lengths.max())
+    fold_work = K * max(L_max, 1)
+    chen_work = (M + _CHEN_COMBINE_STEPS * K) * chen_cost_scale
+    return "chen" if fold_work > _CHEN_ADVANTAGE * chen_work else "fold"
 
 
 def _window_increments(path: jax.Array, windows_np: np.ndarray) -> jax.Array:
@@ -59,22 +100,58 @@ def _window_increments(path: jax.Array, windows_np: np.ndarray) -> jax.Array:
     return g * mask[None, :, :, None]
 
 
+def _chen_endpoint_states(path: jax.Array, windows_np: np.ndarray, depth: int,
+                          backward: str, backend: str):
+    """One streamed forward over the whole path -> (S_{0,l}, S_{0,r}) flats
+    of shape (B, K, D_sig) each.  Differentiable on every backend via the
+    streamed custom VJP in the dispatch layer."""
+    incs = tops.path_increments(path)
+    stream = signature_from_increments(incs, depth, stream=True,
+                                       backward=backward,
+                                       backend=backend)     # (B, M, D)
+    # prepend the identity signature so index t reads S_{0,t} (t = 0 valid)
+    ident = jnp.zeros_like(stream[:, :1])
+    stream = jnp.concatenate([ident, stream], axis=1)       # (B, M+1, D)
+    windows = jnp.asarray(windows_np)
+    s_l = jnp.take(stream, windows[:, 0], axis=1)           # (B, K, D)
+    s_r = jnp.take(stream, windows[:, 1], axis=1)
+    return s_l, s_r
+
+
+def _chen_route_signature(path: jax.Array, windows_np: np.ndarray, depth: int,
+                          backward: str, backend: str) -> jax.Array:
+    """S_{l,r} = S_{0,l}^{-1} ⊗ S_{0,r} from the streamed forward."""
+    d = path.shape[-1]
+    s_l, s_r = _chen_endpoint_states(path, windows_np, depth, backward,
+                                     backend)
+    D = s_l.shape[-1]
+    inv = signature_inverse(s_l.reshape(-1, D), d, depth)
+    out = signature_combine(inv, s_r.reshape(-1, D), d, depth)
+    return out.reshape(s_l.shape)
+
+
 def windowed_signature(path: jax.Array, windows, depth: int, *,
-                       backward: str = "inverse",
+                       route: str = "auto", backward: str = "inverse",
                        backend: str = "jax") -> jax.Array:
     """(B, M+1, d) x (K, 2) -> (B, K, D_sig) in one batched evaluation.
 
-    Folded windows ride the engine dispatch (:mod:`repro.kernels.ops`), so
-    every backend's kernel forward + O(1)-in-length backward applies per
-    window.  An empty window set yields an empty (B, 0, D_sig) result.
+    ``route`` picks the physical plan (see module docstring): ``"fold"``
+    slices + folds windows into the batch axis, ``"chen"`` combines endpoint
+    states of one streamed pass, ``"auto"`` chooses by the host-side cost
+    model.  Both routes ride the engine dispatch (:mod:`repro.kernels.ops`),
+    so every backend's kernel forward + O(1)-in-length backward applies.  An
+    empty window set yields an empty (B, 0, D_sig) result.
     """
     if path.ndim == 2:
-        return windowed_signature(path[None], windows, depth,
+        return windowed_signature(path[None], windows, depth, route=route,
                                   backward=backward, backend=backend)[0]
     B, d = path.shape[0], path.shape[-1]
-    windows = _check_windows(windows, path.shape[1] - 1)
+    M = path.shape[1] - 1
+    windows = _check_windows(windows, M)
     if windows.shape[0] == 0:
         return jnp.zeros((B, 0, sig_dim(d, depth)), path.dtype)
+    if select_route(route, windows, M, backward=backward) == "chen":
+        return _chen_route_signature(path, windows, depth, backward, backend)
     g = _window_increments(path, windows)                  # (B, K, L, d)
     K, L, d = g.shape[1:]
     flat = signature_from_increments(g.reshape(B * K, L, d), depth,
@@ -83,16 +160,31 @@ def windowed_signature(path: jax.Array, windows, depth: int, *,
 
 
 def windowed_projection(path: jax.Array, windows, plan: WordPlan, *,
-                        backward: str = "inverse",
+                        route: str = "auto", backward: str = "inverse",
                         backend: str = "jax") -> jax.Array:
-    """Windowed + word-projected signatures in one call (B, K, |I|)."""
+    """Windowed + word-projected signatures in one call (B, K, |I|).
+
+    The chen route computes the FULL truncated streamed signature at the
+    plan's depth and projects the combined windows onto the requested words
+    (Chen's identity needs all suffix coefficients, which an arbitrary word
+    set does not retain), so its cost model is scaled by D_sig / closure —
+    ``route="auto"`` only takes it when the overlap still pays for that.
+    """
     if path.ndim == 2:
-        return windowed_projection(path[None], windows, plan,
+        return windowed_projection(path[None], windows, plan, route=route,
                                    backward=backward, backend=backend)[0]
-    B = path.shape[0]
-    windows = _check_windows(windows, path.shape[1] - 1)
+    B, d = path.shape[0], path.shape[-1]
+    M = path.shape[1] - 1
+    windows = _check_windows(windows, M)
     if windows.shape[0] == 0:
         return jnp.zeros((B, 0, len(plan.words)), path.dtype)
+    scale = sig_dim(d, plan.depth) / float(1 + plan.closure_size)
+    if select_route(route, windows, M, chen_cost_scale=scale,
+                    backward=backward) == "chen":
+        full = _chen_route_signature(path, windows, plan.depth, backward,
+                                     backend)
+        idx = jnp.asarray([flat_index(w, d) for w in plan.words])
+        return jnp.take(full, idx, axis=-1)
     g = _window_increments(path, windows)
     K, L, d = g.shape[1:]
     out = projected_signature_from_increments(g.reshape(B * K, L, d), plan,
@@ -101,24 +193,17 @@ def windowed_projection(path: jax.Array, windows, plan: WordPlan, *,
     return out.reshape(B, K, -1)
 
 
-def windowed_signature_chen(path: jax.Array, windows, depth: int) -> jax.Array:
-    """Signatory-style alternative: S_{l,r} = S_{0,l}^{-1} ⊗ S_{0,r}."""
-    if path.ndim == 2:
-        return windowed_signature_chen(path[None], windows, depth)[0]
-    d = path.shape[-1]
-    windows = jnp.asarray(_check_windows(windows, path.shape[1] - 1))
-    if windows.shape[0] == 0:
-        return jnp.zeros((path.shape[0], 0, sig_dim(d, depth)), path.dtype)
-    stream = signature_from_increments(tops.path_increments(path), depth,
-                                       stream=True)        # (B, M, D)
-    # prepend the identity signature for l = 0
-    ident = jnp.zeros_like(stream[:, :1])
-    stream = jnp.concatenate([ident, stream], axis=1)       # (B, M+1, D)
-    s_l = jnp.take(stream, windows[:, 0], axis=1)           # (B, K, D)
-    s_r = jnp.take(stream, windows[:, 1], axis=1)
-    inv = signature_inverse(s_l.reshape(-1, s_l.shape[-1]), d, depth)
-    out = signature_combine(inv, s_r.reshape(-1, s_r.shape[-1]), d, depth)
-    return out.reshape(s_l.shape)
+def windowed_signature_chen(path: jax.Array, windows, depth: int, *,
+                            backward: str = "inverse",
+                            backend: str = "jax") -> jax.Array:
+    """Signatory-style alternative: S_{l,r} = S_{0,l}^{-1} ⊗ S_{0,r}.
+
+    Equivalent to ``windowed_signature(..., route="chen")`` — kept as a
+    public name with the same ``backend=``/``backward=`` surface as the
+    other windowed entry points.
+    """
+    return windowed_signature(path, windows, depth, route="chen",
+                              backward=backward, backend=backend)
 
 
 def expanding_windows(M: int, stride: int = 1) -> np.ndarray:

@@ -14,24 +14,33 @@ exactly one place.
                    validation; the container's default).
 - ``"auto"``     — pallas on TPU, jax elsewhere.
 
-Backend × backward support matrix
----------------------------------
+Backend × backward × stream support matrix
+------------------------------------------
 
-Every cell is differentiable via ``jax.grad``; cells marked (jax) fall back
-to the pure-JAX engine because the Pallas forward cannot supply the
+Every supported cell is differentiable via ``jax.grad``; cells marked (jax)
+fall back to the pure-JAX engine because the Pallas forward cannot supply the
 residuals that backward mode needs (no autodiff rule through ``pallas_call``;
-no chunk-boundary output for the word kernel):
+no chunk-boundary output for the word kernel); cells marked ✗ raise
+``NotImplementedError``:
 
-=====================  ============================  =====================  ==========
-engine                 backward="inverse"            "checkpoint"           "autodiff"
-=====================  ============================  =====================  ==========
-jax, truncated         scan fwd + §4.2 reverse       √M boundaries + replay scan AD
-jax, projected         scan fwd + §4.2 reverse       √M boundaries + replay scan AD
-pallas, truncated      kernel fwd + §4.2 reverse     kernel chunk fwd,      (jax)
-                                                     Chen-combined, √M bwd
-pallas, projected      closure-kernel fwd +          (jax)                  (jax)
-                       §4.2 reverse
-=====================  ============================  =====================  ==========
+=====================  ======  ============================  =====================  ==========
+engine                 stream  backward="inverse"            "checkpoint"           "autodiff"
+=====================  ======  ============================  =====================  ==========
+jax, truncated         False   scan fwd + §4.2 reverse       √M boundaries + replay scan AD
+jax, truncated         True    streamed scan fwd +           ✗                      scan AD
+                               streamed §4.2 reverse
+jax, projected         False   scan fwd + §4.2 reverse       √M boundaries + replay scan AD
+jax, projected         True    streamed scan fwd +           ✗                      scan AD
+                               streamed §4.2 reverse
+pallas, truncated      False   kernel fwd + §4.2 reverse     kernel chunk fwd,      (jax)
+                                                             Chen-combined, √M bwd
+pallas, truncated      True    streamed kernel fwd +         ✗                      (jax)
+                               streamed §4.2 reverse
+pallas, projected      False   closure-kernel fwd +          (jax)                  (jax)
+                               §4.2 reverse
+pallas, projected      True    streamed closure-kernel fwd   ✗                      (jax)
+                               + streamed §4.2 reverse
+=====================  ======  ============================  =====================  ==========
 
 The Pallas ``inverse`` rows are the paper's headline training path: the
 kernel computes the forward, the backward reconstructs
@@ -40,6 +49,15 @@ sequence length (§4.2).  The ``checkpoint`` row for truncated signatures runs
 the kernel over √M-length chunks folded into the batch axis, Chen-combines
 the chunk signatures (storing the √M boundary states), and replays chunks on
 the backward — drift-immune on very long paths.
+
+``stream=True`` rows emit every ``stream_stride``-th prefix signature inside
+the time loop — (B, M_out, D) with M_out = ceil(M / stride), terminal step
+always included (``repro.core.signature.stream_emit_steps``).  Their
+``inverse`` backward is the §4.2 reverse sweep generalised to cotangents
+arriving at every emitted step: still ONE reverse scan with O(B·D_sig) live
+memory, with only the terminal state kept as residual.  ``checkpoint`` is
+pointless there (the output already materialises the boundary states) and
+raises.
 
 Also provides ``signature_time_parallel``: a beyond-paper optimisation that
 splits the time axis into C chunks, computes chunk signatures independently
@@ -58,9 +76,12 @@ import numpy as np
 
 from repro.core import tensor_ops as tops
 from repro.core.signature import (checkpoint_bwd_scan, default_chunk,
-                                  inverse_bwd_scan, signature_from_increments)
+                                  inverse_bwd_scan, signature_from_increments,
+                                  stream_inverse_bwd_scan,
+                                  unsupported_stream_backward)
 from repro.core.projection import (projected_inverse_bwd_scan,
-                                   projected_signature_from_increments)
+                                   projected_signature_from_increments,
+                                   projected_stream_inverse_bwd_scan)
 from repro.core.words import TiledPlan, WordPlan, make_plan, make_tiled_plan
 from .sig_trunc import sig_trunc
 from .sig_words import sig_words
@@ -176,40 +197,71 @@ def _pallas_sig_checkpoint(depth: int, chunk: int, batch_tile: int,
     return sig
 
 
+@lru_cache(maxsize=None)
+def _pallas_sig_stream(depth: int, stride: int, batch_tile: int,
+                       split: int | None, interpret: bool):
+    """Streamed kernel forward + generalised §4.2 backward: cotangents arrive
+    at every emitted step, one reverse scan, O(B·D_sig) live memory."""
+    def kernel(increments):
+        return sig_trunc(increments, depth, batch_tile=batch_tile,
+                         split=split, interpret=interpret, stream=True,
+                         stream_stride=stride)
+
+    @jax.custom_vjp
+    def sig(increments):
+        return kernel(increments)
+
+    def fwd(increments):
+        out = kernel(increments)
+        return out, (increments, out[:, -1])  # terminal step always emitted
+
+    def bwd(res, g_steps):
+        increments, terminal = res
+        return (stream_inverse_bwd_scan(increments, terminal, g_steps, depth,
+                                        stride),)
+
+    sig.defvjp(fwd, bwd)
+    return sig
+
+
 # ---------------------------------------------------------------------------
-# plan normalisation + caches (host-side, identity/value keyed)
+# plan normalisation + caches — keyed by plan CONTENT (d, words), never by
+# WordPlan/TiledPlan object identity, so rebuilding an identical plan hits
+# the same compiled kernels instead of recompiling and growing the caches
 # ---------------------------------------------------------------------------
 
 @lru_cache(maxsize=None)
 def _plan_for_words(words: tuple, d: int) -> WordPlan:
+    """The interned WordPlan for a word set: one canonical object per
+    (words, d) content, shared by every jit/lru cache downstream."""
     return make_plan(words, d)
 
 
 @lru_cache(maxsize=None)
-def _wplan_of_tiled(tplan: TiledPlan) -> WordPlan:
-    return make_plan(tplan.words, tplan.d)
+def _tiled_for_words(words: tuple, d: int, max_rows: int) -> TiledPlan:
+    """The interned TiledPlan — content-keyed for the same reason (TiledPlan
+    hashes by identity, and ``sig_words`` jit-caches on the plan object)."""
+    return make_tiled_plan(words, d, max_rows=max_rows)
 
 
 @lru_cache(maxsize=None)
-def _tiled_of_wplan(wplan: WordPlan, max_rows: int) -> TiledPlan:
-    return make_tiled_plan(wplan.words, wplan.d, max_rows=max_rows)
-
-
-@lru_cache(maxsize=None)
-def _closure_tiled_plan(wplan: WordPlan, max_rows: int) -> TiledPlan:
-    """Tiled plan whose *requested* words are the closure of ``wplan`` — the
-    kernel computes the closure rows anyway, so asking for them adds output
-    gather only, and the terminal closure state is what the §4.2 backward
-    reconstructs from."""
-    return make_tiled_plan(wplan.closure, wplan.d, max_rows=max_rows)
+def _closure_tiled_plan(words: tuple, d: int, max_rows: int) -> TiledPlan:
+    """Tiled plan whose *requested* words are the prefix closure of the word
+    set — the kernel computes the closure rows anyway, so asking for them adds
+    output gather only, and the terminal closure state is what the §4.2
+    backward reconstructs from."""
+    wplan = _plan_for_words(words, d)
+    return make_tiled_plan(wplan.closure, d, max_rows=max_rows)
 
 
 def _normalise_plans(plan, d: int) -> tuple[WordPlan, TiledPlan | None]:
-    """-> (WordPlan, TiledPlan-or-None) from any accepted plan spelling."""
+    """-> (interned WordPlan, TiledPlan-or-None) from any accepted plan
+    spelling.  The WordPlan is always the canonical content-interned object,
+    so two structurally equal plans resolve to the same kernel caches."""
     if isinstance(plan, TiledPlan):
-        return _wplan_of_tiled(plan), plan
+        return _plan_for_words(plan.words, plan.d), plan
     if isinstance(plan, WordPlan):
-        return plan, None
+        return _plan_for_words(plan.words, plan.d), None
     return _plan_for_words(tuple(tuple(w) for w in plan), d), None
 
 
@@ -218,10 +270,12 @@ def _normalise_plans(plan, d: int) -> tuple[WordPlan, TiledPlan | None]:
 # ---------------------------------------------------------------------------
 
 @lru_cache(maxsize=None)
-def _pallas_proj_inverse(wplan: WordPlan, batch_tile: int, max_rows: int,
+def _pallas_proj_inverse(words: tuple, d: int, batch_tile: int, max_rows: int,
                          interpret: bool):
-    """Word-kernel forward over the prefix closure + §4.2 backward."""
-    closure_tplan = _closure_tiled_plan(wplan, max_rows)
+    """Word-kernel forward over the prefix closure + §4.2 backward.
+    Content-keyed: (words, d) identify the plan, not object identity."""
+    wplan = _plan_for_words(words, d)
+    closure_tplan = _closure_tiled_plan(words, d, max_rows)
     out_rows = np.asarray(wplan.out_rows)
 
     def closure_state(increments):
@@ -246,17 +300,73 @@ def _pallas_proj_inverse(wplan: WordPlan, batch_tile: int, max_rows: int,
     return proj
 
 
+@lru_cache(maxsize=None)
+def _pallas_proj_stream(words: tuple, d: int, stride: int, batch_tile: int,
+                        max_rows: int, interpret: bool):
+    """Streamed word-kernel forward over the prefix closure + streamed §4.2
+    backward (cotangents at every emitted step, one reverse scan)."""
+    wplan = _plan_for_words(words, d)
+    closure_tplan = _closure_tiled_plan(words, d, max_rows)
+    out_rows = np.asarray(wplan.out_rows)
+
+    def closure_stream(increments):
+        cw = sig_words(increments, closure_tplan, batch_tile=batch_tile,
+                       interpret=interpret, stream=True,
+                       stream_stride=stride)         # (B, M_out, W)
+        ones = jnp.ones((*cw.shape[:2], 1), cw.dtype)
+        return jnp.concatenate([ones, cw], axis=-1)  # (B, M_out, 1 + W)
+
+    @jax.custom_vjp
+    def proj(increments):
+        return jnp.take(closure_stream(increments), out_rows, axis=-1)
+
+    def fwd(increments):
+        S = closure_stream(increments)
+        # terminal closure state is the last emitted step — the only residual
+        return jnp.take(S, out_rows, axis=-1), (increments, S[:, -1])
+
+    def bwd(res, g_steps):
+        increments, S_T = res
+        return (projected_stream_inverse_bwd_scan(increments, S_T, g_steps,
+                                                  wplan, stride),)
+
+    proj.defvjp(fwd, bwd)
+    return proj
+
+
 # ---------------------------------------------------------------------------
 # public dispatch
 # ---------------------------------------------------------------------------
 
 def signature(increments: jax.Array, depth: int, *, backend: str = "auto",
               backward: str = "inverse", batch_tile: int = 128,
-              split: int | None = None, time_chunks: int = 1) -> jax.Array:
+              split: int | None = None, time_chunks: int = 1,
+              stream: bool = False, stream_stride: int = 1) -> jax.Array:
     """Truncated signature (B, M, d) -> (B, D_sig), differentiable on every
-    backend (see the support matrix in the module docstring)."""
+    backend (see the support matrix in the module docstring).
+
+    ``stream=True`` -> (B, M_out, D_sig) prefix signatures at every
+    ``stream_stride``-th step (terminal always included).
+    """
     engine, interpret = resolve_backend(backend)
     _check_backward(backward)
+    if stream:
+        if stream_stride < 1:
+            raise ValueError(
+                f"stream_stride must be >= 1, got {stream_stride}")
+        if backward == "checkpoint":
+            raise unsupported_stream_backward(backward)
+        if time_chunks > 1:
+            raise NotImplementedError(
+                "stream=True is incompatible with time_chunks > 1: chunked "
+                "signatures only reconstruct the terminal state")
+        if engine == "jax" or backward == "autodiff" \
+                or increments.shape[1] == 0:  # M=0: no emissions, any engine
+            return signature_from_increments(
+                increments, depth, stream=True, stream_stride=stream_stride,
+                backward=backward, backend="jax")
+        return _pallas_sig_stream(depth, stream_stride, batch_tile, split,
+                                  interpret)(increments)
     if engine == "jax" or backward == "autodiff":
         # autodiff has no Pallas rule: route to the jax engine entirely so
         # the forward actually produces the residuals the scan AD consumes.
@@ -275,13 +385,32 @@ def signature(increments: jax.Array, depth: int, *, backend: str = "auto",
 
 def projected(increments: jax.Array, plan, *, backend: str = "auto",
               backward: str = "inverse", batch_tile: int = 128,
-              max_rows: int = 256) -> jax.Array:
+              max_rows: int = 256, stream: bool = False,
+              stream_stride: int = 1) -> jax.Array:
     """Projected signature over a word set / plan (B, M, d) -> (B, |I|),
     differentiable on every backend.  ``plan`` may be a WordPlan, a
-    TiledPlan, or an iterable of letter tuples."""
+    TiledPlan, or an iterable of letter tuples.
+
+    ``stream=True`` -> (B, M_out, |I|) per-step projections.
+    """
     engine, interpret = resolve_backend(backend)
     _check_backward(backward)
     wplan, tplan = _normalise_plans(plan, increments.shape[-1])
+    if stream:
+        if stream_stride < 1:
+            raise ValueError(
+                f"stream_stride must be >= 1, got {stream_stride}")
+        if backward == "checkpoint":
+            raise unsupported_stream_backward(backward)
+        if engine == "jax" or backward == "autodiff" \
+                or increments.shape[1] == 0:  # M=0: no emissions, any engine
+            return projected_signature_from_increments(
+                increments, wplan, stream=True, stream_stride=stream_stride,
+                backward=backward, backend="jax")
+        if tplan is not None:  # keep the caller's tile granularity
+            max_rows = max(p.closure_size for p in tplan.tiles)
+        return _pallas_proj_stream(wplan.words, wplan.d, stream_stride,
+                                   batch_tile, max_rows, interpret)(increments)
     if engine == "jax" or backward != "inverse":
         # checkpoint needs chunk-boundary closure states the word kernel
         # cannot emit; autodiff needs scan residuals — both run on jax.
@@ -289,7 +418,7 @@ def projected(increments: jax.Array, plan, *, backend: str = "auto",
             increments, wplan, backward=backward, backend="jax")
     if tplan is not None:  # keep the caller's tile granularity
         max_rows = max(p.closure_size for p in tplan.tiles)
-    return _pallas_proj_inverse(wplan, batch_tile, max_rows,
+    return _pallas_proj_inverse(wplan.words, wplan.d, batch_tile, max_rows,
                                 interpret)(increments)
 
 
@@ -305,7 +434,7 @@ def projected_forward_only(increments: jax.Array, plan, *,
         return projected_signature_from_increments(increments, wplan,
                                                    backend="jax")
     if tplan is None:
-        tplan = _tiled_of_wplan(wplan, max_rows)
+        tplan = _tiled_for_words(wplan.words, wplan.d, max_rows)
     return sig_words(increments, tplan, batch_tile=batch_tile,
                      interpret=interpret)
 

@@ -14,6 +14,13 @@ outer product is a sublane reshape-broadcast — no gathers anywhere.
 
 Per-cell state block (rows × B_TILE), rows =
   [ path: levels 1..s-1 along u ] ++ [ cone levels s..N: d^0, d^1, ..., d^{N-s} rows ]
+
+Streaming (``stream=True``): the running state lives in a VMEM scratch block
+and every ``stream_stride``-th step (plus the terminal step) is copied into an
+(M_out, rows, B_TILE) output block *inside* the time loop — the kernel emits
+all prefix signatures S_{0,t_j} in one pass.  ``stream_stride`` bounds the
+output block so VMEM/HBM stays proportional to M_out = ceil(M / stride), not
+M; the emitted step indices are ``repro.core.signature.stream_emit_steps``.
 """
 from __future__ import annotations
 
@@ -24,6 +31,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.words import sig_dim
 
@@ -56,7 +64,13 @@ def choose_split(d: int, depth: int, batch_tile: int,
     return depth - 1
 
 
-def _kernel(incs_ref, out_ref, *, d: int, depth: int, s: int, M: int):
+def _kernel(incs_ref, out_ref, *scratch, d: int, depth: int, s: int, M: int,
+            stream_stride: int = 0):
+    """Cone update loop.  Non-streamed: ``out_ref`` IS the running state.
+    Streamed (``stream_stride >= 1``): the state lives in the trailing VMEM
+    scratch ref and strided snapshots are stored into ``out_ref``."""
+    stream = bool(scratch)
+    state_ref = scratch[0] if stream else out_ref
     n_path = max(0, s - 1)
     base = cone_base_level(s)
     co = cone_offsets(d, depth, s)
@@ -69,7 +83,7 @@ def _kernel(incs_ref, out_ref, *, d: int, depth: int, s: int, M: int):
     # letters of the cell's prefix word u (traced scalars, most significant first)
     letters = [(c // d ** (s - 1 - k)) % d for k in range(s)]
 
-    out_ref[...] = jnp.zeros(out_ref.shape, out_ref.dtype)
+    state_ref[...] = jnp.zeros(state_ref.shape, state_ref.dtype)
 
     def body(j, _):
         dx = incs_ref[pl.ds(j, 1), :, :][0]  # (d, B)
@@ -79,7 +93,7 @@ def _kernel(incs_ref, out_ref, *, d: int, depth: int, s: int, M: int):
                for k in range(s)]
 
         def path_val(lev):  # old value of ancestor u_{1:lev}, lev in 1..s-1
-            return out_ref[lev - 1:lev, :]
+            return state_ref[lev - 1:lev, :]
 
         def chain(n):
             """Horner accumulator for target level n (paper Alg. 1):
@@ -92,7 +106,7 @@ def _kernel(incs_ref, out_ref, *, d: int, depth: int, s: int, M: int):
                 elif jj <= s:        # on-path step, width 1
                     acc = (path_val(jj - 1) + acc) * dxl[jj - 1] * inv
                 else:                # cone expansion: width d^{jj-1-s} -> d^{jj-s}
-                    prev = out_ref[cone_slice(jj - 1), :]
+                    prev = state_ref[cone_slice(jj - 1), :]
                     t = prev + acc
                     w = t.shape[0]
                     acc = (t[:, None, :] * dx[None, :, :]).reshape(w * d, B) * inv
@@ -102,13 +116,22 @@ def _kernel(incs_ref, out_ref, *, d: int, depth: int, s: int, M: int):
         for n in range(depth, base - 1, -1):
             acc = chain(n)
             sl = cone_slice(n)
-            out_ref[sl, :] = out_ref[sl, :] + acc
+            state_ref[sl, :] = state_ref[sl, :] + acc
         # ancestor path levels n = s-1 .. 1 (width-1 chains)
         for n in range(min(s - 1, depth), 0, -1):
             acc = dxl[0] * (1.0 / n)
             for jj in range(2, n + 1):
                 acc = (path_val(jj - 1) + acc) * dxl[jj - 1] * (1.0 / (n - jj + 1))
-            out_ref[n - 1:n, :] = out_ref[n - 1:n, :] + acc
+            state_ref[n - 1:n, :] = state_ref[n - 1:n, :] + acc
+        if stream:
+            # strided per-step emission: slot q holds S_{0,t_{j+1}}; the
+            # terminal step is always emitted so out[-1] is the full signature
+            q = j // stream_stride
+
+            @pl.when((((j + 1) % stream_stride) == 0) | (j == M - 1))
+            def _emit():
+                pl.store(out_ref, (pl.ds(q, 1), slice(None), slice(None)),
+                         state_ref[...][None])
         return 0
 
     jax.lax.fori_loop(0, M, body, 0)
@@ -132,15 +155,43 @@ def _reassemble(out, d, depth, s, B):
     return flat[:, :B].T
 
 
+def _reassemble_stream(out, d, depth, s, B):
+    """(M_out, n_cells, n_path+cone, B_pad) -> (B, M_out, D_sig)."""
+    T = out.shape[0]
+    n_cells = d**s
+    n_path = max(0, s - 1)
+    base = cone_base_level(s)
+    co = cone_offsets(d, depth, s)
+    levels = []
+    for lev in range(1, s):  # ancestor levels, gathered from owning cells
+        idx = np.arange(d**lev) * d ** (s - lev)
+        levels.append(out[:, idx, lev - 1, :])  # (T, d^lev, B_pad)
+    for n in range(base, depth + 1):  # cone global levels
+        k = n - base
+        blk = out[:, :, n_path + int(co[k]):n_path + int(co[k + 1]), :]
+        levels.append(blk.reshape(T, n_cells * d ** (n - s), -1))
+    flat = jnp.concatenate(levels, axis=1)  # (T, D_sig, B_pad)
+    return jnp.moveaxis(flat[:, :, :B], -1, 0)  # (B, T, D_sig)
+
+
 @functools.partial(jax.jit, static_argnames=("depth", "batch_tile", "split",
-                                             "interpret", "vmem_budget"))
+                                             "interpret", "vmem_budget",
+                                             "stream", "stream_stride"))
 def sig_trunc(increments: jax.Array, depth: int, *, batch_tile: int = 128,
               split: int | None = None, interpret: bool = True,
-              vmem_budget: int = 6 * 2**20) -> jax.Array:
-    """Truncated signature via the Pallas cone kernel.  (B, M, d) -> (B, D_sig)."""
+              vmem_budget: int = 6 * 2**20, stream: bool = False,
+              stream_stride: int = 1) -> jax.Array:
+    """Truncated signature via the Pallas cone kernel.  (B, M, d) -> (B, D_sig).
+
+    ``stream=True`` emits every ``stream_stride``-th prefix signature (the
+    terminal step always included): (B, M, d) -> (B, M_out, D_sig) with
+    M_out = ceil(M / stream_stride).
+    """
     B, M, d = increments.shape
     if depth < 1:
         raise ValueError("depth must be >= 1")
+    if stream_stride < 1:
+        raise ValueError(f"stream_stride must be >= 1, got {stream_stride}")
     s = choose_split(d, depth, batch_tile, vmem_budget) if split is None else split
     if not 0 <= s < depth:
         raise ValueError(f"split {s} outside [0, {depth})")
@@ -152,13 +203,32 @@ def sig_trunc(increments: jax.Array, depth: int, *, batch_tile: int = 128,
     x = jnp.moveaxis(increments, 0, -1)  # (M, d, B)
     x = jnp.pad(x, ((0, 0), (0, 0), (0, B_pad - B))).astype(jnp.float32)
 
+    if not stream:
+        out = pl.pallas_call(
+            functools.partial(_kernel, d=d, depth=depth, s=s, M=M),
+            grid=(B_pad // batch_tile, n_cells),
+            in_specs=[pl.BlockSpec((M, d, batch_tile),
+                                   lambda bi, c: (0, 0, bi))],
+            out_specs=pl.BlockSpec((rows, batch_tile), lambda bi, c: (c, bi)),
+            out_shape=jax.ShapeDtypeStruct((n_cells * rows, B_pad),
+                                           jnp.float32),
+            interpret=interpret,
+        )(x)
+        out = out.reshape(n_cells, rows, B_pad)
+        return _reassemble(out, d, depth, s, B).astype(increments.dtype)
+
+    M_out = -(-M // stream_stride)
     out = pl.pallas_call(
-        functools.partial(_kernel, d=d, depth=depth, s=s, M=M),
+        functools.partial(_kernel, d=d, depth=depth, s=s, M=M,
+                          stream_stride=stream_stride),
         grid=(B_pad // batch_tile, n_cells),
         in_specs=[pl.BlockSpec((M, d, batch_tile), lambda bi, c: (0, 0, bi))],
-        out_specs=pl.BlockSpec((rows, batch_tile), lambda bi, c: (c, bi)),
-        out_shape=jax.ShapeDtypeStruct((n_cells * rows, B_pad), jnp.float32),
+        out_specs=pl.BlockSpec((M_out, rows, batch_tile),
+                               lambda bi, c: (0, c, bi)),
+        out_shape=jax.ShapeDtypeStruct((M_out, n_cells * rows, B_pad),
+                                       jnp.float32),
+        scratch_shapes=[pltpu.VMEM((rows, batch_tile), jnp.float32)],
         interpret=interpret,
     )(x)
-    out = out.reshape(n_cells, rows, B_pad)
-    return _reassemble(out, d, depth, s, B).astype(increments.dtype)
+    out = out.reshape(M_out, n_cells, rows, B_pad)
+    return _reassemble_stream(out, d, depth, s, B).astype(increments.dtype)

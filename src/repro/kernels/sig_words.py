@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.words import TiledPlan, WordPlan, make_tiled_plan
 
@@ -41,16 +42,22 @@ def _tile_tables(plan: WordPlan, W_pad: int, depth_pad: int):
     return P, L, inv, emit
 
 
-def _kernel(incs_ref, p_ref, l_ref, inv_ref, emit_ref, out_ref, *,
-            M: int, depth: int):
-    W1 = out_ref.shape[0]  # 1 + W_pad
-    B = out_ref.shape[1]
-    init = jnp.zeros((W1, B), out_ref.dtype).at[0, :].set(1.0)  # S[eps] = 1
-    out_ref[...] = init
+def _kernel(incs_ref, p_ref, l_ref, inv_ref, emit_ref, out_ref, *scratch,
+            M: int, depth: int, stream_stride: int = 0):
+    """Tile update loop.  Non-streamed: ``out_ref`` IS the running closure
+    buffer.  Streamed (``stream_stride >= 1``): the buffer lives in the
+    trailing VMEM scratch ref and strided snapshots are stored into
+    ``out_ref`` (one (1+W, B) slab per emitted step)."""
+    stream = bool(scratch)
+    state_ref = scratch[0] if stream else out_ref
+    W1 = state_ref.shape[0]  # 1 + W_pad
+    B = state_ref.shape[1]
+    init = jnp.zeros((W1, B), state_ref.dtype).at[0, :].set(1.0)  # S[eps] = 1
+    state_ref[...] = init
 
     def body(j, _):
         dx = incs_ref[pl.ds(j, 1), :, :][0]        # (d, B)
-        S = out_ref[...]                            # (1+W, B), old values
+        S = state_ref[...]                          # (1+W, B), old values
         acc = jnp.zeros((W1 - 1, B), S.dtype)
         h = acc
         for jj in range(depth):                     # Horner steps (Alg. 1)
@@ -59,21 +66,34 @@ def _kernel(incs_ref, p_ref, l_ref, inv_ref, emit_ref, out_ref, *,
             dxl = jnp.dot(l_ref[0, jj], dx, preferred_element_type=S.dtype)
             acc = (pfx + acc) * dxl * inv_ref[0, jj][:, None]
             h = h + acc * emit_ref[0, jj][:, None]
-        out_ref[1:, :] = S[1:, :] + h
+        state_ref[1:, :] = S[1:, :] + h
+        if stream:
+            q = j // stream_stride
+
+            @pl.when((((j + 1) % stream_stride) == 0) | (j == M - 1))
+            def _emit():
+                pl.store(out_ref, (pl.ds(q, 1), slice(None), slice(None)),
+                         state_ref[...][None])
         return 0
 
     jax.lax.fori_loop(0, M, body, 0)
 
 
-@functools.partial(jax.jit, static_argnames=("tplan", "batch_tile", "interpret"))
+@functools.partial(jax.jit, static_argnames=("tplan", "batch_tile", "interpret",
+                                             "stream", "stream_stride"))
 def sig_words(increments: jax.Array, tplan: TiledPlan, *,
-              batch_tile: int = 128, interpret: bool = True) -> jax.Array:
+              batch_tile: int = 128, interpret: bool = True,
+              stream: bool = False, stream_stride: int = 1) -> jax.Array:
     """Projected signature via the Pallas tile kernel.
 
     increments: (B, M, d)  ->  (B, |I|) coefficients in tplan.words order.
+    ``stream=True`` emits every ``stream_stride``-th prefix state (terminal
+    step always included): (B, M, d) -> (B, M_out, |I|).
     """
     B, M, d = increments.shape
     assert d == tplan.d
+    if stream_stride < 1:
+        raise ValueError(f"stream_stride must be >= 1, got {stream_stride}")
     tiles = tplan.tiles
     T = len(tiles)
     W_pad = max(8, -(-max(p.closure_size for p in tiles) // 8) * 8)
@@ -92,24 +112,45 @@ def sig_words(increments: jax.Array, tplan: TiledPlan, *,
     x = jnp.moveaxis(increments, 0, -1)
     x = jnp.pad(x, ((0, 0), (0, 0), (0, B_pad - B))).astype(jnp.float32)
 
-    out = pl.pallas_call(
-        functools.partial(_kernel, M=M, depth=depth),
-        grid=(B_pad // batch_tile, T),
-        in_specs=[
-            pl.BlockSpec((M, d, batch_tile), lambda bi, t: (0, 0, bi)),
-            pl.BlockSpec((1, depth, W_pad, 1 + W_pad), lambda bi, t: (t, 0, 0, 0)),
-            pl.BlockSpec((1, depth, W_pad, d), lambda bi, t: (t, 0, 0, 0)),
-            pl.BlockSpec((1, depth, W_pad), lambda bi, t: (t, 0, 0)),
-            pl.BlockSpec((1, depth, W_pad), lambda bi, t: (t, 0, 0)),
-        ],
-        out_specs=pl.BlockSpec((1 + W_pad, batch_tile), lambda bi, t: (t, bi)),
-        out_shape=jax.ShapeDtypeStruct((T * (1 + W_pad), B_pad), jnp.float32),
-        interpret=interpret,
-    )(x, Pt, Lt, invt, emitt)
-
-    out = out.reshape(T, 1 + W_pad, B_pad)
+    in_specs = [
+        pl.BlockSpec((M, d, batch_tile), lambda bi, t: (0, 0, bi)),
+        pl.BlockSpec((1, depth, W_pad, 1 + W_pad), lambda bi, t: (t, 0, 0, 0)),
+        pl.BlockSpec((1, depth, W_pad, d), lambda bi, t: (t, 0, 0, 0)),
+        pl.BlockSpec((1, depth, W_pad), lambda bi, t: (t, 0, 0)),
+        pl.BlockSpec((1, depth, W_pad), lambda bi, t: (t, 0, 0)),
+    ]
     tile_idx = jnp.asarray([t for t, _ in tplan.gather], dtype=jnp.int32)
     row_idx = jnp.asarray(
         [tiles[t].out_rows[k] for t, k in tplan.gather], dtype=jnp.int32)
-    vals = out[tile_idx, row_idx, :B]   # (n_words, B)
-    return vals.T.astype(increments.dtype)
+
+    if not stream:
+        out = pl.pallas_call(
+            functools.partial(_kernel, M=M, depth=depth),
+            grid=(B_pad // batch_tile, T),
+            in_specs=in_specs,
+            out_specs=pl.BlockSpec((1 + W_pad, batch_tile),
+                                   lambda bi, t: (t, bi)),
+            out_shape=jax.ShapeDtypeStruct((T * (1 + W_pad), B_pad),
+                                           jnp.float32),
+            interpret=interpret,
+        )(x, Pt, Lt, invt, emitt)
+        out = out.reshape(T, 1 + W_pad, B_pad)
+        vals = out[tile_idx, row_idx, :B]   # (n_words, B)
+        return vals.T.astype(increments.dtype)
+
+    M_out = -(-M // stream_stride)
+    out = pl.pallas_call(
+        functools.partial(_kernel, M=M, depth=depth,
+                          stream_stride=stream_stride),
+        grid=(B_pad // batch_tile, T),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((M_out, 1 + W_pad, batch_tile),
+                               lambda bi, t: (0, t, bi)),
+        out_shape=jax.ShapeDtypeStruct((M_out, T * (1 + W_pad), B_pad),
+                                       jnp.float32),
+        scratch_shapes=[pltpu.VMEM((1 + W_pad, batch_tile), jnp.float32)],
+        interpret=interpret,
+    )(x, Pt, Lt, invt, emitt)
+    out = out.reshape(M_out, T, 1 + W_pad, B_pad)
+    vals = out[:, tile_idx, row_idx, :B]    # (M_out, n_words, B)
+    return jnp.moveaxis(vals, -1, 0).astype(increments.dtype)

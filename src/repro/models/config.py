@@ -14,6 +14,7 @@ class SigHeadConfig:
     stride: int = 1            # subsample hidden trajectory before signing
     backend: str = "auto"      # engine dispatch (repro.kernels.ops)
     backward: str = "inverse"  # inverse | checkpoint | autodiff
+    stream_stride: int = 1     # per-step feature emission stride (sig_stream_features)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -4,6 +4,12 @@ Pools a hidden-state trajectory (B, S, d_model) through a (projected)
 truncated signature of a learned low-dimensional path — a drop-in,
 fully-differentiable alternative to mean/last-token pooling for any
 architecture in the pool (DESIGN.md §Arch-applicability).
+
+:func:`sig_stream_features` is the per-step variant: the engine dispatch's
+streamed forward emits the prefix signature of the learned path at every
+``stream_stride``-th position, producing a (B, S_out, n_out) feature
+trajectory that transformer/SSM blocks can consume as auxiliary per-token
+inputs (trained end to end through the streamed §4.2 backward).
 """
 from __future__ import annotations
 
@@ -12,6 +18,7 @@ import jax.numpy as jnp
 
 from repro.core import logsignature, signature, sig_dim, logsig_dim
 from repro.core.projection import projected_signature
+from repro.core.signature import stream_emit_steps
 from repro.core.words import WordPlan
 from .config import ModelConfig, SigHeadConfig
 from .layers import _init
@@ -30,16 +37,53 @@ def init_sig_head(key, cfg: ModelConfig, n_out: int) -> dict:
             "out": _init(k2, (feature_dim(sc), n_out))}
 
 
-def sig_pool(p, hidden: jax.Array, cfg: ModelConfig,
-             plan: WordPlan | None = None) -> jax.Array:
-    """(B, S, d_model) -> (B, n_out) sequence-level readout."""
-    sc = cfg.sig_head
+def _learned_path(p, hidden: jax.Array, sc: SigHeadConfig) -> jax.Array:
+    """(B, S, d_model) -> normalised low-dimensional path (B, S', channels)."""
     path = jnp.einsum("bsd,dc->bsc", hidden, p["proj"].astype(hidden.dtype))
     path = path.astype(jnp.float32)
     if sc.stride > 1:
         path = path[:, ::sc.stride]
     # normalise scale so deep signatures stay well-conditioned
-    path = path / jnp.sqrt(jnp.float32(path.shape[1]))
+    return path / jnp.sqrt(jnp.float32(path.shape[1]))
+
+
+def sig_stream_features(p, hidden: jax.Array, cfg: ModelConfig,
+                        plan: WordPlan | None = None) -> jax.Array:
+    """(B, S, d_model) -> (B, S_out, n_out) per-step signature features.
+
+    Step t carries the signature of the learned path over [0, t] (the
+    expanding window), emitted every ``sig_head.stream_stride`` positions by
+    the streamed engine dispatch — O(B·D_sig) live training memory via the
+    streamed inverse backward, whatever the backend.
+    """
+    sc = cfg.sig_head
+    if sc.use_logsig:
+        raise NotImplementedError(
+            "streamed per-step log-signature features are not supported; "
+            "use use_logsig=False (or pool with sig_pool)")
+    path = _learned_path(p, hidden, sc)
+    if plan is not None:
+        feats = projected_signature(path, plan.words, sc.channels, plan=plan,
+                                    stream=True,
+                                    stream_stride=sc.stream_stride,
+                                    backend=sc.backend, backward=sc.backward)
+    else:
+        feats = signature(path, sc.depth, stream=True,
+                          stream_stride=sc.stream_stride,
+                          backend=sc.backend, backward=sc.backward)
+    # per-step displacement rides along, mirroring the pooled feature layout
+    steps = stream_emit_steps(path.shape[1] - 1, sc.stream_stride)
+    disp = jnp.take(path, jnp.asarray(steps) + 1, axis=1) - path[:, :1]
+    feats = jnp.concatenate([feats, disp], axis=-1)
+    return jnp.einsum("btf,fo->bto", feats.astype(hidden.dtype),
+                      p["out"].astype(hidden.dtype))
+
+
+def sig_pool(p, hidden: jax.Array, cfg: ModelConfig,
+             plan: WordPlan | None = None) -> jax.Array:
+    """(B, S, d_model) -> (B, n_out) sequence-level readout."""
+    sc = cfg.sig_head
+    path = _learned_path(p, hidden, sc)
     # all three feature routes ride the engine dispatch (repro.kernels.ops):
     # the configured backend's kernel forward + O(1)-in-length backward is
     # exactly the path jax.grad differentiates during training.

@@ -1,7 +1,12 @@
-"""Serving: prefill + decode steps and a small batched engine.
+"""Serving: prefill + decode steps, a small batched engine, and the online
+signature-feature engine.
 
 ``serve_step`` is the unit the decode_* / long_* dry-run cells lower: one new
 token for every sequence in the batch against a seq_len-sized KV/state cache.
+``SigStreamEngine`` is the streaming analogue for signature features: fixed
+batch slots whose per-step windowed signatures stay current as path chunks
+arrive, on an O(B·D_sig) carry (:class:`repro.core.stream.SignatureStream`)
+instead of recomputation per request.
 """
 from __future__ import annotations
 
@@ -12,6 +17,7 @@ import jax
 import jax.numpy as jnp
 
 import repro.models as M
+from repro.core.stream import SignatureStream, signature_stream_init
 from repro.models import encdec, transformer as T
 from repro.models.config import ModelConfig
 
@@ -53,6 +59,59 @@ def make_serve_step(cfg: ModelConfig, temperature: float = 0.0):
         return next_tok[:, None].astype(jnp.int32), cache
 
     return serve_step
+
+
+@dataclasses.dataclass
+class SigStreamEngine:
+    """Batched online signature-feature engine (continuous-batching analogue
+    for streaming features).
+
+    Fixed batch slots share one :class:`SignatureStream` carry; every
+    :meth:`push` of a (B, m, d) increment chunk returns the per-step
+    signature features over the current window, (B, m_out, D_sig).  With
+    ``window > 0`` the engine keeps a hopping window: before each push it
+    drops however many oldest increments are needed so the window never
+    exceeds ``window`` (chunks larger than the window keep only their tail).
+    The carry is O(B·D_sig + B·window·d) — independent of how long the
+    streams run — and the hot loop is the engine dispatch's streamed forward
+    on the configured backend.
+    """
+    d: int
+    depth: int
+    batch: int
+    window: int = 0             # 0 = expanding window (never drop)
+    backend: str = "auto"
+    stream_stride: int = 1
+    dtype: jnp.dtype = jnp.float32
+
+    def __post_init__(self):
+        self.state: SignatureStream = signature_stream_init(
+            self.batch, self.d, self.depth, capacity=self.window,
+            dtype=self.dtype)
+
+    def push(self, increments: jax.Array) -> jax.Array:
+        """Feed (B, m, d) new increments; returns (B, m_out, D_sig) per-step
+        features of the emitted steps (terminal step always included)."""
+        B, m, d = increments.shape
+        if self.window and m > self.window:
+            increments = increments[:, m - self.window:]
+            m = self.window
+        if self.window:
+            need = max(0, self.state.length + m - self.window)
+            if need:
+                self.state = self.state.rolling_drop(need)
+        self.state, feats = self.state.extend(
+            increments, backend=self.backend, return_stream=True,
+            stream_stride=self.stream_stride)
+        return feats
+
+    @property
+    def features(self) -> jax.Array:
+        """Current (B, D_sig) window signature for every slot."""
+        return self.state.sig
+
+    def reset(self) -> None:
+        self.__post_init__()
 
 
 @dataclasses.dataclass

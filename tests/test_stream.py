@@ -1,0 +1,359 @@
+"""Stream-axis tests: streamed kernels/dispatch identities, window routes,
+and the online SignatureStream carry."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.core as C
+from repro.core import tensor_ops as tops
+from repro.core.signature import signature_from_increments, stream_emit_steps
+from repro.core.projection import _scan_projected
+from repro.core.stream import signature_stream_init
+from repro.core.windows import select_route
+from repro.core.words import make_plan
+from repro.kernels import ops
+
+BACKENDS = ["jax", "pallas_interpret", "auto"]
+WORDS = [(0,), (2, 1), (1, 1, 0), (0, 0, 1)]
+
+
+def _incs(seed, B, M, d):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=(B, M, d)).astype(np.float32) * 0.3)
+
+
+def _plan():
+    return make_plan(WORDS, 3)
+
+
+# ---------------------------------------------------------------------------
+# stream_emit_steps contract
+# ---------------------------------------------------------------------------
+
+def test_stream_emit_steps():
+    assert list(stream_emit_steps(10, 1)) == list(range(10))
+    assert list(stream_emit_steps(10, 4)) == [3, 7, 9]   # terminal appended
+    assert list(stream_emit_steps(8, 4)) == [3, 7]
+    assert list(stream_emit_steps(3, 100)) == [2]        # stride > M
+    assert len(stream_emit_steps(10, 4)) == -(-10 // 4)  # ceil(M/stride)
+    assert list(stream_emit_steps(0, 3)) == []           # M=0: no emissions
+    with pytest.raises(ValueError, match="stream_stride"):
+        stream_emit_steps(10, 0)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_stream_zero_length_path(backend):
+    """M=0 streamed calls used to crash with an out-of-range gather."""
+    x = jnp.zeros((2, 0, 3), jnp.float32)
+    out = ops.signature(x, 3, backend=backend, stream=True, stream_stride=2)
+    assert out.shape == (2, 0, C.sig_dim(3, 3))
+    proj = ops.projected(x, _plan(), backend=backend, stream=True)
+    assert proj.shape == (2, 0, len(WORDS))
+
+
+# ---------------------------------------------------------------------------
+# streamed forward identities on every backend
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("stride", [1, 3])
+def test_stream_last_step_is_terminal_every_backend(backend, stride):
+    x = _incs(0, 2, 10, 3)
+    out = ops.signature(x, 3, backend=backend, batch_tile=8, stream=True,
+                        stream_stride=stride)
+    assert out.shape == (2, -(-10 // stride), C.sig_dim(3, 3))
+    term = ops.signature(x, 3, backend=backend, batch_tile=8)
+    np.testing.assert_allclose(out[:, -1], term, rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("stride", [1, 2, 7])
+def test_stream_values_match_scan_oracle(backend, stride):
+    x = _incs(1, 2, 9, 3)
+    steps = jnp.asarray(stream_emit_steps(9, stride))
+    ref = signature_from_increments(x, 3, stream=True,
+                                    backward="autodiff")[:, steps]
+    out = ops.signature(x, 3, backend=backend, batch_tile=8, stream=True,
+                        stream_stride=stride)
+    np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("stride", [1, 4])
+def test_projected_stream_values(backend, stride):
+    x = _incs(2, 2, 9, 3)
+    plan = _plan()
+    steps = jnp.asarray(stream_emit_steps(9, stride))
+    ref = _scan_projected(x, plan, stream=True)[:, steps]
+    out = ops.projected(x, plan, backend=backend, batch_tile=8, stream=True,
+                        stream_stride=stride)
+    np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# streamed gradients: the generalised §4.2 reverse sweep vs the jax oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["jax", "pallas_interpret"])
+@pytest.mark.parametrize("stride", [1, 2])
+def test_stream_grad_matches_autodiff_oracle(backend, stride):
+    x = _incs(3, 2, 8, 3)
+
+    def loss(fn):
+        return lambda z: jnp.sum(jnp.tanh(fn(z)))
+
+    g_ref = jax.grad(loss(lambda z: signature_from_increments(
+        z, 3, stream=True, stream_stride=stride, backward="autodiff")))(x)
+    g = jax.grad(loss(lambda z: ops.signature(
+        z, 3, backend=backend, batch_tile=8, stream=True,
+        stream_stride=stride)))(x)
+    np.testing.assert_allclose(g, g_ref, rtol=1e-4, atol=1e-6)
+
+
+@pytest.mark.parametrize("backend", ["jax", "pallas_interpret"])
+def test_projected_stream_grad_matches_oracle(backend):
+    x = _incs(4, 2, 7, 3)
+    plan = _plan()
+    g_ref = jax.grad(lambda z: jnp.sum(jnp.sin(_scan_projected(
+        z, plan, stream=True))))(x)
+    g = jax.grad(lambda z: jnp.sum(jnp.sin(ops.projected(
+        z, plan, backend=backend, batch_tile=8, stream=True))))(x)
+    np.testing.assert_allclose(g, g_ref, rtol=1e-4, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# unsupported stream cells raise (no more silent degradation)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_stream_checkpoint_raises(backend):
+    x = _incs(5, 1, 6, 2)
+    with pytest.raises(NotImplementedError, match="stream"):
+        ops.signature(x, 2, backend=backend, backward="checkpoint",
+                      stream=True)
+    with pytest.raises(NotImplementedError, match="stream"):
+        signature_from_increments(x, 2, stream=True, backward="checkpoint",
+                                  backend=backend)
+
+
+def test_stream_time_chunks_raises():
+    x = _incs(6, 1, 6, 2)
+    with pytest.raises(NotImplementedError, match="time_chunks"):
+        ops.signature(x, 2, backend="pallas_interpret", stream=True,
+                      time_chunks=2)
+
+
+def test_stream_stride_validates():
+    x = _incs(7, 1, 6, 2)
+    with pytest.raises(ValueError, match="stream_stride"):
+        ops.signature(x, 2, backend="jax", stream=True, stream_stride=0)
+
+
+# ---------------------------------------------------------------------------
+# window routes: fold vs chen agree, auto picks sensibly, grads match
+# ---------------------------------------------------------------------------
+
+def _path(seed, B, M, d):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(np.cumsum(rng.normal(size=(B, M + 1, d)) * 0.3,
+                                 axis=1).astype(np.float32))
+
+
+def test_fold_vs_chen_random_overlapping_windows():
+    path = _path(0, 2, 30, 3)
+    rng = np.random.default_rng(1)
+    l = rng.integers(0, 25, size=12)
+    r = l + rng.integers(1, 6, size=12)
+    windows = np.stack([l, np.minimum(r, 30)], axis=1).astype(np.int32)
+    a = C.windowed_signature(path, windows, 3, route="fold")
+    b = C.windowed_signature(path, windows, 3, route="chen")
+    np.testing.assert_allclose(a, b, rtol=1e-3, atol=1e-5)
+
+
+@pytest.mark.parametrize("backend", ["jax", "pallas_interpret"])
+def test_window_route_grads_match(backend):
+    path = _path(2, 2, 24, 3)
+    windows = C.sliding_windows(24, 12, stride=2)  # heavy overlap
+
+    def g(route):
+        return jax.grad(lambda p: jnp.sum(C.windowed_signature(
+            p, windows, 3, route=route, backend=backend) ** 2))(path)
+
+    g_ref = jax.grad(lambda p: jnp.sum(C.windowed_signature(
+        p, windows, 3, route="fold", backward="autodiff",
+        backend="jax") ** 2))(path)
+    np.testing.assert_allclose(g("fold"), g_ref, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(g("chen"), g_ref, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(g("auto"), g_ref, rtol=1e-4, atol=1e-5)
+
+
+def test_windowed_checkpoint_backward_stays_on_fold_route():
+    """route='auto' + backward='checkpoint' used to pick chen and raise
+    (the chen route streams, and stream has no checkpoint backward)."""
+    path = _path(8, 2, 24, 3)
+    heavy = C.sliding_windows(24, 12, stride=1)
+    assert select_route("auto", heavy, 24, backward="checkpoint") == "fold"
+    out = C.windowed_signature(path, heavy, 3, backward="checkpoint")
+    ref = C.windowed_signature(path, heavy, 3, route="fold")
+    np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-6)
+    C.windowed_projection(path, heavy, _plan(), backward="checkpoint")
+
+
+def test_rolling_drop_everything_resets_exactly():
+    x = _incs(30, 2, 8, 3)
+    st = signature_stream_init(2, 3, 3, capacity=8).extend(x)
+    st = st.rolling_drop(8)
+    assert st.length == 0
+    assert float(jnp.max(jnp.abs(st.sig))) == 0.0  # exact identity, no drift
+
+
+def test_route_cost_model():
+    # heavy overlap: many long windows over a short path -> chen
+    heavy = C.sliding_windows(64, 32, stride=2)
+    assert select_route("auto", heavy, 64) == "chen"
+    # disjoint short windows -> fold
+    light = np.asarray([[0, 4], [30, 34], [60, 64]], np.int32)
+    assert select_route("auto", light, 64) == "fold"
+    assert select_route("fold", heavy, 64) == "fold"    # explicit wins
+    assert select_route("chen", light, 64) == "chen"
+    with pytest.raises(ValueError, match="route"):
+        select_route("nope", light, 64)
+
+
+def test_windowed_signature_chen_has_backend_surface():
+    path = _path(3, 2, 16, 3)
+    windows = C.sliding_windows(16, 8, stride=4)
+    a = C.windowed_signature_chen(path, windows, 3)
+    b = C.windowed_signature_chen(path, windows, 3,
+                                  backend="pallas_interpret",
+                                  backward="inverse")
+    np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+
+
+def test_windowed_projection_routes_agree():
+    path = _path(4, 2, 24, 3)
+    windows = C.sliding_windows(24, 12, stride=3)
+    plan = _plan()
+    a = C.windowed_projection(path, windows, plan, route="fold")
+    b = C.windowed_projection(path, windows, plan, route="chen")
+    np.testing.assert_allclose(a, b, rtol=1e-3, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# SignatureStream: online extend / rolling_drop identities
+# ---------------------------------------------------------------------------
+
+def test_stream_state_extend_matches_one_shot():
+    x = _incs(10, 2, 20, 3)
+    st = signature_stream_init(2, 3, 3, capacity=32)
+    st = st.extend(x[:, :7]).extend(x[:, 7:12]).extend(x[:, 12:])
+    ref = signature_from_increments(x, 3)
+    np.testing.assert_allclose(st.sig, ref, rtol=1e-5, atol=1e-6)
+    assert st.length == 20
+
+
+def test_stream_state_rolling_drop_matches_fresh_window():
+    x = _incs(11, 2, 18, 3)
+    st = signature_stream_init(2, 3, 3, capacity=18).extend(x)
+    st = st.rolling_drop(6)
+    ref = signature_from_increments(x[:, 6:], 3)
+    np.testing.assert_allclose(st.sig, ref, rtol=1e-5, atol=1e-6)
+    # matches the windowed entry point too
+    path = jnp.concatenate([jnp.zeros_like(x[:, :1]),
+                            jnp.cumsum(x, axis=1)], axis=1)
+    win = C.windowed_signature(path, np.asarray([[6, 18]], np.int32), 3)
+    np.testing.assert_allclose(st.sig, win[:, 0], rtol=1e-5, atol=1e-6)
+
+
+def test_stream_state_ring_wraparound():
+    x = _incs(12, 1, 30, 2)
+    st = signature_stream_init(1, 2, 3, capacity=10)
+    pos = 0
+    for k in range(6):  # hop 5: extend 5, drop as needed
+        chunk = x[:, 5 * k:5 * (k + 1)]
+        need = max(0, st.length + 5 - 10)
+        st = st.rolling_drop(need).extend(chunk)
+        pos += need
+    ref = signature_from_increments(x[:, pos:], 3)
+    np.testing.assert_allclose(st.sig, ref, rtol=1e-4, atol=1e-5)
+    assert st.length == 30 - pos
+
+
+def test_stream_state_return_stream_features():
+    x = _incs(13, 2, 12, 3)
+    st = signature_stream_init(2, 3, 3).extend(x[:, :5])
+    st, feats = st.extend(x[:, 5:], return_stream=True)
+    ref = signature_from_increments(x, 3, stream=True,
+                                    backward="autodiff")[:, 5:]
+    np.testing.assert_allclose(feats, ref, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(st.sig, feats[:, -1], rtol=1e-6, atol=1e-7)
+
+
+def test_stream_state_guards():
+    st = signature_stream_init(1, 2, 2, capacity=4)
+    with pytest.raises(ValueError, match="capacity"):
+        st.extend(_incs(14, 1, 5, 2))  # overflow
+    with pytest.raises(ValueError, match="drop"):
+        st.extend(_incs(15, 1, 3, 2)).rolling_drop(4)  # more than held
+    with pytest.raises(ValueError, match="ring"):
+        signature_stream_init(1, 2, 2).rolling_drop(1)  # no ring
+    with pytest.raises(ValueError, match="dim"):
+        st.extend(_incs(16, 1, 2, 3))
+
+
+def test_stream_state_grad_and_jit():
+    x = _incs(17, 2, 10, 3)
+
+    def loss(z):
+        st = signature_stream_init(2, 3, 3, capacity=16)
+        st = st.extend(z).rolling_drop(3)
+        return jnp.sum(st.sig ** 2)
+
+    g = jax.grad(loss)(x)
+    g_ref = jax.grad(lambda z: jnp.sum(signature_from_increments(
+        z[:, 3:], 3) ** 2))(x)
+    # dropped steps carry ~1e-6 float32 cancellation residue (exact-zero in
+    # the reference), hence the absolute tolerance
+    np.testing.assert_allclose(g, g_ref, rtol=1e-4, atol=5e-6)
+    st = jax.jit(lambda s, z: s.extend(z))(
+        signature_stream_init(2, 3, 3, capacity=16), x)
+    assert st.length == 10
+
+
+# ---------------------------------------------------------------------------
+# serving + model wiring
+# ---------------------------------------------------------------------------
+
+def test_sig_stream_engine_hopping_window():
+    from repro.serve import SigStreamEngine
+    eng = SigStreamEngine(d=3, depth=3, batch=2, window=12, backend="jax")
+    x = _incs(20, 2, 24, 3)
+    for k in range(6):
+        feats = eng.push(x[:, 4 * k:4 * (k + 1)])
+        assert feats.shape == (2, 4, C.sig_dim(3, 3))
+    assert eng.state.length <= 12
+    lo = 24 - eng.state.length
+    ref = signature_from_increments(x[:, lo:], 3)
+    np.testing.assert_allclose(eng.features, ref, rtol=1e-4, atol=1e-5)
+    eng.reset()
+    assert eng.state.length == 0
+
+
+def test_sig_head_stream_features_match_pool_at_terminal():
+    from repro.models.config import ModelConfig, SigHeadConfig
+    from repro.models.sig_head import (init_sig_head, sig_pool,
+                                       sig_stream_features)
+    cfg = ModelConfig(name="t", family="decoder", n_layers=1, d_model=16,
+                      n_heads=2, n_kv_heads=2, d_ff=32, vocab_size=64,
+                      sig_head=SigHeadConfig(channels=3, depth=3,
+                                             stream_stride=2))
+    p = init_sig_head(jax.random.PRNGKey(0), cfg, 5)
+    h = jnp.asarray(np.random.default_rng(21).normal(
+        size=(2, 9, 16)).astype(np.float32))
+    feats = sig_stream_features(p, h, cfg)
+    assert feats.shape == (2, 4, 5)  # ceil(8 steps / stride 2)
+    np.testing.assert_allclose(feats[:, -1], sig_pool(p, h, cfg),
+                               rtol=1e-5, atol=1e-6)
+    g = jax.grad(lambda hh: jnp.sum(sig_stream_features(p, hh, cfg) ** 2))(h)
+    assert bool(jnp.all(jnp.isfinite(g)))
