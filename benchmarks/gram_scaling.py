@@ -1,0 +1,133 @@
+"""Signature-kernel Gram scaling: oracle vs tiled vs Pallas routes.
+
+The kernel subsystem's perf claim is a *memory law*, not just wall-clock:
+the tiled route computes G = S_x diag(ω) S_yᵀ blocked over the word axis, so
+peak live intermediates are O(B_x·B_y + B·block_words) — never the
+(B_x, B_y, D_sig) tensor of the textbook elementwise formula.  This bench
+reports, per (B, M, d, N) cell:
+
+- wall-clock of the oracle route, the tiled jax route and the tiled route on
+  ``PATHSIG_BACKEND`` (CPU numbers here; the *ratios* are the claim);
+- XLA temp bytes of the tiled Gram across a block-size sweep, against the
+  would-be full intermediate B_x·B_y·D_sig·4 (the Table-2-style law);
+- the MMD-loss gradient cross-check between ``backend="jax"`` and
+  ``backend="pallas_interpret"`` (the subsystem's acceptance gate).
+
+Every record lands in ``BENCH_gram.json`` (cwd), matching the convention of
+``fig3_windows.py``, so CI tracks the trajectory per PR.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.words import sig_dim
+from repro.kernels import ops
+from repro.sigkernel import sig_gram, sig_mmd, signature_features, \
+    word_weights
+from .common import header, make_paths, row, temp_bytes, time_fn
+
+BACKEND = os.environ.get("PATHSIG_BACKEND", "auto")
+JSON_PATH = os.environ.get("PATHSIG_BENCH_JSON", "BENCH_gram.json")
+
+CELLS_QUICK = [  # (B, M, d, N)
+    (32, 64, 3, 4),
+    (48, 64, 4, 4),
+]
+CELLS_FULL = CELLS_QUICK + [
+    (128, 128, 4, 5),
+    (256, 128, 5, 4),
+]
+
+
+def _grad_relerr(g, g_ref):
+    denom = float(np.max(np.abs(np.asarray(g_ref)))) + 1e-12
+    return float(np.max(np.abs(np.asarray(g) - np.asarray(g_ref)))) / denom
+
+
+def _bench_cell(B, M, d, N, iters):
+    X = make_paths(B, M, d, seed=0)
+    Y = make_paths(B, M, d, seed=1)
+    D = sig_dim(d, N)
+    gamma = tuple(0.5 + 1.5 * k / max(d - 1, 1) for k in range(d))
+    tag = f"B={B};M={M};d={d};N={N};D={D};backend={BACKEND}"
+    rec = {"B": B, "M": M, "d": d, "depth": N, "D_sig": D,
+           "backend": BACKEND, "gamma": gamma}
+
+    def run_route(route, backend):
+        return jax.jit(lambda a, b: sig_gram(
+            a, b, N, gamma=gamma, route=route, backend=backend))
+
+    t_oracle = time_fn(run_route("oracle", "jax"), X, Y, warmup=1,
+                       iters=iters)
+    t_tiled = time_fn(run_route("tiled", "jax"), X, Y, warmup=1, iters=iters)
+    t_back = time_fn(run_route("tiled", BACKEND), X, Y, warmup=1,
+                     iters=iters)
+    rec.update(oracle_ms=t_oracle * 1e3, tiled_jax_ms=t_tiled * 1e3,
+               tiled_backend_ms=t_back * 1e3)
+    row("gram/oracle", f"{t_oracle*1e3:.3f}", "ms", tag)
+    row("gram/tiled_jax", f"{t_tiled*1e3:.3f}", "ms", tag)
+    row(f"gram/tiled_{BACKEND}", f"{t_back*1e3:.3f}", "ms", tag)
+
+    a = np.asarray(run_route("oracle", "jax")(X, Y))
+    b = np.asarray(run_route("tiled", BACKEND)(X, Y))
+    err = float(np.max(np.abs(a - b)) / (np.max(np.abs(a)) + 1e-12))
+    rec["tiled_vs_oracle_relerr"] = err
+    row("gram/tiled_vs_oracle_relerr", f"{err:.2e}", "", tag)
+
+    # memory law: tiled temp bytes across a block sweep vs the would-be
+    # (B_x, B_y, D_sig) intermediate
+    Sx = signature_features(X, N)
+    Sy = signature_features(Y, N)
+    w = jnp.asarray(word_weights(d, N, gamma=gamma))
+    full = B * B * D * 4
+    rec["full_intermediate_bytes"] = full
+    sweeps = []
+    for block in (128, 512, 2048):
+        tb = temp_bytes(lambda sx, sy, ww, blk=block: ops.gram(
+            sx, sy, ww, backend="jax", block_words=blk), Sx, Sy, w)
+        sweeps.append({"block_words": block, "temp_bytes": tb,
+                       "vs_full": tb / full})
+        row("gram/tiled_temp_bytes", tb, "bytes",
+            f"{tag};block={block};full_intermediate={full}")
+    rec["block_sweep"] = sweeps
+    return rec
+
+
+def _mmd_grad_check():
+    """jax.grad of the MMD loss: backend='jax' vs 'pallas_interpret'."""
+    X = make_paths(6, 24, 3, seed=2)
+    Y = make_paths(5, 24, 3, seed=3)
+
+    def loss(backend):
+        return jax.grad(lambda a: sig_mmd(a, Y, 3, backend=backend))(X)
+
+    return _grad_relerr(loss("pallas_interpret"), loss("jax"))
+
+
+def run(quick: bool = True) -> None:
+    header("gram: signature-kernel Gram scaling (repro.sigkernel)")
+    iters = 3 if quick else 10
+    records = [_bench_cell(*cell, iters)
+               for cell in (CELLS_QUICK if quick else CELLS_FULL)]
+    err = _mmd_grad_check()
+    row("gram/mmd_grad_jax_vs_pallas_relerr", f"{err:.2e}", "", "")
+    out = {"benchmark": "gram_scaling", "backend": BACKEND,
+           "mmd_grad_jax_vs_pallas_relerr": err, "records": records}
+    with open(JSON_PATH, "w") as f:
+        json.dump(out, f, indent=2)
+    row("gram/json", JSON_PATH, "path", "")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI sizes (the default; kept explicit for CI logs)")
+    ap.add_argument("--full", action="store_true", help="paper-scale sweeps")
+    args = ap.parse_args()
+    run(quick=not args.full)

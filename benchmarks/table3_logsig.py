@@ -6,16 +6,30 @@ log-signature WITHOUT materialising all d^N level-N coefficients
 read Lyndon coordinates).  The paper reports the projected route is often
 2-3x faster than the corresponding full-signature computation; here we
 report the dense/projected ratio and the coefficient-count saving directly.
+
+Both routes honour the ``PATHSIG_BACKEND`` env var (the engine dispatch's
+backend string, e.g. ``pallas_interpret`` or ``hybrid`` for the projected
+route), and every record lands in ``BENCH_table3.json`` — matching the
+convention ``fig3_windows.py`` established.
 """
 from __future__ import annotations
+
+import argparse
+import json
+import os
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import logsig_dim, lyndon_words, sig_dim
+from repro.core import logsig_dim, sig_dim
 from repro.core.logsignature import (_projected_tables, logsignature,
                                      logsignature_projected)
 from .common import header, make_paths, row, time_fn
+
+BACKEND = os.environ.get("PATHSIG_BACKEND", "jax")
+# the hybrid engine is projected-only: the dense route pins jax instead
+DENSE_BACKEND = "jax" if BACKEND == "hybrid" else BACKEND
+JSON_PATH = os.environ.get("PATHSIG_BENCH_JSON", "BENCH_table3.json")
 
 CELLS = [  # (B, M, d, N) — paper Table 3 shapes, CPU-sized
     (32, 100, 6, 2), (32, 100, 6, 3), (32, 100, 6, 4),
@@ -27,23 +41,27 @@ CELLS = [  # (B, M, d, N) — paper Table 3 shapes, CPU-sized
 def run(quick: bool = True) -> None:
     header("table3: log-signature runtime (paper Table 3 / Fig 2)")
     iters = 3 if quick else 10
+    records = []
     for B, M, d, N in CELLS:
         path = make_paths(B, M, d)
-        dense = jax.jit(lambda p: logsignature(p, N))
-        proj = jax.jit(lambda p: logsignature_projected(p, N))
+        dense = jax.jit(lambda p: logsignature(p, N, backend=DENSE_BACKEND))
+        proj = jax.jit(lambda p: logsignature_projected(p, N,
+                                                        backend=BACKEND))
         t_dense = time_fn(dense, path, warmup=1, iters=iters)
         t_proj = time_fn(proj, path, warmup=1, iters=iters)
         # training mode: grad of sum-of-squares through each route
-        g_dense = jax.jit(jax.grad(lambda p: jnp.sum(logsignature(p, N) ** 2)))
-        g_proj = jax.jit(jax.grad(
-            lambda p: jnp.sum(logsignature_projected(p, N) ** 2)))
+        g_dense = jax.jit(jax.grad(lambda p: jnp.sum(
+            logsignature(p, N, backend=DENSE_BACKEND) ** 2)))
+        g_proj = jax.jit(jax.grad(lambda p: jnp.sum(
+            logsignature_projected(p, N, backend=BACKEND) ** 2)))
         tg_dense = time_fn(g_dense, path, warmup=1, iters=iters)
         tg_proj = time_fn(g_proj, path, warmup=1, iters=iters)
 
         plan = _projected_tables(d, N)[0]
         n_dense = sig_dim(d, N)
         n_proj = plan.closure_size
-        tag = f"B={B};M={M};d={d};N={N};logsig_dim={logsig_dim(d, N)}"
+        tag = (f"B={B};M={M};d={d};N={N};logsig_dim={logsig_dim(d, N)};"
+               f"backend={BACKEND}")
         row("table3/fwd/dense", f"{t_dense*1e3:.3f}", "ms", tag)
         row("table3/fwd/projected", f"{t_proj*1e3:.3f}", "ms", tag)
         row("table3/fwd/speedup", f"{t_dense/t_proj:.2f}", "x", tag)
@@ -53,7 +71,27 @@ def run(quick: bool = True) -> None:
         row("table3/coeffs_computed", f"{n_proj}/{n_dense}",
             "projected/dense",
             f"{tag};saving={1 - n_proj/n_dense:.0%} of coefficients skipped")
+        records.append({
+            "B": B, "M": M, "d": d, "depth": N,
+            "logsig_dim": logsig_dim(d, N), "backend": BACKEND,
+            "fwd_dense_ms": t_dense * 1e3, "fwd_projected_ms": t_proj * 1e3,
+            "fwd_speedup": t_dense / t_proj,
+            "train_dense_ms": tg_dense * 1e3,
+            "train_projected_ms": tg_proj * 1e3,
+            "train_speedup": tg_dense / tg_proj,
+            "coeffs_projected": n_proj, "coeffs_dense": n_dense,
+        })
+    out = {"benchmark": "table3_logsig", "backend": BACKEND,
+           "records": records}
+    with open(JSON_PATH, "w") as f:
+        json.dump(out, f, indent=2)
+    row("table3/json", JSON_PATH, "path", "")
 
 
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI sizes (the default; kept explicit for CI logs)")
+    ap.add_argument("--full", action="store_true", help="paper-scale sweeps")
+    args = ap.parse_args()
+    run(quick=not args.full)

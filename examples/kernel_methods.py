@@ -1,0 +1,102 @@
+"""Kernel methods on path signatures: the repro.sigkernel subsystem end to end.
+
+Four demos, CPU-sized:
+
+1. Weighted/projected Gram matrices — the truncated signature kernel with
+   anisotropic channel weights, tiled so the (B_x, B_y, D_sig) intermediate
+   never exists.
+2. Two-sample testing — the unbiased signature-MMD with a permutation test
+   separating drifted from driftless random walks.
+3. Kernel ridge regression — predict a path functional from the Gram, plus
+   the low-rank Nyström features that scale it linearly in batch.
+4. Streaming retrieval — SigScoreEngine scoring live streams against a
+   cached reference Gram from SignatureStream terminal states.
+
+Run:  PYTHONPATH=src python examples/kernel_methods.py
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import tensor_ops as tops
+from repro.serve import SigScoreEngine
+from repro.sigkernel import (fit_sig_krr, nystrom_features, sig_gram,
+                             sig_mmd)
+
+DEPTH = 3
+
+
+def walks(n, M, d, drift=0.0, scale=0.25, seed=0):
+    rng = np.random.default_rng(seed)
+    steps = rng.normal(size=(n, M, d)) * scale + drift
+    path = np.concatenate([np.zeros((n, 1, d)), np.cumsum(steps, axis=1)],
+                          axis=1)
+    return jnp.asarray(path.astype(np.float32))
+
+
+def demo_gram():
+    print("\n# 1. weighted signature Gram (anisotropic channels)")
+    x, y = walks(6, 32, 3, seed=0), walks(4, 32, 3, seed=1)
+    K = sig_gram(x, y, DEPTH, gamma=(0.5, 1.0, 2.0))
+    K_oracle = sig_gram(x, y, DEPTH, gamma=(0.5, 1.0, 2.0), route="oracle")
+    err = float(jnp.max(jnp.abs(K - K_oracle)))
+    print(f"  K shape {K.shape}, tiled-vs-oracle max err {err:.2e}")
+
+
+def demo_mmd():
+    print("\n# 2. two-sample test: signature MMD + permutation null")
+    x = walks(24, 32, 2, drift=+0.06, seed=2)
+    y = walks(24, 32, 2, drift=-0.06, seed=3)
+    stat = float(sig_mmd(x, y, DEPTH))
+    pooled = jnp.concatenate([x, y], axis=0)
+    rng = np.random.default_rng(0)
+    null = []
+    for _ in range(30):
+        perm = rng.permutation(pooled.shape[0])
+        null.append(float(sig_mmd(pooled[perm[:24]], pooled[perm[24:]],
+                                  DEPTH)))
+    p = (1 + sum(n >= stat for n in null)) / (1 + len(null))
+    print(f"  MMD^2 = {stat:.4f}, permutation p ~ {p:.3f} "
+          f"(null 95% ~ {np.quantile(null, 0.95):.4f})")
+
+
+def demo_krr():
+    print("\n# 3. kernel ridge regression + Nystrom features")
+    train, test = walks(48, 24, 2, seed=4), walks(12, 24, 2, seed=5)
+
+    def target(paths):  # a nonlinear path functional: signed area-ish
+        inc = np.asarray(tops.path_increments(paths))
+        x1, x2 = np.cumsum(inc[..., 0], -1), inc[..., 1]
+        return jnp.asarray((x1[:, :-1] * x2[:, 1:]).sum(-1).astype(np.float32))
+
+    model = fit_sig_krr(train, target(train), DEPTH, reg=1e-4)
+    pred = model.predict(test)
+    rmse = float(jnp.sqrt(jnp.mean((pred - target(test)) ** 2)))
+    base = float(jnp.std(target(test)))
+    print(f"  KRR rmse {rmse:.4f} vs target std {base:.4f}")
+    ny = nystrom_features(train[:16], DEPTH)
+    phi_tr, phi_te = ny(train), ny(test)
+    w, *_ = jnp.linalg.lstsq(phi_tr, target(train), rcond=None)
+    rmse_ny = float(jnp.sqrt(jnp.mean((phi_te @ w - target(test)) ** 2)))
+    print(f"  Nystrom({ny.n_features} features) linear rmse {rmse_ny:.4f}")
+
+
+def demo_streaming():
+    print("\n# 4. streaming retrieval against a cached reference Gram")
+    refs = walks(6, 40, 2, seed=6)
+    eng = SigScoreEngine(d=2, depth=DEPTH, batch=6, references=refs,
+                         backend="auto")
+    incs = tops.path_increments(refs)   # stream the references themselves
+    for chunk in jnp.split(incs, 4, axis=1):
+        scores = eng.push(chunk)
+    hits = int((eng.nearest() == jnp.arange(6)).sum())
+    print(f"  after 4 chunks: {hits}/6 streams retrieve their own reference; "
+          f"scores diag ~ {float(jnp.diag(scores).mean()):.3f}")
+
+
+if __name__ == "__main__":
+    demo_gram()
+    demo_mmd()
+    demo_krr()
+    demo_streaming()

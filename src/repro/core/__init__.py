@@ -1,9 +1,10 @@
 """pathsig core: truncated & projected path signatures in JAX (the paper's
 primary contribution), plus the word algebra driving the Pallas kernels."""
-from .words import (Word, all_words, anisotropic_words, dag_words, decode,
-                    encode, flat_index, generated_words, level_offsets,
-                    lyndon_words, lyndon_dim, make_plan, make_tiled_plan,
-                    prefix_closure, sig_dim, truncation_plan, WordPlan,
+from .words import (Word, all_words, anisotropic_words, dag_words,
+                    deconcatenations, decode, encode, flat_index,
+                    generated_words, level_offsets, lyndon_words, lyndon_dim,
+                    make_plan, make_tiled_plan, prefix_closure,
+                    shuffle_product, sig_dim, truncation_plan, WordPlan,
                     TiledPlan)
 from .signature import (signature, signature_from_increments,
                         signature_combine, signature_inverse,
@@ -23,7 +24,8 @@ __all__ = [
     "Word", "WordPlan", "TiledPlan", "all_words", "anisotropic_words",
     "dag_words", "decode", "encode", "flat_index", "generated_words",
     "level_offsets", "lyndon_words", "lyndon_dim", "make_plan",
-    "make_tiled_plan", "prefix_closure", "sig_dim", "truncation_plan",
+    "make_tiled_plan", "prefix_closure", "shuffle_product",
+    "deconcatenations", "sig_dim", "truncation_plan",
     "signature", "signature_from_increments", "signature_combine",
     "signature_inverse", "stream_emit_steps", "projected_signature",
     "projected_signature_from_increments", "logsignature",

@@ -189,6 +189,36 @@ def lyndon_dim(d: int, depth: int) -> int:
     return len(lyndon_words(d, depth))
 
 
+def shuffle_product(u: Word, v: Word) -> dict[Word, int]:
+    """The shuffle product u ⧢ v as a multiset {word: multiplicity}.
+
+    Signatures are grouplike, so ⟨S, u⟩·⟨S, v⟩ = Σ_w c_w ⟨S, w⟩ with c_w the
+    shuffle multiplicities — the identity that makes the weighted Gram of
+    :mod:`repro.sigkernel` a genuine kernel on path space (and the property
+    the algebra test-suite checks every engine against).
+    """
+    u, v = tuple(u), tuple(v)
+    if not u:
+        return {v: 1}
+    if not v:
+        return {u: 1}
+    out: dict[Word, int] = {}
+    for w, c in shuffle_product(u[1:], v).items():
+        k = (u[0],) + w
+        out[k] = out.get(k, 0) + c
+    for w, c in shuffle_product(u, v[1:]).items():
+        k = (v[0],) + w
+        out[k] = out.get(k, 0) + c
+    return out
+
+
+def deconcatenations(w: Word) -> list[tuple[Word, Word]]:
+    """All splits w = u∘v including the empty-factor ones — the coproduct
+    side of Chen's identity ⟨S(x·y), w⟩ = Σ ⟨S(x), u⟩⟨S(y), v⟩."""
+    w = tuple(w)
+    return [(w[:k], w[k:]) for k in range(len(w) + 1)]
+
+
 # ---------------------------------------------------------------------------
 # prefix closure + computation plan (paper §3.1-3.2 adapted to tiles)
 # ---------------------------------------------------------------------------

@@ -13,6 +13,11 @@ exactly one place.
 - ``"pallas_interpret"`` — same kernels executed in interpret mode (CPU
                    validation; the container's default).
 - ``"auto"``     — pallas on TPU, jax elsewhere.
+- ``"hybrid"``   — projected sets only: dense levelwise Horner for all of
+                   W_{<=N-1} plus per-word chains for the requested level-N
+                   words (``repro.core.hybrid``), with the §4.2 inverse VJP.
+                   The §3.3 log-signature shape; wasteful for sets sparse at
+                   low levels.
 
 Backend × backward × stream support matrix
 ------------------------------------------
@@ -40,7 +45,21 @@ pallas, projected      False   closure-kernel fwd +          (jax)              
                                §4.2 reverse
 pallas, projected      True    streamed closure-kernel fwd   ✗                      (jax)
                                + streamed §4.2 reverse
+hybrid, projected      False   dense+top fwd + §4.2 reverse  (jax)                  top-level
+                                                                                    scan AD
+hybrid, projected      True    ✗                             ✗                      ✗
 =====================  ======  ============================  =====================  ==========
+
+``sig_gram`` row (:func:`gram`): the weighted Gram product
+G = S_x diag(ω) S_yᵀ is one extra dispatch cell layered on the signature
+engines above.  Backends: ``jax`` runs a word-blocked fori-loop (live state
+O(B_x·B_y + B·block_words)); ``pallas``/``pallas_interpret`` run the tile
+kernel in :mod:`repro.kernels.sig_gram` (same memory law, MXU contraction);
+``hybrid`` falls back to jax.  Every backend is differentiable in all three
+operands through one closed-form product VJP (dS_x = (g S_y)·ω,
+dS_y = (gᵀ S_x)·ω, dω = Σ_ij g_ij S_x S_y) — the signature *legs* feeding it
+carry whichever §4.2 inverse/checkpoint VJP the caller picked, so a full
+kernel-method loss trains in O(B·D_sig) signature memory end to end.
 
 The Pallas ``inverse`` rows are the paper's headline training path: the
 kernel computes the forward, the backward reconstructs
@@ -68,7 +87,7 @@ tree.  The paper explicitly does not parallelise over sequence length
 """
 from __future__ import annotations
 
-from functools import lru_cache
+from functools import lru_cache, partial
 
 import jax
 import jax.numpy as jnp
@@ -82,11 +101,13 @@ from repro.core.signature import (checkpoint_bwd_scan, default_chunk,
 from repro.core.projection import (projected_inverse_bwd_scan,
                                    projected_signature_from_increments,
                                    projected_stream_inverse_bwd_scan)
-from repro.core.words import TiledPlan, WordPlan, make_plan, make_tiled_plan
+from repro.core.words import (TiledPlan, WordPlan, flat_index, make_plan,
+                              make_tiled_plan, sig_dim)
+from .sig_gram import sig_gram_tiles
 from .sig_trunc import sig_trunc
 from .sig_words import sig_words
 
-BACKENDS = ("jax", "pallas", "pallas_interpret", "auto")
+BACKENDS = ("jax", "pallas", "pallas_interpret", "auto", "hybrid")
 BACKWARDS = ("inverse", "checkpoint", "autodiff")
 
 
@@ -104,6 +125,8 @@ def resolve_backend(backend: str) -> tuple[str, bool]:
         return "pallas", True
     if backend == "jax":
         return "jax", False
+    if backend == "hybrid":
+        return "hybrid", False
     raise ValueError(f"unknown backend {backend!r}; expected one of {BACKENDS}")
 
 
@@ -335,6 +358,133 @@ def _pallas_proj_stream(words: tuple, d: int, stride: int, batch_tile: int,
 
 
 # ---------------------------------------------------------------------------
+# hybrid engine: dense W_{<=N-1} + per-word top chains (repro.core.hybrid)
+# ---------------------------------------------------------------------------
+
+@lru_cache(maxsize=None)
+def _hybrid_gather(words: tuple, d: int):
+    """-> (top_words, out_idx): the level-N words the hybrid engine must chain
+    explicitly, and the gather from its [dense W_{<=N-1} ++ top] buffer back
+    to the requested word order."""
+    wplan = _plan_for_words(words, d)
+    depth = wplan.depth
+    top: list = []
+    seen: set = set()
+    for w in wplan.words:
+        if len(w) == depth and w not in seen:
+            seen.add(w)
+            top.append(w)
+    top_pos = {w: i for i, w in enumerate(top)}
+    lown = sig_dim(d, depth - 1)
+    idx = [lown + top_pos[w] if len(w) == depth else flat_index(w, d)
+           for w in wplan.words]
+    return tuple(top), np.asarray(idx, dtype=np.int32)
+
+
+def _hybrid_projected(increments: jax.Array, wplan: WordPlan,
+                      backward: str) -> jax.Array:
+    """Projected signature through the hybrid dense+word-table engine: the
+    dense levelwise-Horner scan covers every level below the set's max level
+    (gather/scatter-free), per-word chains cover only the top-level words,
+    and the requested coordinates are gathered from the combined buffer.
+    Worth it exactly when the set is dense at low levels (the §3.3 shape)."""
+    if wplan.depth < 2:
+        # no dense block below level 1: the word-table engine IS the limit
+        return projected_signature_from_increments(
+            increments, wplan, backward=backward, backend="jax")
+    from repro.core.hybrid import hybrid_low_plus_top
+    top, idx = _hybrid_gather(wplan.words, wplan.d)
+    buf = hybrid_low_plus_top(increments, top, wplan.depth, backward=backward)
+    return jnp.take(buf, jnp.asarray(idx), axis=1)
+
+
+# ---------------------------------------------------------------------------
+# weighted Gram product: word-blocked routes + closed-form product VJP
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("block",))
+def _gram_blocked_jax(Sx: jax.Array, Sy: jax.Array, w: jax.Array,
+                      block: int) -> jax.Array:
+    """G = S_x diag(w) S_yᵀ via a fori-loop over word blocks: live state is
+    the (B_x, B_y) accumulator plus one (B, block) slab per operand — the
+    (B_x, B_y, D) elementwise intermediate is never formed."""
+    Bx, D = Sx.shape
+    By = Sy.shape[0]
+    blk = min(block, D)
+    n = -(-D // blk)
+    pad = n * blk - D
+    dt = jnp.promote_types(Sx.dtype, jnp.float32)
+    if pad:  # zero-padded weights make the padded columns exact no-ops
+        Sx = jnp.pad(Sx, ((0, 0), (0, pad)))
+        Sy = jnp.pad(Sy, ((0, 0), (0, pad)))
+        w = jnp.pad(w, (0, pad))
+
+    def body(i, acc):
+        sx = jax.lax.dynamic_slice(Sx, (0, i * blk), (Bx, blk)).astype(dt)
+        sy = jax.lax.dynamic_slice(Sy, (0, i * blk), (By, blk)).astype(dt)
+        wb = jax.lax.dynamic_slice(w, (i * blk,), (blk,)).astype(dt)
+        return acc + (sx * wb[None, :]) @ sy.T
+
+    return jax.lax.fori_loop(0, n, body, jnp.zeros((Bx, By), dt))
+
+
+@lru_cache(maxsize=None)
+def _gram_vjp(engine: str, interpret: bool, block_words: int, bx_tile: int,
+              by_tile: int):
+    def forward(Sx, Sy, w):
+        if engine == "pallas":
+            return sig_gram_tiles(Sx, Sy, w, bx_tile=bx_tile, by_tile=by_tile,
+                                  k_tile=block_words, interpret=interpret)
+        return _gram_blocked_jax(Sx, Sy, w, block_words)
+
+    @jax.custom_vjp
+    def gram_fn(Sx, Sy, w):
+        return forward(Sx, Sy, w)
+
+    def fwd(Sx, Sy, w):
+        return forward(Sx, Sy, w), (Sx, Sy, w)
+
+    def bwd(res, g):
+        # G_ij = Σ_k Sx_ik w_k Sy_jk: products of (B, D) mats only — the
+        # backward obeys the same no-(B_x, B_y, D)-intermediate law.
+        Sx, Sy, w = res
+        g = g.astype(jnp.promote_types(Sx.dtype, jnp.float32))
+        dSx = (g @ (Sy * w[None, :])).astype(Sx.dtype)
+        dSy = (g.T @ (Sx * w[None, :])).astype(Sy.dtype)
+        dw = ((g.T @ Sx) * Sy).sum(axis=0).astype(w.dtype)
+        return dSx, dSy, dw
+
+    gram_fn.defvjp(fwd, bwd)
+    return gram_fn
+
+
+def gram(Sx: jax.Array, Sy: jax.Array, weights: jax.Array, *,
+         backend: str = "auto", block_words: int = 512, bx_tile: int = 128,
+         by_tile: int = 128) -> jax.Array:
+    """Weighted signature Gram product (B_x, D), (B_y, D), (D,) -> (B_x, B_y).
+
+    The tiled route of the signature kernel k_ω(x, y) = S_x diag(ω) S_yᵀ:
+    blocked over the word axis (``block_words`` coordinates at a time) so the
+    (B_x, B_y, D) elementwise intermediate is never materialised, on every
+    backend (see the support-matrix note in the module docstring).
+    Differentiable in all three operands via the closed-form product VJP —
+    gradients flow into learned signatures AND learned weights.
+    """
+    engine, interpret = resolve_backend(backend)
+    if engine == "hybrid":  # the gram product has no dense/word split
+        engine, interpret = "jax", False
+    if block_words < 1:
+        raise ValueError(f"block_words must be >= 1, got {block_words}")
+    if Sx.ndim != 2 or Sy.ndim != 2 or Sy.shape[1] != Sx.shape[1] \
+            or weights.shape != (Sx.shape[1],):
+        raise ValueError(
+            f"gram needs Sx (B_x, D), Sy (B_y, D), weights (D,); got "
+            f"{Sx.shape}, {Sy.shape}, {weights.shape}")
+    return _gram_vjp(engine, interpret, block_words, bx_tile,
+                     by_tile)(Sx, Sy, weights)
+
+
+# ---------------------------------------------------------------------------
 # public dispatch
 # ---------------------------------------------------------------------------
 
@@ -350,6 +500,10 @@ def signature(increments: jax.Array, depth: int, *, backend: str = "auto",
     """
     engine, interpret = resolve_backend(backend)
     _check_backward(backward)
+    if engine == "hybrid":
+        raise ValueError(
+            "backend='hybrid' only applies to projected word sets (the "
+            "truncated signature IS the dense engine); use backend='jax'")
     if stream:
         if stream_stride < 1:
             raise ValueError(
@@ -396,6 +550,16 @@ def projected(increments: jax.Array, plan, *, backend: str = "auto",
     engine, interpret = resolve_backend(backend)
     _check_backward(backward)
     wplan, tplan = _normalise_plans(plan, increments.shape[-1])
+    if engine == "hybrid":
+        if stream:
+            raise NotImplementedError(
+                "backend='hybrid' has no streamed forward; use "
+                "backend='jax' or a pallas backend for stream=True")
+        if backward == "checkpoint":
+            # no chunk-boundary buffer in the hybrid engine: run on jax
+            return projected_signature_from_increments(
+                increments, wplan, backward=backward, backend="jax")
+        return _hybrid_projected(increments, wplan, backward)
     if stream:
         if stream_stride < 1:
             raise ValueError(
@@ -430,6 +594,8 @@ def projected_forward_only(increments: jax.Array, plan, *,
     pallas engines — use :func:`projected` for training."""
     engine, interpret = resolve_backend(backend)
     wplan, tplan = _normalise_plans(plan, increments.shape[-1])
+    if engine == "hybrid":
+        return _hybrid_projected(increments, wplan, "inverse")
     if engine == "jax":
         return projected_signature_from_increments(increments, wplan,
                                                    backend="jax")

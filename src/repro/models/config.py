@@ -15,6 +15,11 @@ class SigHeadConfig:
     backend: str = "auto"      # engine dispatch (repro.kernels.ops)
     backward: str = "inverse"  # inverse | checkpoint | autodiff
     stream_stride: int = 1     # per-step feature emission stride (sig_stream_features)
+    # --- kernel-feature head (repro.sigkernel) ---
+    kernel_landmarks: int = 0      # > 0: features are k_ω(path, landmark_j)
+    landmark_steps: int = 8        # increments per learned landmark path
+    kernel_level_decay: float = 0.5  # level weight λ^n in the gram weighting
+    kernel_normalize: bool = True  # RKHS cosine instead of raw k_ω
 
 
 @dataclasses.dataclass(frozen=True)

@@ -10,8 +10,17 @@ streamed forward emits the prefix signature of the learned path at every
 ``stream_stride``-th position, producing a (B, S_out, n_out) feature
 trajectory that transformer/SSM blocks can consume as auxiliary per-token
 inputs (trained end to end through the streamed §4.2 backward).
+
+``SigHeadConfig.kernel_landmarks > 0`` switches the pooled readout to the
+*kernel-feature head* (:func:`sig_kernel_pool`): features are the weighted
+signature-kernel scores k_ω(path, landmark_j) against a bank of LEARNED
+landmark paths — a trainable Nyström layer riding :mod:`repro.sigkernel`.
+Gradients reach both the hidden trajectory (via the §4.2 inverse VJP on the
+signature legs) and the landmark paths (via the Gram product VJP).
 """
 from __future__ import annotations
+
+from functools import lru_cache
 
 import jax
 import jax.numpy as jnp
@@ -25,6 +34,12 @@ from .layers import _init
 
 
 def feature_dim(sc: SigHeadConfig) -> int:
+    if sc.kernel_landmarks > 0:
+        if sc.use_logsig:
+            raise NotImplementedError(
+                "the kernel-feature head scores truncated signatures; "
+                "use_logsig=True with kernel_landmarks > 0 is not supported")
+        return sc.kernel_landmarks + sc.channels
     if sc.use_logsig:
         return logsig_dim(sc.channels, sc.depth) + sc.channels
     return sig_dim(sc.channels, sc.depth) + sc.channels
@@ -32,9 +47,19 @@ def feature_dim(sc: SigHeadConfig) -> int:
 
 def init_sig_head(key, cfg: ModelConfig, n_out: int) -> dict:
     sc = cfg.sig_head
-    k1, k2 = jax.random.split(key)
-    return {"proj": _init(k1, (cfg.d_model, sc.channels)),
-            "out": _init(k2, (feature_dim(sc), n_out))}
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"proj": _init(k1, (cfg.d_model, sc.channels)),
+         "out": _init(k2, (feature_dim(sc), n_out))}
+    if sc.kernel_landmarks > 0:
+        # landmark paths: small random walks in the learned-path space, the
+        # same scale _learned_path normalises real paths to
+        steps = jax.random.normal(
+            k3, (sc.kernel_landmarks, sc.landmark_steps, sc.channels))
+        walk = jnp.cumsum(steps, axis=1) / jnp.sqrt(
+            jnp.float32(sc.landmark_steps))
+        p["landmarks"] = jnp.concatenate(
+            [jnp.zeros_like(walk[:, :1]), walk], axis=1)
+    return p
 
 
 def _learned_path(p, hidden: jax.Array, sc: SigHeadConfig) -> jax.Array:
@@ -61,6 +86,11 @@ def sig_stream_features(p, hidden: jax.Array, cfg: ModelConfig,
         raise NotImplementedError(
             "streamed per-step log-signature features are not supported; "
             "use use_logsig=False (or pool with sig_pool)")
+    if sc.kernel_landmarks > 0:
+        raise NotImplementedError(
+            "the kernel-feature head has no streamed variant; use "
+            "kernel_landmarks=0 for sig_stream_features (or pool with "
+            "sig_pool)")
     path = _learned_path(p, hidden, sc)
     if plan is not None:
         feats = projected_signature(path, plan.words, sc.channels, plan=plan,
@@ -79,10 +109,57 @@ def sig_stream_features(p, hidden: jax.Array, cfg: ModelConfig,
                       p["out"].astype(hidden.dtype))
 
 
+@lru_cache(maxsize=None)
+def _kernel_weights(channels: int, depth: int, decay: float):
+    """Level-decay gram weights ω_w = decay^{|w|} (host-side, cached)."""
+    from repro.sigkernel import word_weights
+    lw = tuple(decay ** n for n in range(1, depth + 1))
+    return word_weights(channels, depth, level_weights=lw)
+
+
+def sig_kernel_pool(p, hidden: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """(B, S, d_model) -> (B, n_out): kernel-feature readout.
+
+    Feature j is the weighted signature-kernel score k_ω(path, landmark_j)
+    against the learned landmark bank ``p["landmarks"]`` — computed as one
+    tiled Gram (never a (B, L, D_sig) intermediate), normalised to the RKHS
+    cosine when ``kernel_normalize``.  The per-path displacement rides along
+    exactly like the plain signature head.
+    """
+    from repro.kernels import ops as kops
+    from repro.sigkernel import gram_diag
+    sc = cfg.sig_head
+    if sc.use_logsig:
+        raise NotImplementedError(
+            "the kernel-feature head scores truncated signatures; "
+            "use_logsig=True with kernel_landmarks > 0 is not supported")
+    path = _learned_path(p, hidden, sc)
+    S = signature(path, sc.depth, backend=sc.backend, backward=sc.backward)
+    lm = p["landmarks"].astype(jnp.float32)
+    S_l = signature(lm, sc.depth, backend=sc.backend, backward=sc.backward)
+    w = jnp.asarray(_kernel_weights(sc.channels, sc.depth,
+                                    sc.kernel_level_decay))
+    K = kops.gram(S, S_l, w, backend=sc.backend)
+    if sc.kernel_normalize:
+        # +1 is the empty-word coordinate: keeps near-constant paths finite
+        qn = jnp.sqrt(gram_diag(S, w) + 1.0)
+        rn = jnp.sqrt(gram_diag(S_l, w) + 1.0)
+        K = K / (qn[:, None] * rn[None, :])
+    feats = jnp.concatenate([K, path[:, -1] - path[:, 0]], axis=-1)
+    return jnp.einsum("bf,fo->bo", feats.astype(hidden.dtype),
+                      p["out"].astype(hidden.dtype))
+
+
 def sig_pool(p, hidden: jax.Array, cfg: ModelConfig,
              plan: WordPlan | None = None) -> jax.Array:
     """(B, S, d_model) -> (B, n_out) sequence-level readout."""
     sc = cfg.sig_head
+    if sc.kernel_landmarks > 0:
+        if plan is not None:
+            raise NotImplementedError(
+                "the kernel-feature head pools the full truncation; "
+                "projected plans are not supported with kernel_landmarks > 0")
+        return sig_kernel_pool(p, hidden, cfg)
     path = _learned_path(p, hidden, sc)
     # all three feature routes ride the engine dispatch (repro.kernels.ops):
     # the configured backend's kernel forward + O(1)-in-length backward is

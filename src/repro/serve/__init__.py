@@ -1,2 +1,2 @@
 from .engine import (make_prefill_step, make_serve_step, ServeEngine,
-                     SigStreamEngine)
+                     SigScoreEngine, SigStreamEngine)

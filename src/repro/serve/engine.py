@@ -1,12 +1,15 @@
 """Serving: prefill + decode steps, a small batched engine, and the online
-signature-feature engine.
+signature-feature engines.
 
 ``serve_step`` is the unit the decode_* / long_* dry-run cells lower: one new
 token for every sequence in the batch against a seq_len-sized KV/state cache.
 ``SigStreamEngine`` is the streaming analogue for signature features: fixed
 batch slots whose per-step windowed signatures stay current as path chunks
 arrive, on an O(B·D_sig) carry (:class:`repro.core.stream.SignatureStream`)
-instead of recomputation per request.
+instead of recomputation per request.  ``SigScoreEngine`` layers the kernel
+methods of :mod:`repro.sigkernel` on top: incoming streams are scored /
+KRR-predicted against a cached reference Gram using the stream's terminal
+signature states.
 """
 from __future__ import annotations
 
@@ -17,6 +20,7 @@ import jax
 import jax.numpy as jnp
 
 import repro.models as M
+from repro.core import tensor_ops as tops
 from repro.core.stream import SignatureStream, signature_stream_init
 from repro.models import encdec, transformer as T
 from repro.models.config import ModelConfig
@@ -61,6 +65,22 @@ def make_serve_step(cfg: ModelConfig, temperature: float = 0.0):
     return serve_step
 
 
+def _hop_window(state: SignatureStream, increments: jax.Array, window: int):
+    """Shared hopping-window step: truncate a chunk larger than the window to
+    its tail, drop however many oldest increments keep occupancy <= window.
+    Returns (state, increments) ready for ``extend`` — the ring-occupancy
+    invariant that keeps ``rolling_drop`` exact lives HERE, once."""
+    m = increments.shape[1]
+    if window and m > window:
+        increments = increments[:, m - window:]
+        m = window
+    if window:
+        need = max(0, state.length + m - window)
+        if need:
+            state = state.rolling_drop(need)
+    return state, increments
+
+
 @dataclasses.dataclass
 class SigStreamEngine:
     """Batched online signature-feature engine (continuous-batching analogue
@@ -92,15 +112,8 @@ class SigStreamEngine:
     def push(self, increments: jax.Array) -> jax.Array:
         """Feed (B, m, d) new increments; returns (B, m_out, D_sig) per-step
         features of the emitted steps (terminal step always included)."""
-        B, m, d = increments.shape
-        if self.window and m > self.window:
-            increments = increments[:, m - self.window:]
-            m = self.window
-        if self.window:
-            need = max(0, self.state.length + m - self.window)
-            if need:
-                self.state = self.state.rolling_drop(need)
-        self.state, feats = self.state.extend(
+        state, increments = _hop_window(self.state, increments, self.window)
+        self.state, feats = state.extend(
             increments, backend=self.backend, return_stream=True,
             stream_stride=self.stream_stride)
         return feats
@@ -112,6 +125,105 @@ class SigStreamEngine:
 
     def reset(self) -> None:
         self.__post_init__()
+
+
+@dataclasses.dataclass
+class SigScoreEngine:
+    """Streaming kernel scorer: live streams vs a cached reference Gram.
+
+    At construction the reference paths' signatures, the (R, R) reference
+    Gram and (optionally) the KRR dual coefficients are computed ONCE through
+    the engine dispatch and cached.  At serve time, fixed batch slots carry a
+    :class:`SignatureStream` (hopping window like :class:`SigStreamEngine`);
+    every :meth:`push` of an increment chunk updates the O(B·D_sig) carry and
+    returns (B, R) kernel scores of the *terminal* window signatures against
+    the references — one tiled cross-Gram per chunk, never a recomputation
+    of reference signatures.  :meth:`predict` turns the same cross-Gram into
+    kernel-ridge predictions; :meth:`nearest` into retrieval indices.
+    """
+    d: int
+    depth: int
+    batch: int
+    references: jax.Array                    # (R, M+1, d) reference paths
+    targets: Optional[jax.Array] = None      # (R,) or (R, p) KRR targets
+    window: int = 0                          # 0 = expanding window
+    backend: str = "auto"
+    level_weights: Optional[tuple] = None
+    gamma: Optional[tuple] = None
+    reg: float = 1e-3
+    normalize: bool = True
+    block_words: int = 512
+    dtype: jnp.dtype = jnp.float32
+
+    def __post_init__(self):
+        from repro.kernels import ops
+        from repro.sigkernel import krr_fit, word_weights
+        refs = jnp.asarray(self.references)
+        if refs.ndim != 3 or refs.shape[-1] != self.d:
+            raise ValueError(f"references must be (R, M+1, {self.d}) paths, "
+                             f"got {refs.shape}")
+        self.weights = jnp.asarray(word_weights(
+            self.d, self.depth, level_weights=self.level_weights,
+            gamma=self.gamma))
+        self.ref_sigs = ops.signature(tops.path_increments(refs), self.depth,
+                                      backend=self.backend)
+        self.ref_gram = ops.gram(self.ref_sigs, self.ref_sigs, self.weights,
+                                 backend=self.backend,
+                                 block_words=self.block_words)
+        self.alpha = None if self.targets is None else krr_fit(
+            self.ref_gram, jnp.asarray(self.targets), self.reg)
+        self.state: SignatureStream = signature_stream_init(
+            self.batch, self.d, self.depth, capacity=self.window,
+            dtype=self.dtype)
+        self._cross = None          # cached raw (B, R) Gram of current state
+
+    def push(self, increments: jax.Array) -> jax.Array:
+        """Feed (B, m, d) new increments; returns the refreshed (B, R)
+        reference scores of every slot's current window."""
+        state, increments = _hop_window(self.state, increments, self.window)
+        self.state = state.extend(increments, backend=self.backend)
+        self._cross = None          # state moved: invalidate the cached Gram
+        return self.scores()
+
+    def _cross_gram(self) -> jax.Array:
+        """The raw (B, R) cross-Gram of the current terminal signatures,
+        computed once per state — scores/predict/nearest all share it."""
+        if self._cross is None:
+            from repro.kernels import ops
+            self._cross = ops.gram(self.state.sig, self.ref_sigs,
+                                   self.weights, backend=self.backend,
+                                   block_words=self.block_words)
+        return self._cross
+
+    def scores(self) -> jax.Array:
+        """(B, R) kernel scores of the terminal window signatures (RKHS
+        cosine when ``normalize=True``, raw k_ω otherwise)."""
+        from repro.sigkernel import gram_diag
+        K = self._cross_gram()
+        if not self.normalize:
+            return K
+        qn = jnp.sqrt(jnp.maximum(gram_diag(self.state.sig, self.weights),
+                                  1e-12))
+        rn = jnp.sqrt(jnp.maximum(jnp.diag(self.ref_gram), 1e-12))
+        return K / (qn[:, None] * rn[None, :])
+
+    def predict(self) -> jax.Array:
+        """(B[, p]) kernel-ridge predictions against the cached duals."""
+        if self.alpha is None:
+            raise ValueError("SigScoreEngine has no targets: construct with "
+                             "targets= to enable KRR predictions")
+        from repro.sigkernel import krr_predict
+        return krr_predict(self._cross_gram(), self.alpha)
+
+    def nearest(self) -> jax.Array:
+        """(B,) index of the best-scoring reference per slot."""
+        return jnp.argmax(self.scores(), axis=-1)
+
+    def reset(self) -> None:
+        self.state = signature_stream_init(self.batch, self.d, self.depth,
+                                           capacity=self.window,
+                                           dtype=self.dtype)
+        self._cross = None
 
 
 @dataclasses.dataclass

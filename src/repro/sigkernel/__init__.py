@@ -1,0 +1,25 @@
+"""repro.sigkernel: signature kernel methods as a first-class subsystem.
+
+The truncated signature kernel k_ω(x, y) = Σ_w ω_w ⟨S(x), w⟩⟨S(y), w⟩ is a
+weighted inner product over word coordinates — exactly the representation the
+word-basis engines compute.  This package layers kernel-method workloads on
+the engine dispatch: weighted/projected Gram matrices (:mod:`gram`), the
+signature-MMD two-sample statistic / training loss (:mod:`mmd`), low-rank
+feature maps (:mod:`features`), and kernel ridge regression + reference
+scoring for serving (:mod:`krr`).
+"""
+from .gram import (gram_diag, gram_from_signatures, resolve_weights,
+                   sig_gram, signature_features, word_weights)
+from .mmd import mmd_from_signatures, sig_mmd
+from .features import (NystromFeatures, WordSubsetFeatures, nystrom_features,
+                       random_word_features)
+from .krr import (SigKRR, fit_sig_krr, krr_fit, krr_predict,
+                  reference_scores)
+
+__all__ = [
+    "sig_gram", "gram_from_signatures", "gram_diag", "signature_features",
+    "word_weights", "resolve_weights", "sig_mmd", "mmd_from_signatures",
+    "WordSubsetFeatures", "random_word_features", "NystromFeatures",
+    "nystrom_features", "SigKRR", "fit_sig_krr", "krr_fit", "krr_predict",
+    "reference_scores",
+]

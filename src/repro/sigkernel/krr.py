@@ -1,0 +1,104 @@
+"""Kernel ridge regression and reference scoring on signature Grams.
+
+The serving-shaped kernel methods: fit once against a reference set (solve
+the regularised Gram system), then score / predict incoming paths with one
+(B, R) cross-Gram per batch — which is exactly what
+:class:`repro.serve.engine.SigScoreEngine` runs online from
+``SignatureStream`` terminal states.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.words import WordPlan
+from .gram import (gram_diag, gram_from_signatures, resolve_weights,
+                   signature_features)
+
+
+def krr_fit(K: jax.Array, targets: jax.Array, reg: float = 1e-3) -> jax.Array:
+    """Solve (K + reg·I) α = y on an (m, m) Gram.  targets: (m,) or (m, p)."""
+    m = K.shape[0]
+    if K.shape != (m, m):
+        raise ValueError(f"K must be square, got {K.shape}")
+    if targets.shape[0] != m:
+        raise ValueError(f"targets rows {targets.shape[0]} != Gram size {m}")
+    return jnp.linalg.solve(K + reg * jnp.eye(m, dtype=K.dtype),
+                            targets.astype(K.dtype))
+
+
+def krr_predict(K_query_ref: jax.Array, alpha: jax.Array) -> jax.Array:
+    """(B, m) cross-Gram × (m[, p]) dual coefficients -> (B[, p]) predictions."""
+    return K_query_ref @ alpha
+
+
+def reference_scores(S_query: jax.Array, S_ref: jax.Array,
+                     weights: jax.Array, *, normalize: bool = True,
+                     backend: str = "auto", block_words: int = 512,
+                     eps: float = 1e-12) -> jax.Array:
+    """(B, D) query signatures vs (R, D) references -> (B, R) kernel scores.
+
+    ``normalize=True`` returns the RKHS cosine
+    k(x, r) / sqrt(k(x, x) k(r, r)) — scale-free retrieval scores.
+    """
+    K = gram_from_signatures(S_query, S_ref, weights, backend=backend,
+                             block_words=block_words)
+    if not normalize:
+        return K
+    qn = jnp.sqrt(jnp.maximum(gram_diag(S_query, weights), eps))
+    rn = jnp.sqrt(jnp.maximum(gram_diag(S_ref, weights), eps))
+    return K / (qn[:, None] * rn[None, :])
+
+
+@dataclasses.dataclass(frozen=True)
+class SigKRR:
+    """A fitted signature kernel ridge regressor (reference sigs + duals)."""
+    ref_sigs: jax.Array        # (m, D_I)
+    alpha: jax.Array           # (m,) or (m, p)
+    weights: jax.Array         # (D_I,)
+    depth: int | None
+    plan: WordPlan | None
+    reg: float
+    backend: str = "auto"
+    backward: str = "inverse"
+    block_words: int = 512
+
+    def predict(self, paths: jax.Array) -> jax.Array:
+        """(B, M+1, d) paths -> (B[, p]) predictions."""
+        S = signature_features(jnp.asarray(paths), self.depth,
+                               words=self.plan, backend=self.backend,
+                               backward=self.backward)
+        K = gram_from_signatures(S, self.ref_sigs, self.weights,
+                                 backend=self.backend,
+                                 block_words=self.block_words)
+        return krr_predict(K, self.alpha)
+
+    def scores(self, paths: jax.Array, *, normalize: bool = True) -> jax.Array:
+        """(B, M+1, d) paths -> (B, m) kernel scores against the references."""
+        S = signature_features(jnp.asarray(paths), self.depth,
+                               words=self.plan, backend=self.backend,
+                               backward=self.backward)
+        return reference_scores(S, self.ref_sigs, self.weights,
+                                normalize=normalize, backend=self.backend,
+                                block_words=self.block_words)
+
+
+def fit_sig_krr(paths: jax.Array, targets: jax.Array,
+                depth: int | None = None, *, words=None, weights=None,
+                level_weights=None, gamma=None, reg: float = 1e-3,
+                backend: str = "auto", backward: str = "inverse",
+                block_words: int = 512) -> SigKRR:
+    """Fit KRR on reference paths (m, M+1, d) with targets (m,) or (m, p)."""
+    paths = jnp.asarray(paths)
+    plan, w = resolve_weights(paths.shape[-1], depth, words, weights,
+                              level_weights, gamma)
+    S = signature_features(paths, depth, words=plan, backend=backend,
+                           backward=backward)
+    K = gram_from_signatures(S, S, w, backend=backend,
+                             block_words=block_words)
+    alpha = krr_fit(K, jnp.asarray(targets), reg)
+    return SigKRR(ref_sigs=S, alpha=alpha, weights=w, depth=depth, plan=plan,
+                  reg=reg, backend=backend, backward=backward,
+                  block_words=block_words)

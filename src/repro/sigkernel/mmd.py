@@ -1,0 +1,63 @@
+"""Signature maximum mean discrepancy (two-sample statistic + training loss).
+
+MMD²_ω(P, Q) = E k_ω(x, x') + E k_ω(y, y') − 2 E k_ω(x, y) with the weighted
+signature kernel of :mod:`repro.sigkernel.gram`.  The unbiased estimator
+drops the diagonal of the within-sample Grams (Gretton et al.'s U-statistic),
+so it can be slightly negative under H0 — that is expected.
+
+Everything is differentiable end to end: the signature legs ride the engine
+dispatch (§4.2 inverse VJP on any backend) and the Gram product has a
+closed-form VJP, so ``jax.grad`` of the statistic w.r.t. either sample's
+paths works on ``backend="jax"`` and the pallas backends alike.  The trainer
+exposes it as a distribution-matching loss via ``TrainLoopConfig.loss =
+"sig_mmd"`` (:mod:`repro.train.trainer`).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .gram import gram_from_signatures, resolve_weights, signature_features
+
+
+def mmd_from_signatures(Sx: jax.Array, Sy: jax.Array, weights: jax.Array, *,
+                        unbiased: bool = True, route: str = "auto",
+                        backend: str = "auto",
+                        block_words: int = 512) -> jax.Array:
+    """MMD² from precomputed signature coordinate matrices (B_x, D), (B_y, D)."""
+    m, n = Sx.shape[0], Sy.shape[0]
+    kw = dict(route=route, backend=backend, block_words=block_words)
+    Kxx = gram_from_signatures(Sx, Sx, weights, **kw)
+    Kyy = gram_from_signatures(Sy, Sy, weights, **kw)
+    Kxy = gram_from_signatures(Sx, Sy, weights, **kw)
+    if unbiased:
+        if m < 2 or n < 2:
+            raise ValueError(
+                f"the unbiased MMD needs >= 2 samples per side, got {m}, {n}")
+        sxx = (Kxx.sum() - jnp.trace(Kxx)) / (m * (m - 1))
+        syy = (Kyy.sum() - jnp.trace(Kyy)) / (n * (n - 1))
+    else:
+        sxx = Kxx.mean()
+        syy = Kyy.mean()
+    return sxx + syy - 2.0 * Kxy.mean()
+
+
+def sig_mmd(x: jax.Array, y: jax.Array, depth: int | None = None, *,
+            words=None, weights=None, level_weights=None, gamma=None,
+            unbiased: bool = True, route: str = "auto",
+            backend: str = "auto", backward: str = "inverse",
+            block_words: int = 512) -> jax.Array:
+    """Signature-MMD² between two path samples x (B_x, M+1, d), y (B_y, M'+1, d).
+
+    Kernel configuration matches :func:`repro.sigkernel.sig_gram` (depth or
+    word set, plus weights / level_weights / gamma).  Returns a scalar;
+    differentiable w.r.t. both path batches (and explicit ``weights``).
+    """
+    plan, w = resolve_weights(jnp.asarray(x).shape[-1], depth, words,
+                              weights, level_weights, gamma)
+    Sx = signature_features(x, depth, words=plan, backend=backend,
+                            backward=backward)
+    Sy = signature_features(y, depth, words=plan, backend=backend,
+                            backward=backward)
+    return mmd_from_signatures(Sx, Sy, w, unbiased=unbiased, route=route,
+                               backend=backend, block_words=block_words)

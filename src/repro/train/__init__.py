@@ -1,2 +1,2 @@
-from .trainer import TrainLoopConfig, make_train_step, make_eval_step, \
-    train_loop
+from .trainer import TrainLoopConfig, make_sig_mmd_loss, make_train_step, \
+    make_eval_step, train_loop

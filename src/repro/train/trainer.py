@@ -27,6 +27,7 @@ class TrainLoopConfig:
     straggler_deadline_s: float = 0.0   # 0 = disabled; see train_loop
     sig_backend: str = ""               # "" = honour cfg.sig_head.backend;
     sig_backward: str = ""              # else override the engine dispatch
+    loss: str = "lm"                    # "lm" | "sig_mmd" (distribution match)
 
 
 def _apply_sig_overrides(cfg: ModelConfig, sig_backend: str,
@@ -43,18 +44,79 @@ def _apply_sig_overrides(cfg: ModelConfig, sig_backend: str,
     return dataclasses.replace(cfg, sig_head=sc)
 
 
+def make_sig_mmd_loss(cfg: ModelConfig):
+    """Distribution-matching loss (``TrainLoopConfig.loss="sig_mmd"``):
+    the unbiased signature-MMD² between the model's learned hidden-state
+    paths and reference paths supplied in ``batch["paths"]``.
+
+    The generated sample is the backbone's hidden trajectory projected to
+    ``cfg.sig_head.channels`` dims (through ``params["sig_head"]["proj"]``
+    when present, else the leading channels) and normalised exactly like
+    :func:`repro.models.sig_head._learned_path`; the reference sample is
+    ``batch["paths"]`` (B_ref, S'+1, channels).  Differentiable end to end —
+    signature legs on the configured backend carry the §4.2 inverse VJP, so
+    the trainer's O(B·D_sig) memory law holds for kernel losses too.
+    """
+    sc = cfg.sig_head
+    if sc is None:
+        raise ValueError("loss='sig_mmd' needs cfg.sig_head (depth/channels/"
+                         "backend of the matched path distribution)")
+    if cfg.family == "encdec":
+        raise ValueError("loss='sig_mmd' matches decoder-style hidden "
+                         "trajectories (decoder/rwkv/hybrid families); the "
+                         "encdec family has no single backbone trajectory")
+    from repro.models import transformer as T
+    from repro.models.sig_head import _learned_path
+    from repro.sigkernel import sig_mmd
+
+    def loss_fn(params, batch, remat):
+        hidden, aux = T.backbone(params, cfg, tokens=batch.get("tokens"),
+                                 embeds=batch.get("embeds"),
+                                 positions=batch.get("positions"),
+                                 remat=remat)
+        hp = params.get("sig_head")
+        if hp is not None and "proj" in hp:
+            path = _learned_path(hp, hidden, sc)
+        else:
+            path = hidden[..., :sc.channels].astype(jnp.float32)
+            if sc.stride > 1:
+                path = path[:, ::sc.stride]
+            path = path / jnp.sqrt(jnp.float32(path.shape[1]))
+        mmd = sig_mmd(path, batch["paths"].astype(jnp.float32), sc.depth,
+                      backend=sc.backend, backward=sc.backward)
+        loss = mmd + aux
+        return loss, {"loss": loss, "sig_mmd": mmd, "aux": aux}
+
+    return loss_fn
+
+
+def _resolve_loss(cfg: ModelConfig, loss: str):
+    """loss name -> fn(params, batch, remat) -> (loss, metrics); shared by
+    the train and eval steps so both score the trained objective."""
+    if loss == "sig_mmd":
+        return make_sig_mmd_loss(cfg)
+    if loss == "lm":
+        return lambda params, batch, remat: M.loss_fn(params, cfg, batch,
+                                                      remat=remat)
+    raise ValueError(f"unknown loss {loss!r}; expected 'lm' or 'sig_mmd'")
+
+
 def make_train_step(cfg: ModelConfig, opt: Optimizer, *, remat: str = "dots",
                     microbatch: int = 0, sig_backend: str = "",
-                    sig_backward: str = ""):
+                    sig_backward: str = "", loss: str = "lm"):
     """Returns train_step(params, opt_state, batch) -> (params, opt_state,
     metrics).  With microbatch > 0, gradients are accumulated over
     `microbatch` slices of the batch (sequential, constant memory).
     ``sig_backend``/``sig_backward`` pin the signature head's engine dispatch
-    for this training run (the speed path is the trained path)."""
+    for this training run (the speed path is the trained path).  ``loss``
+    selects the objective: ``"lm"`` (token NLL) or ``"sig_mmd"`` (the
+    signature-kernel distribution-matching loss, see
+    :func:`make_sig_mmd_loss`)."""
     cfg = _apply_sig_overrides(cfg, sig_backend, sig_backward)
+    base_loss = _resolve_loss(cfg, loss)
 
     def loss_fn(params, batch):
-        return M.loss_fn(params, cfg, batch, remat=remat)
+        return base_loss(params, batch, remat)
 
     def grads_of(params, batch):
         (loss, metrics), grads = jax.value_and_grad(
@@ -92,9 +154,16 @@ def make_train_step(cfg: ModelConfig, opt: Optimizer, *, remat: str = "dots",
     return train_step
 
 
-def make_eval_step(cfg: ModelConfig, remat: str = "none"):
+def make_eval_step(cfg: ModelConfig, remat: str = "none", *,
+                   loss: str = "lm", sig_backend: str = "",
+                   sig_backward: str = ""):
+    """Eval with the same objective (and sig-head dispatch overrides) the
+    model was trained with — loss='sig_mmd' evaluates the MMD statistic."""
+    cfg = _apply_sig_overrides(cfg, sig_backend, sig_backward)
+    base_loss = _resolve_loss(cfg, loss)
+
     def eval_step(params, batch):
-        loss, metrics = M.loss_fn(params, cfg, batch, remat=remat)
+        loss_val, metrics = base_loss(params, batch, remat)
         return metrics
     return eval_step
 
@@ -114,7 +183,8 @@ def train_loop(cfg: ModelConfig, params, opt: Optimizer, data_iter,
     step_fn = jax.jit(make_train_step(cfg, opt, remat=loop.remat,
                                       microbatch=loop.microbatch,
                                       sig_backend=loop.sig_backend,
-                                      sig_backward=loop.sig_backward))
+                                      sig_backward=loop.sig_backward,
+                                      loss=loop.loss))
     opt_state = opt.init(params)
     if checkpointer is not None and start_step:
         params, opt_state, _ = checkpointer.restore(params, opt_state,

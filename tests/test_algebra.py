@@ -1,0 +1,139 @@
+"""Property tests for the algebraic identities the kernel subsystem relies on.
+
+The weighted Gram K = S diag(ω) Sᵀ is a *kernel* on path space because
+signatures are grouplike: coordinate products are shuffle sums
+(⟨S, u⟩⟨S, v⟩ = Σ c_w ⟨S, w⟩) and concatenation is Chen deconcatenation
+(⟨S(x·y), w⟩ = Σ_{w=uv} ⟨S(x), u⟩⟨S(y), v⟩).  These hold exactly (up to
+float error) for every engine, and they are what the PSD-ness and
+symmetry of the Gram matrices reduce to.  Runs under real hypothesis or the
+deterministic fallback shim alike.
+"""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (all_words, deconcatenations, flat_index, make_plan,
+                        shuffle_product)
+from repro.core.projection import projected_signature_from_increments
+from repro.core.signature import signature_from_increments
+
+
+def _incs(seed, B, M, d, scale=0.35):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=(B, M, d)).astype(np.float32) * scale)
+
+
+def _coord(flat, word, d):
+    return np.asarray(flat)[..., flat_index(word, d)]
+
+
+# ---------------------------------------------------------------------------
+# shuffle product (host combinatorics)
+# ---------------------------------------------------------------------------
+
+def test_shuffle_product_counts_and_order():
+    sh = shuffle_product((0,), (1,))
+    assert sh == {(0, 1): 1, (1, 0): 1}
+    sh = shuffle_product((0, 1), (2,))
+    assert sh == {(2, 0, 1): 1, (0, 2, 1): 1, (0, 1, 2): 1}
+    # |u ⧢ v| = C(|u|+|v|, |u|) counted with multiplicity
+    sh = shuffle_product((0, 0), (0, 0))
+    assert sum(sh.values()) == 6 and sh == {(0, 0, 0, 0): 6}
+    assert shuffle_product((), (0, 1)) == {(0, 1): 1}
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 3), st.integers(1, 2), st.integers(1, 2),
+       st.integers(0, 10**6))
+def test_grouplike_shuffle_identity(d, lu, lv, seed):
+    """⟨S, u⟩⟨S, v⟩ == Σ_w c_w ⟨S, w⟩ for random words and random paths —
+    the grouplike inner-product property behind the Gram PSD-ness."""
+    rng = np.random.default_rng(seed)
+    u = tuple(rng.integers(0, d, lu))
+    v = tuple(rng.integers(0, d, lv))
+    depth = lu + lv
+    incs = _incs(seed + 1, 3, 12, d)
+    S = signature_from_increments(incs, depth)
+    lhs = _coord(S, u, d) * _coord(S, v, d)
+    rhs = sum(c * _coord(S, w, d) for w, c in shuffle_product(u, v).items())
+    np.testing.assert_allclose(lhs, rhs, rtol=2e-4, atol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(2, 3), st.integers(0, 10**6))
+def test_chen_deconcatenation_identity(d, seed):
+    """⟨S(x·y), w⟩ == Σ_{w=uv} ⟨S(x), u⟩⟨S(y), v⟩ (empty factors = 1)."""
+    rng = np.random.default_rng(seed)
+    depth = 3
+    w = tuple(rng.integers(0, d, depth))
+    xi = _incs(seed, 2, 8, d)
+    yi = _incs(seed + 7, 2, 9, d)
+    Sx = signature_from_increments(xi, depth)
+    Sy = signature_from_increments(yi, depth)
+    Sxy = signature_from_increments(jnp.concatenate([xi, yi], axis=1), depth)
+    rhs = 0.0
+    for u, v in deconcatenations(w):
+        fu = 1.0 if not u else _coord(Sx, u, d)
+        fv = 1.0 if not v else _coord(Sy, v, d)
+        rhs = rhs + fu * fv
+    np.testing.assert_allclose(_coord(Sxy, w, d), rhs, rtol=2e-4, atol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(2, 3), st.integers(0, 10**6))
+def test_shuffle_identity_on_projected_engine(d, seed):
+    """The word-table engine satisfies the same shuffle identity: projecting
+    onto {u, v} ∪ (u ⧢ v) reproduces ⟨S,u⟩⟨S,v⟩ from projected coords."""
+    rng = np.random.default_rng(seed)
+    u = (int(rng.integers(0, d)),)
+    v = tuple(rng.integers(0, d, 2))
+    sh = shuffle_product(u, v)
+    words = [u, v] + sorted(sh)
+    plan = make_plan(tuple(words), d)
+    incs = _incs(seed + 3, 2, 10, d)
+    coords = np.asarray(projected_signature_from_increments(incs, plan))
+    lhs = coords[:, 0] * coords[:, 1]
+    rhs = sum(sh[w] * coords[:, 2 + i] for i, w in enumerate(sorted(sh)))
+    np.testing.assert_allclose(lhs, rhs, rtol=2e-4, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# weighted Gram: symmetry + PSD over random paths and weights
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(2, 3), st.integers(2, 3), st.integers(0, 10**6))
+def test_weighted_gram_symmetric_psd(d, depth, seed):
+    import repro.sigkernel as SK
+    rng = np.random.default_rng(seed)
+    B, M = 8, 14
+    paths = jnp.asarray(np.cumsum(
+        rng.normal(size=(B, M + 1, d)) * 0.3, axis=1).astype(np.float32))
+    gamma = tuple(float(g) for g in rng.uniform(0.3, 2.5, d))
+    lw = tuple(float(x) for x in rng.uniform(0.1, 1.5, depth))
+    K = np.asarray(SK.sig_gram(paths, None, depth, gamma=gamma,
+                               level_weights=lw, block_words=32))
+    np.testing.assert_allclose(K, K.T, atol=1e-5 * np.abs(K).max())
+    evals = np.linalg.eigvalsh((K + K.T) / 2)
+    assert evals.min() >= -1e-5 * max(evals.max(), 1.0)
+
+
+def test_gram_equals_shuffle_expansion_small():
+    """On a tiny alphabet the kernel k(x, y) = Σ_w ω_w S_x[w] S_y[w] agrees
+    with direct enumeration over the word basis — the Gram really is the
+    weighted word-coordinate inner product."""
+    import repro.sigkernel as SK
+    d, depth = 2, 3
+    incs_x = _incs(0, 2, 9, d)
+    incs_y = _incs(1, 3, 7, d)
+    Sx = signature_from_increments(incs_x, depth)
+    Sy = signature_from_increments(incs_y, depth)
+    w = SK.word_weights(d, depth, gamma=(0.7, 1.4))
+    K = np.asarray(SK.sig_gram(
+        jnp.concatenate([jnp.zeros((2, 1, d)), jnp.cumsum(incs_x, 1)], 1),
+        jnp.concatenate([jnp.zeros((3, 1, d)), jnp.cumsum(incs_y, 1)], 1),
+        depth, gamma=(0.7, 1.4)))
+    manual = np.zeros((2, 3))
+    for k, word in enumerate(all_words(d, depth)):
+        manual += w[k] * np.outer(_coord(Sx, word, d), _coord(Sy, word, d))
+    np.testing.assert_allclose(K, manual, rtol=1e-4, atol=1e-5)

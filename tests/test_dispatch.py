@@ -263,3 +263,78 @@ def test_compiled_pallas_grad_matches_jax():
     g_jax = jax.grad(lambda z: jnp.sum(
         ops.signature(z, 4, backend="jax") ** 2))(x)
     np.testing.assert_allclose(g_pal, g_jax, rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# hybrid engine exposure: backend="hybrid" cell (dense W_{<=N-1} + top words)
+# ---------------------------------------------------------------------------
+
+def _logsig_shape_words(d, N):
+    """The §3.3-shaped set: all words below N plus Lyndon words at N."""
+    return tuple(C.all_words(d, N - 1) +
+                 [w for w in C.lyndon_words(d, N) if len(w) == N])
+
+
+def test_hybrid_backend_golden_vs_dense_logsig_shape():
+    d, N = 3, 4
+    plan = make_plan(_logsig_shape_words(d, N), d)
+    x = _incs(3, 4, 18, d)
+    a = np.asarray(ops.projected(x, plan, backend="hybrid"))
+    b = np.asarray(ops.projected(x, plan, backend="jax"))
+    np.testing.assert_allclose(a, b, atol=1e-5 * max(np.abs(b).max(), 1.0))
+
+
+def test_hybrid_backend_golden_arbitrary_mixed_set():
+    # requested words at several levels, unsorted, with a duplicate level-N
+    words = ((1, 0, 2), (0,), (2, 1), (0, 0, 0), (1,), (1, 0, 2))
+    plan = make_plan(words, 3)
+    x = _incs(4, 3, 15, 3)
+    a = np.asarray(ops.projected(x, plan, backend="hybrid"))
+    b = np.asarray(ops.projected(x, plan, backend="jax"))
+    assert a.shape == (3, len(words))
+    np.testing.assert_allclose(a, b, atol=1e-5 * max(np.abs(b).max(), 1.0))
+
+
+@pytest.mark.parametrize("backward", ["inverse", "autodiff", "checkpoint"])
+def test_hybrid_backend_gradients_match_jax(backward):
+    plan = _plan()
+    x = _incs(5, 2, 12, 3)
+    gh = jax.grad(lambda z: jnp.sum(ops.projected(
+        z, plan, backend="hybrid", backward=backward) ** 2))(x)
+    gj = jax.grad(lambda z: jnp.sum(ops.projected(
+        z, plan, backend="jax", backward="inverse") ** 2))(x)
+    np.testing.assert_allclose(np.asarray(gh), np.asarray(gj), rtol=2e-4,
+                               atol=2e-5)
+
+
+def test_hybrid_backend_through_core_and_logsignature():
+    d, N = 3, 3
+    rng = np.random.default_rng(11)
+    path = jnp.asarray(np.cumsum(rng.normal(size=(2, 14, d)) * 0.3,
+                                 axis=1).astype(np.float32))
+    a = np.asarray(C.projected_signature(path, WORDS, d, backend="hybrid"))
+    b = np.asarray(C.projected_signature(path, WORDS, d, backend="jax"))
+    np.testing.assert_allclose(a, b, atol=1e-5)
+    la = np.asarray(C.logsignature_projected(path, N, backend="hybrid"))
+    lb = np.asarray(C.logsignature(path, N))
+    np.testing.assert_allclose(la, lb, atol=1e-4 * max(np.abs(lb).max(), 1.0))
+
+
+def test_hybrid_backend_depth1_and_stream_and_trunc():
+    plan1 = make_plan(((0,), (2,)), 3)     # depth 1: falls back to word engine
+    x = _incs(6, 2, 9, 3)
+    a = np.asarray(ops.projected(x, plan1, backend="hybrid"))
+    b = np.asarray(ops.projected(x, plan1, backend="jax"))
+    np.testing.assert_allclose(a, b, atol=1e-6)
+    with pytest.raises(NotImplementedError):
+        ops.projected(x, _plan(), backend="hybrid", stream=True)
+    with pytest.raises(ValueError):
+        ops.signature(x, 3, backend="hybrid")
+
+
+def test_hybrid_backend_forward_only():
+    plan = _plan()
+    x = _incs(7, 3, 11, 3)
+    a = np.asarray(ops.projected_forward_only(x, plan, backend="hybrid"))
+    b = np.asarray(ops.projected(x, plan, backend="jax"))
+    np.testing.assert_allclose(a, b, atol=1e-5)
