@@ -1,0 +1,219 @@
+"""Ragged serving throughput: bucketed DynamicBatcher vs the two naive plans.
+
+The serving question the ragged subsystem answers: mixed-length signature
+requests arrive continuously (geometric-ish lengths, max/median >= 4 — the
+``repro.data.geometric_lengths`` traffic model) and must be served by a
+compiled runtime.  Three physical plans compute the SAME exact per-request
+answers (zero-masked padding is the identity):
+
+- ``per_request``  — one jitted call per request at its exact length:
+  batch=1 utilisation and one compiled executable per distinct length.
+- ``pad_to_max``   — every flush round padded to the global max length:
+  one big batch, but every row pays M_max scan steps.
+- ``bucketed``     — :class:`repro.serve.DynamicBatcher`: lengths rounded
+  up a geometric bucket ladder, batch rows rounded up a power-of-two rung;
+  work ∝ Σ bucket-padded lengths, compiled shapes bounded by
+  ladder × batch-rungs regardless of traffic.
+
+Per strategy this bench reports cold wall-clock (first epoch, compiles
+included), warm wall-clock (steady state), compiled-shape count and padded
+scan-step totals, plus an explicit ``comparison`` block recording whether
+the bucketed plan beats pad-to-max (wall-clock and/or shape count) — the
+acceptance gate.  Results land in ``BENCH_ragged.json``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data import geometric_lengths
+from repro.kernels import ops
+from repro.serve import DynamicBatcher
+from .common import header, row
+
+BACKEND = os.environ.get("PATHSIG_BACKEND", "jax")
+JSON_PATH = os.environ.get("PATHSIG_BENCH_JSON", "BENCH_ragged.json")
+
+
+def make_workload(seed: int, n_requests: int, max_len: int, d: int,
+                  n_rounds: int):
+    """Mixed-length request paths, split into flush rounds (arrival windows).
+
+    Lengths come from the shared ``repro.data`` pipeline so trainer,
+    benchmark and example traffic agree on the distribution.
+    """
+    lengths = geometric_lengths(seed, n_requests, max_len, min_steps=2)
+    rng = np.random.default_rng((seed, 1))
+    reqs = []
+    for L in lengths:
+        steps = rng.standard_normal((int(L), d)).astype(np.float32)
+        steps /= np.sqrt(max(int(L), 1))
+        reqs.append(np.concatenate([np.zeros((1, d), np.float32),
+                                    np.cumsum(steps, axis=0)], axis=0))
+    bounds = np.linspace(0, n_requests, n_rounds + 1).astype(int)
+    rounds = [reqs[bounds[i]:bounds[i + 1]] for i in range(n_rounds)]
+    return rounds, lengths
+
+
+def _sync(x):
+    jax.block_until_ready(x)
+    return x
+
+
+def make_per_request(depth):
+    """State built ONCE: the jit cache persists across epochs, so the warm
+    epoch measures steady-state serving, not re-tracing."""
+    fn = jax.jit(lambda a: ops.signature(a, depth, backend=BACKEND))
+
+    def epoch(rounds):
+        out, shapes, steps = [], set(), 0
+        for rnd in rounds:
+            for p in rnd:
+                incs = jnp.asarray(p[1:] - p[:-1])[None]
+                shapes.add(incs.shape[1:])
+                steps += incs.shape[1]
+                out.append(_sync(fn(incs))[0])
+        return out, {"compiled_shapes": len(shapes), "padded_steps": steps}
+
+    return epoch
+
+
+def make_pad_to_max(depth, max_len, max_batch):
+    """Every flush round padded to the global max; the batch axis rides the
+    same power-of-two rung ladder as the bucketed plan (so the comparison
+    isolates LENGTH padding, the axis this benchmark is about)."""
+    from repro.ragged import RaggedPaths, batch_rung, pad_batch
+    fn = jax.jit(lambda rp: ops.signature(
+        rp.values[:, 1:] - rp.values[:, :-1], depth, backend=BACKEND,
+        lengths=rp.lengths))
+
+    def epoch(rounds):
+        out, shapes, steps = [], set(), 0
+        for rnd in rounds:
+            for off in range(0, len(rnd), max_batch):
+                part = rnd[off:off + max_batch]
+                rp = RaggedPaths.from_list(part, pad_to=max_len)
+                B_pad = batch_rung(len(part), max_batch)
+                rp = pad_batch(rp, B_pad)
+                shapes.add((max_len, B_pad))
+                steps += max_len * B_pad
+                res = _sync(fn(rp))
+                out.extend(res[i] for i in range(len(part)))
+        return out, {"compiled_shapes": len(shapes), "padded_steps": steps}
+
+    return epoch
+
+
+def make_bucketed(d, depth, max_len, max_batch, min_bucket):
+    db = DynamicBatcher.signature_service(
+        d, depth, max_len=max_len, backend=BACKEND,
+        max_batch=max_batch, min_bucket=min_bucket)
+
+    def epoch(rounds):
+        out = {}
+        for rnd in rounds:
+            tickets = [db.submit(p) for p in rnd]
+            res = db.flush()
+            jax.block_until_ready(list(res.values()))
+            out.update({t: res[t] for t in tickets})
+        stats = db.stats()
+        return [out[t] for t in sorted(out)], \
+            {"compiled_shapes": stats["compiled_shapes"],
+             "padded_steps": stats["padded_steps"],
+             "padding_overhead": stats["padding_overhead"],
+             "ladder": stats["ladder"]}
+
+    return epoch
+
+
+def _epoch(fn):
+    t0 = time.perf_counter()
+    out, stats = fn()
+    return out, stats, time.perf_counter() - t0
+
+
+def bench(seed, n_requests, max_len, d, depth, n_rounds, max_batch,
+          min_bucket):
+    rounds, lengths = make_workload(seed, n_requests, max_len, d, n_rounds)
+    tag = (f"n={n_requests};max_len={max_len};d={d};N={depth};"
+           f"backend={BACKEND}")
+    med = float(np.median(lengths))
+    row("ragged/lengths", f"max={lengths.max()};median={med:.0f}",
+        "steps", f"{tag};max_over_median={lengths.max()/med:.2f}")
+
+    strategies = {
+        "per_request": make_per_request(depth),
+        "pad_to_max": make_pad_to_max(depth, max_len, max_batch),
+        "bucketed": make_bucketed(d, depth, max_len, max_batch, min_bucket),
+    }
+    results, records = {}, {}
+    for name, fn in strategies.items():
+        out_cold, stats, t_cold = _epoch(lambda: fn(rounds))  # + compiles
+        out_warm, _, t_warm = _epoch(lambda: fn(rounds))      # steady state
+        results[name] = out_warm
+        records[name] = dict(stats, cold_s=t_cold, warm_s=t_warm,
+                             req_per_s_warm=n_requests / t_warm)
+        row(f"ragged/{name}_warm", f"{t_warm*1e3:.1f}", "ms",
+            f"{tag};shapes={stats['compiled_shapes']}")
+        row(f"ragged/{name}_cold", f"{t_cold*1e3:.1f}", "ms", tag)
+
+    # exactness: all three plans must agree to float tolerance
+    ref = np.stack([np.asarray(x) for x in results["per_request"]])
+    for name in ("pad_to_max", "bucketed"):
+        got = np.stack([np.asarray(x) for x in results[name]])
+        err = float(np.max(np.abs(got - ref)))
+        records[name]["max_abs_err_vs_per_request"] = err
+        row(f"ragged/{name}_err", f"{err:.2e}", "", tag)
+
+    b, p = records["bucketed"], records["pad_to_max"]
+    comparison = {
+        "workload": {"n_requests": n_requests, "max_len": max_len, "d": d,
+                     "depth": depth, "n_rounds": n_rounds,
+                     "length_median": med, "length_max": int(lengths.max()),
+                     "max_over_median": float(lengths.max() / med)},
+        "bucketed_vs_pad_to_max_speedup_warm": p["warm_s"] / b["warm_s"],
+        "bucketed_vs_pad_to_max_speedup_cold": p["cold_s"] / b["cold_s"],
+        "bucketed_padded_steps_vs_pad_to_max":
+            b["padded_steps"] / p["padded_steps"],
+        "bucketed_beats_pad_to_max_wallclock": b["warm_s"] < p["warm_s"],
+        "bucketed_beats_pad_to_max_shapes":
+            b["compiled_shapes"] < p["compiled_shapes"],
+        "bucketed_beats_pad_to_max":
+            b["warm_s"] < p["warm_s"]
+            or b["compiled_shapes"] < p["compiled_shapes"],
+        "bucketed_vs_per_request_speedup_warm":
+            records["per_request"]["warm_s"] / b["warm_s"],
+    }
+    row("ragged/bucketed_vs_pad_speedup",
+        f"{comparison['bucketed_vs_pad_to_max_speedup_warm']:.2f}", "x", tag)
+    row("ragged/bucketed_vs_per_request_speedup",
+        f"{comparison['bucketed_vs_per_request_speedup_warm']:.2f}", "x", tag)
+    return {"strategies": records, "comparison": comparison}
+
+
+def run(quick: bool = True) -> None:
+    header("ragged: dynamic-batching serving throughput (repro.serve)")
+    cfg = dict(seed=0, n_requests=96 if quick else 384,
+               max_len=384 if quick else 1024, d=4, depth=4,
+               n_rounds=2 if quick else 4, max_batch=64, min_bucket=48)
+    rec = bench(**cfg)
+    out = {"benchmark": "ragged_throughput", "backend": BACKEND,
+           "quick": quick, **rec}
+    with open(JSON_PATH, "w") as f:
+        json.dump(out, f, indent=2)
+    row("ragged/json", JSON_PATH, "path", "")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI sizes (the default; kept explicit for CI logs)")
+    ap.add_argument("--full", action="store_true", help="paper-scale sweeps")
+    args = ap.parse_args()
+    run(quick=not args.full)

@@ -6,6 +6,10 @@ the same ServeEngine, demonstrating that the cache abstraction covers
 KV caches, recurrent states, and mixed state types.
 
 Run:  PYTHONPATH=src python examples/serve_lm.py
+
+Variable-length signature traffic is served by a different layer: see
+examples/ragged_serving.py for the `repro.serve.DynamicBatcher` demo
+(length-bucketed micro-batching over `repro.ragged` containers).
 """
 from __future__ import annotations
 

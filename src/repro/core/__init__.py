@@ -6,9 +6,11 @@ from .words import (Word, all_words, anisotropic_words, dag_words,
                     make_plan, make_tiled_plan, prefix_closure,
                     shuffle_product, sig_dim, truncation_plan, WordPlan,
                     TiledPlan)
-from .signature import (signature, signature_from_increments,
-                        signature_combine, signature_inverse,
-                        stream_emit_steps)
+from .signature import (as_lengths, length_mask, mask_increments,
+                        ragged_terminal, signature,
+                        signature_from_increments, signature_combine,
+                        signature_inverse, stream_emit_mask,
+                        stream_emit_slots, stream_emit_steps)
 from .projection import projected_signature, projected_signature_from_increments
 from .logsignature import logsignature, logsignature_projected, logsig_dim
 from .windows import (windowed_signature, windowed_projection,
@@ -16,8 +18,8 @@ from .windows import (windowed_signature, windowed_projection,
                       sliding_windows, dyadic_windows, select_route)
 from .stream import (SignatureStream, signature_stream_init,
                      signature_stream_extend, signature_stream_rolling_drop)
-from .transforms import (lead_lag, time_augment, basepoint_augment,
-                         sparse_leadlag_generators)
+from .transforms import (freeze_tail, lead_lag, time_augment,
+                         basepoint_augment, sparse_leadlag_generators)
 from . import tensor_ops
 
 __all__ = [
@@ -34,5 +36,7 @@ __all__ = [
     "sliding_windows", "dyadic_windows", "select_route", "SignatureStream",
     "signature_stream_init", "signature_stream_extend",
     "signature_stream_rolling_drop", "lead_lag", "time_augment",
-    "basepoint_augment", "sparse_leadlag_generators", "tensor_ops",
+    "basepoint_augment", "freeze_tail", "sparse_leadlag_generators",
+    "tensor_ops", "as_lengths", "length_mask", "mask_increments",
+    "ragged_terminal", "stream_emit_mask", "stream_emit_slots",
 ]

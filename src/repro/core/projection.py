@@ -16,7 +16,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .signature import (_fold_chunks, _subsample_stream, default_chunk,
+from .signature import (_fold_chunks, _subsample_stream, as_lengths,
+                        default_chunk, mask_increments, stream_emit_mask,
                         stream_emit_steps, unsupported_stream_backward)
 from .words import WordPlan, make_plan
 from . import tensor_ops as tops
@@ -262,20 +263,26 @@ def projected_signature_from_increments(increments: jax.Array,
                                         stream: bool = False,
                                         stream_stride: int = 1,
                                         backward: str = "inverse",
-                                        backend: str = "jax") -> jax.Array:
+                                        backend: str = "jax",
+                                        lengths=None) -> jax.Array:
     """π_I(S_{0,T}(X)) for the plan's word set I.  (B, M, d) -> (B, |I|).
 
     ``backend`` other than ``"jax"`` routes through the engine dispatch in
     :mod:`repro.kernels.ops` — including ``stream=True``, which emits every
     ``stream_stride``-th per-step projection as (B, M_out, |I|).
+    ``lengths`` (B,) makes the batch ragged (zero-masked padded tails,
+    exact terminals, masked post-end emissions, zero grads past the end).
     """
     increments, squeeze = _as_batched(increments)
     if backend != "jax":
         from repro.kernels import ops  # deferred: ops imports this module
         out = ops.projected(increments, plan, backend=backend,
                             backward=backward, stream=stream,
-                            stream_stride=stream_stride)
+                            stream_stride=stream_stride, lengths=lengths)
         return out[0] if squeeze else out
+    if lengths is not None:
+        lengths = as_lengths(lengths, increments.shape[0])
+        increments = mask_increments(increments, lengths)
     if stream:
         if backward == "inverse":
             out = _make_projected_stream_vjp(plan, stream_stride)(increments)
@@ -286,6 +293,10 @@ def projected_signature_from_increments(increments: jax.Array,
             raise unsupported_stream_backward(backward)
         else:
             raise ValueError(f"unknown backward mode {backward!r}")
+        if lengths is not None and increments.shape[1]:
+            out = out * stream_emit_mask(
+                increments.shape[1], stream_stride,
+                lengths)[..., None].astype(out.dtype)
     elif backward == "autodiff":
         out = _scan_projected(increments, plan, stream=False)
     elif backward == "inverse":
@@ -301,12 +312,18 @@ def projected_signature_from_increments(increments: jax.Array,
 def projected_signature(path: jax.Array, words, d: int | None = None, *,
                         plan: WordPlan | None = None, stream: bool = False,
                         stream_stride: int = 1, backward: str = "inverse",
-                        backend: str = "jax") -> jax.Array:
+                        backend: str = "jax", lengths=None) -> jax.Array:
     """Signature coefficients of an arbitrary word set (paper §7.1).
 
     ``words`` is an iterable of letter tuples (0-based) or a prebuilt plan.
+    ``lengths`` (B,) makes the batch ragged; a
+    :class:`repro.ragged.RaggedPaths` may be passed directly as ``path``.
     """
-    path, squeeze = _as_batched(path)
+    from .signature import _unpack_ragged
+    values, rl = _unpack_ragged(path)
+    if rl is not None and lengths is None:
+        lengths = rl
+    path, squeeze = _as_batched(values)
     if plan is None:
         if d is None:
             d = path.shape[-1]
@@ -315,7 +332,8 @@ def projected_signature(path: jax.Array, words, d: int | None = None, *,
     out = projected_signature_from_increments(incs, plan, stream=stream,
                                               stream_stride=stream_stride,
                                               backward=backward,
-                                              backend=backend)
+                                              backend=backend,
+                                              lengths=lengths)
     return out[0] if squeeze else out
 
 

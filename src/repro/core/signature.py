@@ -50,12 +50,95 @@ def stream_emit_steps(M: int, stride: int = 1) -> np.ndarray:
     return steps
 
 
+# ---------------------------------------------------------------------------
+# ragged (variable-length) support: the length axis as masks over a padded
+# batch.  A zero increment is the identity Chen update, so zero-masking the
+# padded tail makes the terminal signature of a padded batch EXACTLY the
+# per-example unpadded signature on every engine — and because the mask
+# multiply is the outermost op, cotangents w.r.t. padded steps are exactly
+# zero through any custom VJP underneath.
+# ---------------------------------------------------------------------------
+
+def as_lengths(lengths, B: int) -> jax.Array:
+    """Normalise a ``lengths=`` argument to a (B,) int32 array (a scalar
+    broadcasts across the batch)."""
+    lengths = jnp.asarray(lengths)
+    if lengths.ndim == 0:
+        lengths = jnp.broadcast_to(lengths, (B,))
+    if lengths.shape != (B,):
+        raise ValueError(f"lengths must be scalar or shape ({B},), got "
+                         f"{lengths.shape}")
+    return lengths.astype(jnp.int32)
+
+
+def length_mask(lengths: jax.Array, M: int) -> jax.Array:
+    """(B,) per-example increment counts -> (B, M) bool, True where the scan
+    step index lies inside the example's true path."""
+    return jnp.arange(M, dtype=jnp.int32)[None, :] < lengths[:, None]
+
+
+def mask_increments(increments: jax.Array, lengths) -> jax.Array:
+    """Zero every increment at or past each example's true end.  Exact: a
+    zero increment is the identity update, and ∂(x·mask)/∂x = mask zeroes
+    the padded-tail cotangents."""
+    if lengths is None:
+        return increments
+    B, M, _ = increments.shape
+    m = length_mask(as_lengths(lengths, B), M)
+    return increments * m[..., None].astype(increments.dtype)
+
+
+def stream_emit_slots(M: int, stride: int, lengths: jax.Array) -> jax.Array:
+    """(B,) emitted-step slot holding each example's TRUE terminal signature.
+
+    Emitted slot j covers min((j+1)·stride, M) increments; with the padded
+    tail zero-masked, the first slot covering >= length increments already
+    equals the example's terminal state.  That slot is
+    ceil(length / stride) - 1, clamped into [0, M_out).
+    """
+    M_out = -(-M // stride)
+    slots = (lengths + (stride - 1)) // stride - 1
+    return jnp.clip(slots, 0, max(M_out - 1, 0)).astype(jnp.int32)
+
+
+def stream_emit_mask(M: int, stride: int, lengths: jax.Array) -> jax.Array:
+    """(B, M_out) bool: True up to and including each example's true-terminal
+    slot (:func:`stream_emit_slots`); emissions past the end are masked."""
+    M_out = -(-M // stride)
+    slots = stream_emit_slots(M, stride, lengths)
+    return jnp.arange(M_out, dtype=jnp.int32)[None, :] <= slots[:, None]
+
+
+def ragged_terminal(stream_out: jax.Array, lengths, stride: int = 1,
+                    M: int | None = None) -> jax.Array:
+    """Gather each example's true terminal state from a streamed output.
+
+    ``stream_out`` is (B, M_out, D) as emitted by ``stream=True``;
+    ``M`` is the padded increment count (default: inferred from M_out·stride,
+    exact whenever stride == 1).  Returns (B, D).
+    """
+    B, M_out, _ = stream_out.shape
+    if M is None:
+        M = M_out * stride
+    slots = stream_emit_slots(M, stride, as_lengths(lengths, B))
+    return jnp.take_along_axis(stream_out, slots[:, None, None],
+                               axis=1)[:, 0]
+
+
 def _as_batched(x: jax.Array) -> tuple[jax.Array, bool]:
     if x.ndim == 2:
         return x[None], True
     if x.ndim == 3:
         return x, False
     raise ValueError(f"expected (M, d) or (B, M, d), got {x.shape}")
+
+
+def _unpack_ragged(path):
+    """Duck-typed :class:`repro.ragged.RaggedPaths` unpacking (kept import-
+    free: ``repro.ragged`` imports this module)."""
+    if hasattr(path, "values") and hasattr(path, "lengths"):
+        return path.values, path.lengths
+    return path, None
 
 
 # ---------------------------------------------------------------------------
@@ -288,7 +371,8 @@ def unsupported_stream_backward(backward: str) -> NotImplementedError:
 def signature_from_increments(increments: jax.Array, depth: int, *,
                               stream: bool = False, stream_stride: int = 1,
                               backward: str = "inverse",
-                              backend: str = "jax") -> jax.Array:
+                              backend: str = "jax",
+                              lengths=None) -> jax.Array:
     """Truncated signature from increments (B, M, d) -> (B, D_sig).
 
     ``backend`` other than ``"jax"`` routes through the engine dispatch in
@@ -296,6 +380,12 @@ def signature_from_increments(increments: jax.Array, depth: int, *,
     including ``stream=True``, which emits every ``stream_stride``-th prefix
     signature as (B, M_out, D_sig).  ``stream`` with ``backward="checkpoint"``
     raises (see the support matrix in :mod:`repro.kernels.ops`).
+
+    ``lengths`` (B,) makes the batch ragged: increments at or past each
+    example's length are zero-masked (exact — zero is the identity update),
+    so the terminal output is the per-example unpadded signature, gradients
+    past the true end are exactly zero, and streamed emissions are masked
+    after each example's true-terminal slot (:func:`stream_emit_slots`).
     """
     increments, squeeze = _as_batched(increments)
     if depth < 1:
@@ -304,8 +394,11 @@ def signature_from_increments(increments: jax.Array, depth: int, *,
         from repro.kernels import ops  # deferred: ops imports this module
         out = ops.signature(increments, depth, backend=backend,
                             backward=backward, stream=stream,
-                            stream_stride=stream_stride)
+                            stream_stride=stream_stride, lengths=lengths)
         return out[0] if squeeze else out
+    if lengths is not None:
+        lengths = as_lengths(lengths, increments.shape[0])
+        increments = mask_increments(increments, lengths)
     if stream:
         M = increments.shape[1]
         if M == 0:  # no steps -> no emissions (the custom VJPs need M >= 1)
@@ -321,6 +414,9 @@ def signature_from_increments(increments: jax.Array, depth: int, *,
             raise unsupported_stream_backward(backward)
         else:
             raise ValueError(f"unknown backward mode {backward!r}")
+        if lengths is not None and M:
+            out = out * stream_emit_mask(M, stream_stride,
+                                         lengths)[..., None].astype(out.dtype)
     elif backward == "inverse":
         out = _make_inverse_vjp(depth)(increments)
     elif backward == "checkpoint":
@@ -335,22 +431,35 @@ def signature_from_increments(increments: jax.Array, depth: int, *,
 
 def signature(path: jax.Array, depth: int, *, stream: bool = False,
               stream_stride: int = 1, basepoint: bool = False,
-              backward: str = "inverse", backend: str = "jax") -> jax.Array:
+              backward: str = "inverse", backend: str = "jax",
+              lengths=None) -> jax.Array:
     """Truncated signature of a piecewise-linear path (B, M+1, d).
 
     ``basepoint=True`` prepends X_0 = 0 (so translation information is kept).
     ``backend`` selects the compute engine via :mod:`repro.kernels.ops`
     (``"jax"`` | ``"pallas"`` | ``"pallas_interpret"`` | ``"auto"``).
     ``stream=True`` returns all prefix signatures, strided by
-    ``stream_stride`` (terminal always included).
+    ``stream_stride`` (terminal always included).  ``lengths`` (B,) gives
+    each example's true increment count for ragged batches (the padded tail
+    is zero-masked — exact; ``basepoint=True`` adds one increment, which is
+    accounted for here).  A :class:`repro.ragged.RaggedPaths` may be passed
+    directly as ``path`` (its lengths are used unless overridden).
     """
-    path, squeeze = _as_batched(path)
+    values, rl = _unpack_ragged(path)
+    if rl is not None and lengths is None:
+        lengths = rl
+    path, squeeze = _as_batched(values)
+    if lengths is not None:
+        lengths = as_lengths(lengths, path.shape[0])
     if basepoint:
         path = jnp.concatenate([jnp.zeros_like(path[:, :1]), path], axis=1)
+        if lengths is not None:
+            lengths = lengths + 1
     incs = tops.path_increments(path)
     out = signature_from_increments(incs, depth, stream=stream,
                                     stream_stride=stream_stride,
-                                    backward=backward, backend=backend)
+                                    backward=backward, backend=backend,
+                                    lengths=lengths)
     return out[0] if squeeze else out
 
 

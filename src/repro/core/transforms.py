@@ -1,19 +1,51 @@
-"""Path transforms used with signatures (paper §8 and standard practice)."""
+"""Path transforms used with signatures (paper §8 and standard practice).
+
+All three transforms take an optional ``lengths=`` (B,) for ragged (padded)
+batches.  Without it, a padded batch is silently corrupted: the time channel
+keeps climbing over the padded tail and lead-lag interleaves the garbage
+points.  With it, each transform (a) freezes the padded tail at the
+example's true endpoint so the transformed tail has zero increments, and
+(b) returns ``(path, new_lengths)`` — the length bookkeeping every
+transform implies (``time_augment`` keeps lengths, ``lead_lag`` doubles
+them, ``basepoint_augment`` adds one increment).
+"""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .signature import as_lengths
 
-def lead_lag(path: jax.Array) -> jax.Array:
+
+def freeze_tail(path: jax.Array, lengths) -> jax.Array:
+    """(B, M+1, d) padded batch -> same batch with every point past each
+    example's true end replaced by its true endpoint X_{L_b} (so the padded
+    tail has exactly zero increments)."""
+    B, M1, _ = path.shape
+    lengths = as_lengths(lengths, B)
+    idx = jnp.minimum(jnp.arange(M1, dtype=jnp.int32)[None, :],
+                      lengths[:, None])
+    return jnp.take_along_axis(path, idx[..., None], axis=1)
+
+
+def lead_lag(path: jax.Array, lengths=None):
     """Lead-lag transform (paper Def. 8.1): (B, M+1, d) -> (B, 2M+1, 2d).
 
     Channel order: [lag_1..lag_d, lead_1..lead_d], i.e. hat{X}_{2k} =
     (X_k, X_k), hat{X}_{2k+1} = (X_k, X_{k+1}).
+
+    With ``lengths``, the interleave stops at each example's true end (the
+    tail is frozen first) and the return is ``(path, 2·lengths)``.
     """
     if path.ndim == 2:
+        if lengths is not None:
+            out, nl = lead_lag(path[None], lengths)
+            return out[0], nl
         return lead_lag(path[None])[0]
+    if lengths is not None:
+        lengths = as_lengths(lengths, path.shape[0])
+        path = freeze_tail(path, lengths)
     B, M1, d = path.shape
     M = M1 - 1
     lag_even, lead_even = path[:, :-1], path[:, :-1]     # k = 0..M-1
@@ -22,23 +54,57 @@ def lead_lag(path: jax.Array) -> jax.Array:
     odd = jnp.concatenate([lag_odd, lead_odd], axis=-1)
     inter = jnp.stack([even, odd], axis=2).reshape(B, 2 * M, 2 * d)
     last = jnp.concatenate([path[:, -1:], path[:, -1:]], axis=-1)
-    return jnp.concatenate([inter, last], axis=1)
+    out = jnp.concatenate([inter, last], axis=1)
+    if lengths is not None:
+        return out, 2 * lengths
+    return out
 
 
-def time_augment(path: jax.Array, t0: float = 0.0, t1: float = 1.0) -> jax.Array:
-    """Append a monotone time channel: (B, M+1, d) -> (B, M+1, d+1)."""
+def time_augment(path: jax.Array, t0: float = 0.0, t1: float = 1.0,
+                 lengths=None):
+    """Append a monotone time channel: (B, M+1, d) -> (B, M+1, d+1).
+
+    With ``lengths``, the time channel runs t0 -> t1 over each example's
+    TRUE span (t1 is reached at point L_b, then held — zero increments past
+    the end) and the return is ``(path, lengths)``.
+    """
     if path.ndim == 2:
+        if lengths is not None:
+            out, nl = time_augment(path[None], t0, t1, lengths)
+            return out[0], nl
         return time_augment(path[None], t0, t1)[0]
     B, M1, _ = path.shape
-    t = jnp.linspace(t0, t1, M1, dtype=path.dtype)[None, :, None]
-    return jnp.concatenate([jnp.broadcast_to(t, (B, M1, 1)), path], axis=-1)
+    if lengths is None:
+        t = jnp.linspace(t0, t1, M1, dtype=path.dtype)[None, :, None]
+        return jnp.concatenate([jnp.broadcast_to(t, (B, M1, 1)), path],
+                               axis=-1)
+    lengths = as_lengths(lengths, B)
+    path = freeze_tail(path, lengths)
+    k = jnp.arange(M1, dtype=path.dtype)[None, :]
+    frac = jnp.minimum(k, lengths[:, None].astype(path.dtype)) \
+        / jnp.maximum(lengths[:, None].astype(path.dtype), 1.0)
+    t = (t0 + (t1 - t0) * frac)[..., None].astype(path.dtype)
+    return jnp.concatenate([t, path], axis=-1), lengths
 
 
-def basepoint_augment(path: jax.Array) -> jax.Array:
-    """Prepend X = 0 so the signature sees the starting level."""
+def basepoint_augment(path: jax.Array, lengths=None):
+    """Prepend X = 0 so the signature sees the starting level.
+
+    With ``lengths``, the tail is frozen and the return is
+    ``(path, lengths + 1)`` (the prepended point adds one increment).
+    """
     if path.ndim == 2:
+        if lengths is not None:
+            out, nl = basepoint_augment(path[None], lengths)
+            return out[0], nl
         return basepoint_augment(path[None])[0]
-    return jnp.concatenate([jnp.zeros_like(path[:, :1]), path], axis=1)
+    if lengths is not None:
+        lengths = as_lengths(lengths, path.shape[0])
+        path = freeze_tail(path, lengths)
+    out = jnp.concatenate([jnp.zeros_like(path[:, :1]), path], axis=1)
+    if lengths is not None:
+        return out, lengths + 1
+    return out
 
 
 def sparse_leadlag_generators(d: int) -> list[tuple[int, ...]]:

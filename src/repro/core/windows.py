@@ -28,8 +28,9 @@ import numpy as np
 
 from . import tensor_ops as tops
 from .projection import projected_signature_from_increments
-from .signature import signature_from_increments, signature_inverse, \
-    signature_combine
+from .signature import (_unpack_ragged, as_lengths, mask_increments,
+                        signature_combine, signature_from_increments,
+                        signature_inverse)
 from .words import WordPlan, flat_index, sig_dim
 
 ROUTES = ("auto", "fold", "chen")
@@ -79,16 +80,18 @@ def select_route(route: str, windows_np: np.ndarray, M: int,
     return "chen" if fold_work > _CHEN_ADVANTAGE * chen_work else "fold"
 
 
-def _window_increments(path: jax.Array, windows_np: np.ndarray) -> jax.Array:
+def _window_increments(path: jax.Array, windows_np: np.ndarray,
+                       lengths=None) -> jax.Array:
     """(B, M+1, d) x validated (K, 2) -> (B, K, L_max, d) zero-padded slices.
 
     ``windows_np`` must come from :func:`_check_windows` (host-side: shapes
-    are static).
+    are static).  With ``lengths``, increments past each example's true end
+    read as zero, so every window is exactly clipped to [l, min(r, L_b)].
     """
     L_max = int((windows_np[:, 1] - windows_np[:, 0]).max())
     windows = jnp.asarray(windows_np)
     K = windows.shape[0]
-    incs = tops.path_increments(path)                      # (B, M, d)
+    incs = mask_increments(tops.path_increments(path), lengths)  # (B, M, d)
     M = incs.shape[1]
     lengths = windows[:, 1] - windows[:, 0]                # (K,)
     # gather indices: l_i + t, clamped; mask t >= length
@@ -101,11 +104,14 @@ def _window_increments(path: jax.Array, windows_np: np.ndarray) -> jax.Array:
 
 
 def _chen_endpoint_states(path: jax.Array, windows_np: np.ndarray, depth: int,
-                          backward: str, backend: str):
+                          backward: str, backend: str, lengths=None):
     """One streamed forward over the whole path -> (S_{0,l}, S_{0,r}) flats
     of shape (B, K, D_sig) each.  Differentiable on every backend via the
-    streamed custom VJP in the dispatch layer."""
-    incs = tops.path_increments(path)
+    streamed custom VJP in the dispatch layer.  With ``lengths``, increments
+    are zero-masked first, so the streamed state freezes at each example's
+    true terminal and S_{0,t} for t > L_b reads S_{0,L_b} — exactly the
+    clipped-window semantics of the fold route."""
+    incs = mask_increments(tops.path_increments(path), lengths)
     stream = signature_from_increments(incs, depth, stream=True,
                                        backward=backward,
                                        backend=backend)     # (B, M, D)
@@ -119,11 +125,12 @@ def _chen_endpoint_states(path: jax.Array, windows_np: np.ndarray, depth: int,
 
 
 def _chen_route_signature(path: jax.Array, windows_np: np.ndarray, depth: int,
-                          backward: str, backend: str) -> jax.Array:
+                          backward: str, backend: str,
+                          lengths=None) -> jax.Array:
     """S_{l,r} = S_{0,l}^{-1} ⊗ S_{0,r} from the streamed forward."""
     d = path.shape[-1]
     s_l, s_r = _chen_endpoint_states(path, windows_np, depth, backward,
-                                     backend)
+                                     backend, lengths)
     D = s_l.shape[-1]
     inv = signature_inverse(s_l.reshape(-1, D), d, depth)
     out = signature_combine(inv, s_r.reshape(-1, D), d, depth)
@@ -132,7 +139,7 @@ def _chen_route_signature(path: jax.Array, windows_np: np.ndarray, depth: int,
 
 def windowed_signature(path: jax.Array, windows, depth: int, *,
                        route: str = "auto", backward: str = "inverse",
-                       backend: str = "jax") -> jax.Array:
+                       backend: str = "jax", lengths=None) -> jax.Array:
     """(B, M+1, d) x (K, 2) -> (B, K, D_sig) in one batched evaluation.
 
     ``route`` picks the physical plan (see module docstring): ``"fold"``
@@ -141,18 +148,30 @@ def windowed_signature(path: jax.Array, windows, depth: int, *,
     model.  Both routes ride the engine dispatch (:mod:`repro.kernels.ops`),
     so every backend's kernel forward + O(1)-in-length backward applies.  An
     empty window set yields an empty (B, 0, D_sig) result.
+
+    ``lengths`` (B,) makes the batch ragged: window [l, r] is exactly
+    clipped to [min(l, L_b), min(r, L_b)] per example on BOTH routes (a
+    :class:`repro.ragged.RaggedPaths` may be passed directly as ``path``).
     """
+    values, rl = _unpack_ragged(path)
+    if rl is not None and lengths is None:
+        lengths = rl
+    path = values
     if path.ndim == 2:
         return windowed_signature(path[None], windows, depth, route=route,
-                                  backward=backward, backend=backend)[0]
+                                  backward=backward, backend=backend,
+                                  lengths=lengths)[0]
     B, d = path.shape[0], path.shape[-1]
     M = path.shape[1] - 1
+    if lengths is not None:
+        lengths = as_lengths(lengths, B)
     windows = _check_windows(windows, M)
     if windows.shape[0] == 0:
         return jnp.zeros((B, 0, sig_dim(d, depth)), path.dtype)
     if select_route(route, windows, M, backward=backward) == "chen":
-        return _chen_route_signature(path, windows, depth, backward, backend)
-    g = _window_increments(path, windows)                  # (B, K, L, d)
+        return _chen_route_signature(path, windows, depth, backward, backend,
+                                     lengths)
+    g = _window_increments(path, windows, lengths)         # (B, K, L, d)
     K, L, d = g.shape[1:]
     flat = signature_from_increments(g.reshape(B * K, L, d), depth,
                                      backward=backward, backend=backend)
@@ -161,7 +180,7 @@ def windowed_signature(path: jax.Array, windows, depth: int, *,
 
 def windowed_projection(path: jax.Array, windows, plan: WordPlan, *,
                         route: str = "auto", backward: str = "inverse",
-                        backend: str = "jax") -> jax.Array:
+                        backend: str = "jax", lengths=None) -> jax.Array:
     """Windowed + word-projected signatures in one call (B, K, |I|).
 
     The chen route computes the FULL truncated streamed signature at the
@@ -169,12 +188,21 @@ def windowed_projection(path: jax.Array, windows, plan: WordPlan, *,
     (Chen's identity needs all suffix coefficients, which an arbitrary word
     set does not retain), so its cost model is scaled by D_sig / closure —
     ``route="auto"`` only takes it when the overlap still pays for that.
+    ``lengths`` clips windows per example exactly like
+    :func:`windowed_signature`.
     """
+    values, rl = _unpack_ragged(path)
+    if rl is not None and lengths is None:
+        lengths = rl
+    path = values
     if path.ndim == 2:
         return windowed_projection(path[None], windows, plan, route=route,
-                                   backward=backward, backend=backend)[0]
+                                   backward=backward, backend=backend,
+                                   lengths=lengths)[0]
     B, d = path.shape[0], path.shape[-1]
     M = path.shape[1] - 1
+    if lengths is not None:
+        lengths = as_lengths(lengths, B)
     windows = _check_windows(windows, M)
     if windows.shape[0] == 0:
         return jnp.zeros((B, 0, len(plan.words)), path.dtype)
@@ -182,10 +210,10 @@ def windowed_projection(path: jax.Array, windows, plan: WordPlan, *,
     if select_route(route, windows, M, chen_cost_scale=scale,
                     backward=backward) == "chen":
         full = _chen_route_signature(path, windows, plan.depth, backward,
-                                     backend)
+                                     backend, lengths)
         idx = jnp.asarray([flat_index(w, d) for w in plan.words])
         return jnp.take(full, idx, axis=-1)
-    g = _window_increments(path, windows)
+    g = _window_increments(path, windows, lengths)
     K, L, d = g.shape[1:]
     out = projected_signature_from_increments(g.reshape(B * K, L, d), plan,
                                               backward=backward,
@@ -195,15 +223,16 @@ def windowed_projection(path: jax.Array, windows, plan: WordPlan, *,
 
 def windowed_signature_chen(path: jax.Array, windows, depth: int, *,
                             backward: str = "inverse",
-                            backend: str = "jax") -> jax.Array:
+                            backend: str = "jax", lengths=None) -> jax.Array:
     """Signatory-style alternative: S_{l,r} = S_{0,l}^{-1} ⊗ S_{0,r}.
 
     Equivalent to ``windowed_signature(..., route="chen")`` — kept as a
-    public name with the same ``backend=``/``backward=`` surface as the
-    other windowed entry points.
+    public name with the same ``backend=``/``backward=``/``lengths=``
+    surface as the other windowed entry points.
     """
     return windowed_signature(path, windows, depth, route="chen",
-                              backward=backward, backend=backend)
+                              backward=backward, backend=backend,
+                              lengths=lengths)
 
 
 def expanding_windows(M: int, stride: int = 1) -> np.ndarray:

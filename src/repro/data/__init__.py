@@ -1,2 +1,4 @@
-from .pipeline import (TokenStream, fbm_paths, synthetic_lm_batches,
-                       hurst_dataset, ShardedLoader)
+from .pipeline import (RaggedPathStream, ShardedLoader, TokenStream,
+                       fbm_paths, geometric_lengths, hurst_dataset,
+                       ragged_fbm_dataset, ragged_token_batches,
+                       synthetic_lm_batches)

@@ -102,6 +102,122 @@ def hurst_dataset(seed: int, n_paths: int, n_steps: int, d: int,
 
 
 # ---------------------------------------------------------------------------
+# ragged (variable-length) generators — trainer and benchmarks draw their
+# mixed-length workloads from the SAME deterministic, seekable pipeline
+# ---------------------------------------------------------------------------
+
+def geometric_lengths(seed: int, n: int, max_steps: int, min_steps: int = 2,
+                      mean_frac: float = 0.25) -> np.ndarray:
+    """Deterministic geometric-ish per-request lengths in
+    [min_steps, max_steps].
+
+    ``mean_frac`` sets the pre-clip mean to ``mean_frac · max_steps``; the
+    resulting clipped distribution has max/median >= ~4 for the default —
+    the serving-traffic shape the ragged benchmarks assume.  Same (seed, n,
+    max_steps) -> same lengths, always.
+    """
+    if not 1 <= min_steps <= max_steps:
+        raise ValueError(f"need 1 <= min_steps <= max_steps, got "
+                         f"{min_steps}, {max_steps}")
+    rng = np.random.default_rng((7919, seed))  # domain-separated from paths
+    p = min(1.0, 1.0 / max(mean_frac * max_steps, 1.0))
+    return np.clip(rng.geometric(p, size=n), min_steps,
+                   max_steps).astype(np.int64)
+
+
+def ragged_fbm_dataset(seed: int, n_paths: int, max_steps: int, d: int,
+                       h_range=(0.25, 0.75), min_steps: int = 2):
+    """Variable-length fBM batch: (values (N, max_steps+1, d) frozen-tail
+    padded, lengths (N,), H (N,)) — the ragged spelling of
+    :func:`hurst_dataset` (each path is a true L_i-step fBM; the tail holds
+    its endpoint, so padded increments are zero)."""
+    rng = np.random.default_rng(seed)
+    H = rng.uniform(*h_range, size=n_paths)
+    lengths = geometric_lengths(seed, n_paths, max_steps,
+                                min_steps=min_steps)
+    X = fbm_paths(rng, n_paths, max_steps, H, d)
+    k = np.arange(max_steps + 1)[None, :]
+    idx = np.minimum(k, lengths[:, None])                # frozen tail
+    X = np.take_along_axis(X, idx[..., None], axis=1)
+    return X, lengths.astype(np.int32), H.astype(np.float32)
+
+
+@dataclasses.dataclass
+class RaggedPathStream:
+    """Deterministic, seekable stream of variable-length path batches.
+
+    Each batch is ``{"paths": (B, max_steps+1, d) frozen-tail padded,
+    "path_lengths": (B,) int32}`` — exactly the keys
+    ``TrainLoopConfig(loss="sig_mmd")`` consumes as ragged reference
+    sample, and the workload generator the ragged serving benchmarks reuse.
+    ``kind="walk"`` draws scaled Gaussian random walks; ``"fbm"`` draws
+    per-example-Hurst fBM (slower: one Cholesky per distinct H).
+    Restoring ``state()`` resumes the exact stream (the per-batch RNG is
+    keyed by (seed, step)).
+    """
+    batch: int
+    max_steps: int
+    d: int
+    seed: int = 0
+    min_steps: int = 2
+    kind: str = "walk"          # "walk" | "fbm"
+    step: int = 0
+
+    def __post_init__(self):
+        if self.kind not in ("walk", "fbm"):
+            raise ValueError(f"unknown kind {self.kind!r}")
+
+    def state(self) -> dict:
+        return {"step": self.step, "seed": self.seed}
+
+    def restore(self, state: dict) -> None:
+        self.step = int(state["step"])
+
+    def __iter__(self):
+        return self
+
+    def __next__(self) -> dict:
+        rng = np.random.default_rng((self.seed, self.step))
+        lengths = geometric_lengths(self.seed * 1_000_003 + self.step,
+                                    self.batch, self.max_steps,
+                                    min_steps=self.min_steps)
+        if self.kind == "fbm":
+            H = rng.uniform(0.25, 0.75, size=self.batch)
+            X = fbm_paths(rng, self.batch, self.max_steps, H, self.d)
+        else:
+            steps = rng.standard_normal(
+                (self.batch, self.max_steps, self.d)).astype(np.float32)
+            steps /= np.sqrt(np.maximum(lengths, 1))[:, None, None]
+            X = np.concatenate(
+                [np.zeros((self.batch, 1, self.d), np.float32),
+                 np.cumsum(steps, axis=1)], axis=1)
+        k = np.arange(self.max_steps + 1)[None, :]
+        idx = np.minimum(k, lengths[:, None])            # frozen tail
+        X = np.take_along_axis(X, idx[..., None], axis=1)
+        self.step += 1
+        return {"paths": jnp.asarray(X),
+                "path_lengths": jnp.asarray(lengths, jnp.int32)}
+
+
+def ragged_token_batches(vocab_size: int, batch: int, seq: int,
+                         seed: int = 0) -> Iterator[dict]:
+    """Variable-length LM stream: :class:`TokenStream` batches plus a
+    right-padded ``"mask"`` (tokens past each example's deterministic
+    length are zeroed) — the ragged spelling the sig-head/trainer ``mask``
+    pass-through consumes."""
+    stream = TokenStream(vocab_size, batch, seq, seed)
+    for item in stream:
+        lengths = geometric_lengths(seed * 1_000_003 + stream.step,
+                                    batch, seq, min_steps=2)
+        mask = (np.arange(seq)[None, :] < lengths[:, None])
+        tokens = np.asarray(item["tokens"]) * mask
+        labels = np.where(mask, np.asarray(item["labels"]), -1)
+        yield {"tokens": jnp.asarray(tokens, jnp.int32),
+               "labels": jnp.asarray(labels, jnp.int32),
+               "mask": jnp.asarray(mask, jnp.int32)}
+
+
+# ---------------------------------------------------------------------------
 # host-sharded loader
 # ---------------------------------------------------------------------------
 

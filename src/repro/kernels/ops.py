@@ -69,6 +69,17 @@ the kernel over √M-length chunks folded into the batch axis, Chen-combines
 the chunk signatures (storing the √M boundary states), and replays chunks on
 the backward — drift-immune on very long paths.
 
+``lengths`` column: EVERY cell above additionally accepts ``lengths=`` (B,)
+for ragged batches — orthogonal to backend × backward × stream because it is
+resolved before the engine runs: padded-tail increments are zero-masked (a
+zero increment is the identity Chen update, so terminal outputs are exactly
+the per-example unpadded signatures, to the bit), the outermost mask multiply
+zeroes cotangents past each example's true end, and streamed outputs are
+masked after the true-terminal slot (gather it back with
+``repro.core.signature.ragged_terminal``).  ``gram`` has no time axis;
+ragged batches enter it through the signature legs
+(``repro.sigkernel.sig_gram(..., x_lengths=, y_lengths=)``).
+
 ``stream=True`` rows emit every ``stream_stride``-th prefix signature inside
 the time loop — (B, M_out, D) with M_out = ceil(M / stride), terminal step
 always included (``repro.core.signature.stream_emit_steps``).  Their
@@ -94,9 +105,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import tensor_ops as tops
-from repro.core.signature import (checkpoint_bwd_scan, default_chunk,
-                                  inverse_bwd_scan, signature_from_increments,
-                                  stream_inverse_bwd_scan,
+from repro.core.signature import (as_lengths, checkpoint_bwd_scan,
+                                  default_chunk, inverse_bwd_scan,
+                                  mask_increments, signature_from_increments,
+                                  stream_emit_mask, stream_inverse_bwd_scan,
                                   unsupported_stream_backward)
 from repro.core.projection import (projected_inverse_bwd_scan,
                                    projected_signature_from_increments,
@@ -488,15 +500,34 @@ def gram(Sx: jax.Array, Sy: jax.Array, weights: jax.Array, *,
 # public dispatch
 # ---------------------------------------------------------------------------
 
+def _mask_stream_out(out: jax.Array, M: int, stride: int,
+                     lengths) -> jax.Array:
+    """Zero a streamed output (B, M_out, D) after each example's true-
+    terminal slot.  No-op without lengths (or with no emissions)."""
+    if lengths is None or out.shape[1] == 0:
+        return out
+    return out * stream_emit_mask(M, stride, lengths)[..., None].astype(
+        out.dtype)
+
+
 def signature(increments: jax.Array, depth: int, *, backend: str = "auto",
               backward: str = "inverse", batch_tile: int = 128,
               split: int | None = None, time_chunks: int = 1,
-              stream: bool = False, stream_stride: int = 1) -> jax.Array:
+              stream: bool = False, stream_stride: int = 1,
+              lengths=None) -> jax.Array:
     """Truncated signature (B, M, d) -> (B, D_sig), differentiable on every
     backend (see the support matrix in the module docstring).
 
     ``stream=True`` -> (B, M_out, D_sig) prefix signatures at every
     ``stream_stride``-th step (terminal always included).
+
+    ``lengths`` (B,) makes the batch ragged (every backend × backward ×
+    stream cell): padded-tail increments are zero-masked BEFORE the engine
+    runs (a zero increment is the identity update, so terminal outputs are
+    exactly the per-example unpadded signatures, and the outermost mask
+    multiply zeroes cotangents past each true end); streamed outputs are
+    additionally masked after each example's true-terminal slot
+    (:func:`repro.core.signature.stream_emit_slots` gathers it).
     """
     engine, interpret = resolve_backend(backend)
     _check_backward(backward)
@@ -504,6 +535,9 @@ def signature(increments: jax.Array, depth: int, *, backend: str = "auto",
         raise ValueError(
             "backend='hybrid' only applies to projected word sets (the "
             "truncated signature IS the dense engine); use backend='jax'")
+    if lengths is not None:
+        lengths = as_lengths(lengths, increments.shape[0])
+        increments = mask_increments(increments, lengths)
     if stream:
         if stream_stride < 1:
             raise ValueError(
@@ -516,11 +550,14 @@ def signature(increments: jax.Array, depth: int, *, backend: str = "auto",
                 "signatures only reconstruct the terminal state")
         if engine == "jax" or backward == "autodiff" \
                 or increments.shape[1] == 0:  # M=0: no emissions, any engine
-            return signature_from_increments(
+            out = signature_from_increments(
                 increments, depth, stream=True, stream_stride=stream_stride,
                 backward=backward, backend="jax")
-        return _pallas_sig_stream(depth, stream_stride, batch_tile, split,
-                                  interpret)(increments)
+        else:
+            out = _pallas_sig_stream(depth, stream_stride, batch_tile, split,
+                                     interpret)(increments)
+        return _mask_stream_out(out, increments.shape[1], stream_stride,
+                                lengths)
     if engine == "jax" or backward == "autodiff":
         # autodiff has no Pallas rule: route to the jax engine entirely so
         # the forward actually produces the residuals the scan AD consumes.
@@ -540,16 +577,21 @@ def signature(increments: jax.Array, depth: int, *, backend: str = "auto",
 def projected(increments: jax.Array, plan, *, backend: str = "auto",
               backward: str = "inverse", batch_tile: int = 128,
               max_rows: int = 256, stream: bool = False,
-              stream_stride: int = 1) -> jax.Array:
+              stream_stride: int = 1, lengths=None) -> jax.Array:
     """Projected signature over a word set / plan (B, M, d) -> (B, |I|),
     differentiable on every backend.  ``plan`` may be a WordPlan, a
     TiledPlan, or an iterable of letter tuples.
 
-    ``stream=True`` -> (B, M_out, |I|) per-step projections.
+    ``stream=True`` -> (B, M_out, |I|) per-step projections.  ``lengths``
+    (B,) makes the batch ragged, with the same zero-masked-increment
+    exactness guarantees as :func:`signature`.
     """
     engine, interpret = resolve_backend(backend)
     _check_backward(backward)
     wplan, tplan = _normalise_plans(plan, increments.shape[-1])
+    if lengths is not None:
+        lengths = as_lengths(lengths, increments.shape[0])
+        increments = mask_increments(increments, lengths)
     if engine == "hybrid":
         if stream:
             raise NotImplementedError(
@@ -568,13 +610,17 @@ def projected(increments: jax.Array, plan, *, backend: str = "auto",
             raise unsupported_stream_backward(backward)
         if engine == "jax" or backward == "autodiff" \
                 or increments.shape[1] == 0:  # M=0: no emissions, any engine
-            return projected_signature_from_increments(
+            out = projected_signature_from_increments(
                 increments, wplan, stream=True, stream_stride=stream_stride,
                 backward=backward, backend="jax")
-        if tplan is not None:  # keep the caller's tile granularity
-            max_rows = max(p.closure_size for p in tplan.tiles)
-        return _pallas_proj_stream(wplan.words, wplan.d, stream_stride,
-                                   batch_tile, max_rows, interpret)(increments)
+        else:
+            if tplan is not None:  # keep the caller's tile granularity
+                max_rows = max(p.closure_size for p in tplan.tiles)
+            out = _pallas_proj_stream(wplan.words, wplan.d, stream_stride,
+                                      batch_tile, max_rows,
+                                      interpret)(increments)
+        return _mask_stream_out(out, increments.shape[1], stream_stride,
+                                lengths)
     if engine == "jax" or backward != "inverse":
         # checkpoint needs chunk-boundary closure states the word kernel
         # cannot emit; autodiff needs scan residuals — both run on jax.
@@ -588,12 +634,15 @@ def projected(increments: jax.Array, plan, *, backend: str = "auto",
 
 def projected_forward_only(increments: jax.Array, plan, *,
                            backend: str = "auto", batch_tile: int = 128,
-                           max_rows: int = 256) -> jax.Array:
+                           max_rows: int = 256, lengths=None) -> jax.Array:
     """Inference-only projected signature: skips the closure readout (the
     kernel gathers just the requested rows).  Not differentiable on the
     pallas engines — use :func:`projected` for training."""
     engine, interpret = resolve_backend(backend)
     wplan, tplan = _normalise_plans(plan, increments.shape[-1])
+    if lengths is not None:
+        increments = mask_increments(
+            increments, as_lengths(lengths, increments.shape[0]))
     if engine == "hybrid":
         return _hybrid_projected(increments, wplan, "inverse")
     if engine == "jax":

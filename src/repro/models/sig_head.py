@@ -27,7 +27,7 @@ import jax.numpy as jnp
 
 from repro.core import logsignature, signature, sig_dim, logsig_dim
 from repro.core.projection import projected_signature
-from repro.core.signature import stream_emit_steps
+from repro.core.signature import stream_emit_mask, stream_emit_steps
 from repro.core.words import WordPlan
 from .config import ModelConfig, SigHeadConfig
 from .layers import _init
@@ -62,24 +62,54 @@ def init_sig_head(key, cfg: ModelConfig, n_out: int) -> dict:
     return p
 
 
-def _learned_path(p, hidden: jax.Array, sc: SigHeadConfig) -> jax.Array:
-    """(B, S, d_model) -> normalised low-dimensional path (B, S', channels)."""
+def _learned_path(p, hidden: jax.Array, sc: SigHeadConfig, mask=None):
+    """(B, S, d_model) -> normalised low-dimensional path (B, S', channels).
+
+    ``mask`` (B, S) is the backbone's (right-padded) attention mask; with it
+    the return is ``(path, lengths)`` where ``lengths`` counts each
+    example's TRUE increments after striding, and the scale normalisation
+    uses each example's true point count — so the head's output for a padded
+    batch is exactly its output on the unpadded sequences.
+    """
     path = jnp.einsum("bsd,dc->bsc", hidden, p["proj"].astype(hidden.dtype))
     path = path.astype(jnp.float32)
     if sc.stride > 1:
         path = path[:, ::sc.stride]
-    # normalise scale so deep signatures stay well-conditioned
-    return path / jnp.sqrt(jnp.float32(path.shape[1]))
+    if mask is None:
+        # normalise scale so deep signatures stay well-conditioned
+        return path / jnp.sqrt(jnp.float32(path.shape[1]))
+    lengths, norm = mask_path_lengths(mask, sc.stride)
+    return path / norm[:, None, None], lengths
+
+
+def mask_path_lengths(mask: jax.Array, stride: int):
+    """(B, S) right-padded attention mask -> (lengths, norm): each example's
+    TRUE increment count after ``[::stride]`` subsampling, and the per-
+    example √point-count scale normaliser.  The one definition of the
+    mask-to-ragged bookkeeping, shared by the sig head and the trainer."""
+    n_pts = mask.astype(jnp.int32).sum(axis=-1)          # valid positions
+    n_strided = (n_pts + stride - 1) // stride           # kept by [::stride]
+    lengths = jnp.maximum(n_strided - 1, 0)              # increments
+    norm = jnp.sqrt(jnp.maximum(n_strided, 1).astype(jnp.float32))
+    return lengths, norm
+
+
+def _ragged_disp(path: jax.Array, lengths: jax.Array) -> jax.Array:
+    """(B, S', c) x (B,) -> (B, c) displacement to the true endpoint."""
+    idx = lengths.astype(jnp.int32)[:, None, None]
+    return jnp.take_along_axis(path, idx, axis=1)[:, 0] - path[:, 0]
 
 
 def sig_stream_features(p, hidden: jax.Array, cfg: ModelConfig,
-                        plan: WordPlan | None = None) -> jax.Array:
+                        plan: WordPlan | None = None, mask=None) -> jax.Array:
     """(B, S, d_model) -> (B, S_out, n_out) per-step signature features.
 
     Step t carries the signature of the learned path over [0, t] (the
     expanding window), emitted every ``sig_head.stream_stride`` positions by
     the streamed engine dispatch — O(B·D_sig) live training memory via the
-    streamed inverse backward, whatever the backend.
+    streamed inverse backward, whatever the backend.  ``mask`` (B, S) makes
+    the trajectory ragged: emissions past each example's true end are
+    zeroed (signature AND displacement columns).
     """
     sc = cfg.sig_head
     if sc.use_logsig:
@@ -91,19 +121,36 @@ def sig_stream_features(p, hidden: jax.Array, cfg: ModelConfig,
             "the kernel-feature head has no streamed variant; use "
             "kernel_landmarks=0 for sig_stream_features (or pool with "
             "sig_pool)")
-    path = _learned_path(p, hidden, sc)
+    if mask is None:
+        path = _learned_path(p, hidden, sc)
+        lengths = None
+    else:
+        path, lengths = _learned_path(p, hidden, sc, mask)
     if plan is not None:
         feats = projected_signature(path, plan.words, sc.channels, plan=plan,
                                     stream=True,
                                     stream_stride=sc.stream_stride,
-                                    backend=sc.backend, backward=sc.backward)
+                                    backend=sc.backend, backward=sc.backward,
+                                    lengths=lengths)
     else:
         feats = signature(path, sc.depth, stream=True,
                           stream_stride=sc.stream_stride,
-                          backend=sc.backend, backward=sc.backward)
+                          backend=sc.backend, backward=sc.backward,
+                          lengths=lengths)
     # per-step displacement rides along, mirroring the pooled feature layout
-    steps = stream_emit_steps(path.shape[1] - 1, sc.stream_stride)
-    disp = jnp.take(path, jnp.asarray(steps) + 1, axis=1) - path[:, :1]
+    M = path.shape[1] - 1
+    steps = jnp.asarray(stream_emit_steps(M, sc.stream_stride))
+    if lengths is None:
+        disp = jnp.take(path, steps + 1, axis=1) - path[:, :1]
+    else:
+        # clamp each gather to the example's true end: the true-terminal
+        # emission slot may cover past-L steps (identity updates), and the
+        # matching displacement must read X_L, not a pad-token projection
+        idx = jnp.minimum(steps[None, :] + 1, lengths[:, None])
+        disp = jnp.take_along_axis(path, idx[..., None], axis=1) \
+            - path[:, :1]
+        emit = stream_emit_mask(M, sc.stream_stride, lengths)
+        disp = disp * emit[..., None].astype(disp.dtype)
     feats = jnp.concatenate([feats, disp], axis=-1)
     return jnp.einsum("btf,fo->bto", feats.astype(hidden.dtype),
                       p["out"].astype(hidden.dtype))
@@ -117,14 +164,16 @@ def _kernel_weights(channels: int, depth: int, decay: float):
     return word_weights(channels, depth, level_weights=lw)
 
 
-def sig_kernel_pool(p, hidden: jax.Array, cfg: ModelConfig) -> jax.Array:
+def sig_kernel_pool(p, hidden: jax.Array, cfg: ModelConfig,
+                    mask=None) -> jax.Array:
     """(B, S, d_model) -> (B, n_out): kernel-feature readout.
 
     Feature j is the weighted signature-kernel score k_ω(path, landmark_j)
     against the learned landmark bank ``p["landmarks"]`` — computed as one
     tiled Gram (never a (B, L, D_sig) intermediate), normalised to the RKHS
     cosine when ``kernel_normalize``.  The per-path displacement rides along
-    exactly like the plain signature head.
+    exactly like the plain signature head.  ``mask`` makes the scored paths
+    ragged (see :func:`sig_pool`).
     """
     from repro.kernels import ops as kops
     from repro.sigkernel import gram_diag
@@ -133,8 +182,15 @@ def sig_kernel_pool(p, hidden: jax.Array, cfg: ModelConfig) -> jax.Array:
         raise NotImplementedError(
             "the kernel-feature head scores truncated signatures; "
             "use_logsig=True with kernel_landmarks > 0 is not supported")
-    path = _learned_path(p, hidden, sc)
-    S = signature(path, sc.depth, backend=sc.backend, backward=sc.backward)
+    if mask is None:
+        path = _learned_path(p, hidden, sc)
+        lengths = None
+        disp = path[:, -1] - path[:, 0]
+    else:
+        path, lengths = _learned_path(p, hidden, sc, mask)
+        disp = _ragged_disp(path, lengths)
+    S = signature(path, sc.depth, backend=sc.backend, backward=sc.backward,
+                  lengths=lengths)
     lm = p["landmarks"].astype(jnp.float32)
     S_l = signature(lm, sc.depth, backend=sc.backend, backward=sc.backward)
     w = jnp.asarray(_kernel_weights(sc.channels, sc.depth,
@@ -145,36 +201,51 @@ def sig_kernel_pool(p, hidden: jax.Array, cfg: ModelConfig) -> jax.Array:
         qn = jnp.sqrt(gram_diag(S, w) + 1.0)
         rn = jnp.sqrt(gram_diag(S_l, w) + 1.0)
         K = K / (qn[:, None] * rn[None, :])
-    feats = jnp.concatenate([K, path[:, -1] - path[:, 0]], axis=-1)
+    feats = jnp.concatenate([K, disp], axis=-1)
     return jnp.einsum("bf,fo->bo", feats.astype(hidden.dtype),
                       p["out"].astype(hidden.dtype))
 
 
 def sig_pool(p, hidden: jax.Array, cfg: ModelConfig,
-             plan: WordPlan | None = None) -> jax.Array:
-    """(B, S, d_model) -> (B, n_out) sequence-level readout."""
+             plan: WordPlan | None = None, mask=None) -> jax.Array:
+    """(B, S, d_model) -> (B, n_out) sequence-level readout.
+
+    ``mask`` (B, S) is the backbone's right-padded attention mask: the
+    signature, displacement and scale normalisation then stop at each
+    example's true end (ragged pass-through — padded positions neither
+    contribute features nor receive gradient).
+    """
     sc = cfg.sig_head
     if sc.kernel_landmarks > 0:
         if plan is not None:
             raise NotImplementedError(
                 "the kernel-feature head pools the full truncation; "
                 "projected plans are not supported with kernel_landmarks > 0")
-        return sig_kernel_pool(p, hidden, cfg)
-    path = _learned_path(p, hidden, sc)
+        return sig_kernel_pool(p, hidden, cfg, mask=mask)
+    if mask is None:
+        path = _learned_path(p, hidden, sc)
+        lengths = None
+        disp = path[:, -1] - path[:, 0]
+    else:
+        path, lengths = _learned_path(p, hidden, sc, mask)
+        disp = _ragged_disp(path, lengths)
     # all three feature routes ride the engine dispatch (repro.kernels.ops):
     # the configured backend's kernel forward + O(1)-in-length backward is
     # exactly the path jax.grad differentiates during training.
     if plan is not None:
         feats = projected_signature(path, plan.words, sc.channels, plan=plan,
-                                    backend=sc.backend, backward=sc.backward)
-        feats = jnp.concatenate([feats, path[:, -1] - path[:, 0]], axis=-1)
+                                    backend=sc.backend, backward=sc.backward,
+                                    lengths=lengths)
     elif sc.use_logsig:
+        if lengths is not None:
+            raise NotImplementedError(
+                "use_logsig=True has no ragged (mask=) route yet; use "
+                "use_logsig=False for masked pooling")
         feats = logsignature(path, sc.depth, backend=sc.backend,
                              backward=sc.backward)
-        feats = jnp.concatenate([feats, path[:, -1] - path[:, 0]], axis=-1)
     else:
         feats = signature(path, sc.depth, backend=sc.backend,
-                          backward=sc.backward)
-        feats = jnp.concatenate([feats, path[:, -1] - path[:, 0]], axis=-1)
+                          backward=sc.backward, lengths=lengths)
+    feats = jnp.concatenate([feats, disp], axis=-1)
     return jnp.einsum("bf,fo->bo", feats.astype(hidden.dtype),
                       p["out"].astype(hidden.dtype))

@@ -1,0 +1,24 @@
+"""repro.ragged: variable-length path batches as a first-class axis.
+
+Padding + ``lengths`` is the whole representation: zero increments are
+identity Chen updates, so a zero-masked padded batch has *exactly* the
+per-example signatures on every engine — see :mod:`repro.ragged.paths`.
+The ``lengths=`` argument this package feeds is accepted across the stack
+(``repro.core.signature`` / ``projected_signature`` / ``windowed_*``,
+``repro.kernels.ops``, ``repro.sigkernel``), and
+:class:`repro.serve.DynamicBatcher` turns the length-bucketing here into a
+micro-batched serving layer with a bounded set of compiled shapes.
+"""
+from repro.core.signature import (as_lengths, length_mask, mask_increments,
+                                  ragged_terminal, stream_emit_mask,
+                                  stream_emit_slots)
+from .paths import RaggedPaths
+from .bucketing import (assign_buckets, batch_rung, bucket_ladder,
+                        bucket_paths, pad_batch)
+
+__all__ = [
+    "RaggedPaths", "as_lengths", "length_mask", "mask_increments",
+    "ragged_terminal", "stream_emit_mask", "stream_emit_slots",
+    "assign_buckets", "batch_rung", "bucket_ladder", "bucket_paths",
+    "pad_batch",
+]

@@ -1,0 +1,101 @@
+"""Length bucketing: a compile-cache-friendly ladder of padded shapes.
+
+JAX compiles one executable per input shape, so serving raw ragged traffic
+either pays one compile per distinct length (per-request serving) or pads
+everything to the global maximum (wasted scan steps).  A *bucket ladder*
+caps both: lengths are rounded up to a geometric ladder
+``min_len, min_len·g, min_len·g², ..., >= max_len``, so the number of
+compiled shapes is O(log(max_len / min_len)) while padding waste is bounded
+by the growth factor ``g``.  All of this is host-side numpy — bucket
+membership must be static to pick a compiled executable.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .paths import RaggedPaths
+
+
+def bucket_ladder(max_len: int, min_len: int = 16,
+                  growth: float = 2.0) -> np.ndarray:
+    """Increasing increment-count rungs covering [1, max_len].
+
+    Every rung is the padded length of one compiled shape; the last rung is
+    always >= ``max_len``.  ``growth`` bounds padding waste (a request is
+    padded by at most that factor).
+    """
+    if max_len < 1:
+        raise ValueError(f"max_len must be >= 1, got {max_len}")
+    if min_len < 1:
+        raise ValueError(f"min_len must be >= 1, got {min_len}")
+    if growth <= 1.0:
+        raise ValueError(f"growth must be > 1, got {growth}")
+    rungs = [min(min_len, max_len)]
+    while rungs[-1] < max_len:
+        rungs.append(min(max(int(np.ceil(rungs[-1] * growth)),
+                             rungs[-1] + 1), max_len))
+    return np.asarray(rungs, np.int64)
+
+
+def assign_buckets(lengths, ladder: np.ndarray) -> np.ndarray:
+    """(N,) lengths -> (N,) index of the smallest rung >= length (host)."""
+    lengths = np.asarray(lengths, np.int64)
+    ladder = np.asarray(ladder, np.int64)
+    if lengths.size and lengths.max() > ladder[-1]:
+        raise ValueError(f"length {lengths.max()} exceeds the ladder's top "
+                         f"rung {ladder[-1]}")
+    if lengths.size and lengths.min() < 0:
+        raise ValueError("lengths must be >= 0")
+    return np.searchsorted(ladder, lengths, side="left").astype(np.int64)
+
+
+def bucket_paths(rp: RaggedPaths, ladder=None, min_len: int = 16,
+                 growth: float = 2.0) -> list[tuple[np.ndarray, RaggedPaths]]:
+    """Split a ragged batch into per-rung sub-batches.
+
+    Returns ``[(orig_indices, sub_batch), ...]`` where each sub-batch is
+    padded to its rung's increment count — the bounded set of shapes the
+    engine will compile.  ``lengths`` must be host-readable (concrete).
+    """
+    lengths = np.asarray(rp.lengths)
+    if ladder is None:
+        ladder = bucket_ladder(max(int(lengths.max()), 1), min_len=min_len,
+                               growth=growth)
+    ladder = np.asarray(ladder, np.int64)
+    which = assign_buckets(lengths, ladder)
+    out = []
+    for k in range(len(ladder)):
+        idx = np.nonzero(which == k)[0]
+        if idx.size == 0:
+            continue
+        sub = rp.take(idx)
+        rung = int(ladder[k])
+        sub = RaggedPaths(sub.values[:, :rung + 1], sub.lengths)
+        out.append((idx, sub.pad_to(rung)))
+    return out
+
+
+def pad_batch(rp: RaggedPaths, target_batch: int) -> RaggedPaths:
+    """Pad the batch axis with zero-length dummy rows (results for the
+    padded rows are dropped by the caller) so the batch dimension also
+    draws from a bounded shape set."""
+    B = rp.batch
+    if target_batch < B:
+        raise ValueError(f"target batch {target_batch} < current {B}")
+    if target_batch == B:
+        return rp
+    import jax.numpy as jnp
+    pad = target_batch - B
+    values = jnp.concatenate(
+        [rp.values, jnp.zeros((pad, *rp.values.shape[1:]),
+                              rp.values.dtype)], axis=0)
+    lengths = jnp.concatenate(
+        [rp.lengths, jnp.zeros((pad,), rp.lengths.dtype)], axis=0)
+    return RaggedPaths(values, lengths)
+
+
+def batch_rung(n: int, max_batch: int) -> int:
+    """Round a micro-batch size up the power-of-two ladder (capped)."""
+    if n < 1:
+        raise ValueError(f"need n >= 1, got {n}")
+    return min(int(2 ** np.ceil(np.log2(n))), max_batch)

@@ -1,0 +1,149 @@
+"""``RaggedPaths``: a batch of variable-length paths as padding + lengths.
+
+The whole ragged subsystem rests on one algebraic fact: a zero increment is
+the identity Chen update, so a batch padded with *constant tails* (every
+point past an example's true end frozen at its terminal value) has exactly
+the per-example signatures — no kernel rewrite, no per-length compile.  This
+container is the canonical spelling of that contract:
+
+- ``values``   — (B, M_max+1, d) padded path points.  Constructors freeze
+  the tail (repeat the last true point) so even length-oblivious consumers
+  see zero increments past the end; the signature entry points additionally
+  zero-mask by ``lengths``, so arbitrary tail garbage is also safe.
+- ``lengths``  — (B,) int32 true increment counts (example b has
+  ``lengths[b] + 1`` meaningful points).
+
+``RaggedPaths`` is a registered pytree (both fields are data), so it passes
+through ``jit``/``grad``/``vmap`` boundaries, and every signature entry
+point (``repro.core.signature``, ``projected_signature``,
+``repro.sigkernel.sig_gram`` / ``sig_mmd``) accepts it directly in place of
+a plain path array.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.signature import as_lengths, length_mask, mask_increments
+from repro.core import tensor_ops as tops
+
+
+@dataclasses.dataclass(frozen=True)
+class RaggedPaths:
+    """Padded variable-length path batch (see module docstring).
+
+    Build with :meth:`from_list` / :meth:`from_segments` / :meth:`from_dense`
+    rather than the raw constructor unless the tail is already frozen.
+    """
+    values: jax.Array    # (B, M_max+1, d) padded points
+    lengths: jax.Array   # (B,) int32 increments per example
+
+    # -- construction ------------------------------------------------------
+
+    @classmethod
+    def from_list(cls, paths: Sequence, pad_to: int | None = None,
+                  dtype=jnp.float32) -> "RaggedPaths":
+        """From a list of (M_i+1, d) arrays; pads to max(M_i) (or ``pad_to``
+        increments) with frozen tails."""
+        if not len(paths):
+            raise ValueError("RaggedPaths.from_list needs >= 1 path")
+        arrs = [np.asarray(p) for p in paths]
+        d = arrs[0].shape[-1]
+        for a in arrs:
+            if a.ndim != 2 or a.shape[-1] != d:
+                raise ValueError(f"every path must be (M_i+1, {d}); got "
+                                 f"{[tuple(a.shape) for a in arrs]}")
+            if a.shape[0] < 1:
+                raise ValueError("every path needs >= 1 point")
+        lengths = np.asarray([a.shape[0] - 1 for a in arrs], np.int32)
+        M = int(lengths.max()) if pad_to is None else int(pad_to)
+        if M < lengths.max():
+            raise ValueError(f"pad_to={M} < longest path ({lengths.max()} "
+                             "increments)")
+        out = np.empty((len(arrs), M + 1, d), np.dtype(dtype))
+        for i, a in enumerate(arrs):
+            out[i, :a.shape[0]] = a
+            out[i, a.shape[0]:] = a[-1]          # frozen tail
+        return cls(jnp.asarray(out), jnp.asarray(lengths))
+
+    @classmethod
+    def from_segments(cls, flat: jax.Array, segment_points: Sequence[int],
+                      pad_to: int | None = None,
+                      dtype=jnp.float32) -> "RaggedPaths":
+        """From a flat (Σ(M_i+1), d) concatenation and per-path point counts
+        (the CSR-style spelling used by request queues)."""
+        flat = np.asarray(flat)
+        pts = np.asarray(segment_points, np.int64)
+        if pts.sum() != flat.shape[0]:
+            raise ValueError(f"segment points sum to {pts.sum()} but flat "
+                             f"has {flat.shape[0]} rows")
+        splits = np.cumsum(pts)[:-1]
+        return cls.from_list(np.split(flat, splits), pad_to=pad_to,
+                             dtype=dtype)
+
+    @classmethod
+    def from_dense(cls, values: jax.Array, lengths) -> "RaggedPaths":
+        """From an already-padded (B, M+1, d) batch + lengths.  The tail is
+        NOT rewritten (signature entry points mask it anyway); use this when
+        ``values`` stays on device."""
+        values = jnp.asarray(values)
+        if values.ndim != 3:
+            raise ValueError(f"values must be (B, M+1, d), got {values.shape}")
+        return cls(values, as_lengths(lengths, values.shape[0]))
+
+    # -- views -------------------------------------------------------------
+
+    @property
+    def batch(self) -> int:
+        return self.values.shape[0]
+
+    @property
+    def max_len(self) -> int:
+        """Padded increment count M_max."""
+        return self.values.shape[1] - 1
+
+    @property
+    def d(self) -> int:
+        return self.values.shape[-1]
+
+    def increments(self) -> jax.Array:
+        """(B, M_max, d) increments with the padded tail zero-masked."""
+        return mask_increments(tops.path_increments(self.values),
+                               self.lengths)
+
+    def point_mask(self) -> jax.Array:
+        """(B, M_max+1) bool: True at meaningful points (k <= lengths)."""
+        return length_mask(self.lengths + 1, self.values.shape[1])
+
+    def terminal_points(self) -> jax.Array:
+        """(B, d) each example's true endpoint X_{L_b}."""
+        idx = self.lengths.astype(jnp.int32)[:, None, None]
+        return jnp.take_along_axis(self.values, idx, axis=1)[:, 0]
+
+    def pad_to(self, M: int) -> "RaggedPaths":
+        """Re-pad to M increments (frozen tail); same lengths."""
+        if M < self.max_len:
+            raise ValueError(f"pad_to({M}) below current padding "
+                             f"{self.max_len}")
+        if M == self.max_len:
+            return self
+        tail = jnp.repeat(self.values[:, -1:], M - self.max_len, axis=1)
+        return RaggedPaths(jnp.concatenate([self.values, tail], axis=1),
+                           self.lengths)
+
+    def take(self, idx) -> "RaggedPaths":
+        """Row-gather (host or device indices)."""
+        idx = jnp.asarray(idx)
+        return RaggedPaths(jnp.take(self.values, idx, axis=0),
+                           jnp.take(self.lengths, idx, axis=0))
+
+    def __len__(self) -> int:
+        return self.batch
+
+
+jax.tree_util.register_dataclass(
+    RaggedPaths, data_fields=("values", "lengths"), meta_fields=())

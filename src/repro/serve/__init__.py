@@ -1,2 +1,3 @@
 from .engine import (make_prefill_step, make_serve_step, ServeEngine,
                      SigScoreEngine, SigStreamEngine)
+from .batcher import DynamicBatcher

@@ -1,0 +1,197 @@
+"""Dynamic batching for ragged signature serving.
+
+Per-request serving of variable-length paths is the worst case for a
+compiled runtime: every distinct length is a fresh executable, and batch=1
+leaves the hardware idle.  ``DynamicBatcher`` turns that traffic into
+micro-batched serving with a *bounded* set of compiled shapes:
+
+1. requests are queued (:meth:`submit`) as (M_i+1, d) paths;
+2. :meth:`flush` packs them into length buckets on the
+   :func:`repro.ragged.bucket_ladder` (lengths rounded up a geometric
+   ladder) and pads each micro-batch's row count up a power-of-two ladder;
+3. each bucket runs ONE engine call over its padded
+   :class:`repro.ragged.RaggedPaths` — exact per-request answers, because
+   zero-masked padding is the identity (see :mod:`repro.ragged`);
+4. results are scattered back to the submitting tickets.
+
+Shape accounting is explicit: ``shapes_seen`` is the set of (padded_len,
+padded_batch) pairs fed to the engine — at most ``len(ladder) ×
+len(batch-rungs)`` entries no matter how many distinct request lengths
+arrive — and ``stats()`` reports padding waste next to it.
+
+The two factories bind the batcher to the serving engines of
+:mod:`repro.serve.engine`: :meth:`signature_service` computes the terminal
+window features a :class:`SigStreamEngine` tracks online, and
+:meth:`scoring_service` rides a :class:`SigScoreEngine`'s cached reference
+signatures/Gram for retrieval scores or KRR predictions per request.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ragged import (RaggedPaths, assign_buckets, batch_rung,
+                          bucket_ladder, pad_batch)
+
+
+@dataclasses.dataclass
+class _Request:
+    ticket: int
+    path: np.ndarray      # (M_i+1, d)
+    length: int           # increments
+
+
+@dataclasses.dataclass
+class DynamicBatcher:
+    """Queue → length-bucket → micro-batch executor (see module docstring).
+
+    ``compute(batch: RaggedPaths) -> (B, ...) array`` is the per-bucket
+    engine call; row b of its output is the answer for example b.  Build
+    one with :meth:`signature_service` / :meth:`scoring_service`, or pass
+    any custom callable (it sees zero-masked-exact padded batches).
+    """
+    compute: Callable[[RaggedPaths], jax.Array]
+    d: int
+    max_len: int                      # longest accepted request (increments)
+    min_bucket: int = 16              # bottom rung of the length ladder
+    growth: float = 2.0               # ladder growth factor
+    max_batch: int = 64               # top rung of the batch ladder
+    ladder: Optional[np.ndarray] = None   # explicit rungs override
+    jit_compute: bool = True          # one executable per (rung, batch) shape
+
+    def __post_init__(self):
+        if self.ladder is None:
+            self.ladder = bucket_ladder(self.max_len,
+                                        min_len=self.min_bucket,
+                                        growth=self.growth)
+        self.ladder = np.asarray(self.ladder, np.int64)
+        self.max_len = int(self.ladder[-1])
+        self._compute = jax.jit(self.compute) if self.jit_compute \
+            else self.compute
+        self._queue: list[_Request] = []
+        self._next_ticket = 0
+        self.shapes_seen: set[tuple[int, int]] = set()
+        self.padded_steps = 0         # Σ padded increments fed to the engine
+        self.true_steps = 0           # Σ true increments served
+
+    # -- request side ------------------------------------------------------
+
+    def submit(self, path) -> int:
+        """Queue one (M_i+1, d) path; returns the ticket :meth:`flush`
+        resolves."""
+        path = np.asarray(path, np.float32)
+        if path.ndim != 2 or path.shape[-1] != self.d:
+            raise ValueError(f"request must be (M+1, {self.d}), got "
+                             f"{path.shape}")
+        length = path.shape[0] - 1
+        if not 0 <= length <= self.max_len:
+            raise ValueError(f"request length {length} outside [0, "
+                             f"{self.max_len}] (the ladder's top rung)")
+        t = self._next_ticket
+        self._next_ticket += 1
+        self._queue.append(_Request(t, path, length))
+        return t
+
+    @property
+    def pending(self) -> int:
+        return len(self._queue)
+
+    # -- execution side ----------------------------------------------------
+
+    def flush(self) -> dict[int, jax.Array]:
+        """Run every queued request through bucketed micro-batches; returns
+        {ticket: result_row}."""
+        queue, self._queue = self._queue, []
+        out: dict[int, jax.Array] = {}
+        if not queue:
+            return out
+        lengths = np.asarray([r.length for r in queue], np.int64)
+        which = assign_buckets(lengths, self.ladder)
+        for k in np.unique(which):
+            rung = int(self.ladder[k])
+            group = [queue[i] for i in np.nonzero(which == k)[0]]
+            # split oversized groups so the batch rung never exceeds max_batch
+            for off in range(0, len(group), self.max_batch):
+                part = group[off:off + self.max_batch]
+                rp = RaggedPaths.from_list([r.path for r in part],
+                                           pad_to=rung)
+                B_pad = batch_rung(len(part), self.max_batch)
+                rp = pad_batch(rp, B_pad)
+                self.shapes_seen.add((rung, B_pad))
+                self.padded_steps += rung * B_pad
+                self.true_steps += int(sum(r.length for r in part))
+                res = self._compute(rp)
+                for row, req in enumerate(part):
+                    out[req.ticket] = res[row]
+        return out
+
+    def stats(self) -> dict:
+        """Shape-count + padding-waste accounting for the traffic so far."""
+        return {
+            "compiled_shapes": len(self.shapes_seen),
+            "shapes": sorted(self.shapes_seen),
+            "ladder": self.ladder.tolist(),
+            "padded_steps": self.padded_steps,
+            "true_steps": self.true_steps,
+            "padding_overhead": (self.padded_steps / self.true_steps
+                                 if self.true_steps else 0.0),
+        }
+
+    # -- engine factories --------------------------------------------------
+
+    @classmethod
+    def signature_service(cls, d: int, depth: int, *, max_len: int,
+                          backend: str = "auto", **kw) -> "DynamicBatcher":
+        """Batcher computing each request's terminal signature features —
+        the batched analogue of draining a :class:`SigStreamEngine` slot
+        (same (D_sig,) feature vector its ``features`` property holds)."""
+        from repro.kernels import ops
+        from repro.core import tensor_ops as tops
+
+        def compute(rp: RaggedPaths) -> jax.Array:
+            incs = tops.path_increments(rp.values)
+            return ops.signature(incs, depth, backend=backend,
+                                 lengths=rp.lengths)
+
+        return cls(compute, d, max_len, **kw)
+
+    @classmethod
+    def scoring_service(cls, engine, *, max_len: int, mode: str = "scores",
+                        **kw) -> "DynamicBatcher":
+        """Batcher scoring requests against a :class:`SigScoreEngine`'s
+        cached reference signatures: ``mode="scores"`` returns (R,) kernel
+        scores per request (RKHS cosine if the engine normalises),
+        ``"nearest"`` the argmax reference index, ``"predict"`` the KRR
+        prediction from the engine's cached duals."""
+        if mode not in ("scores", "nearest", "predict"):
+            raise ValueError(f"unknown mode {mode!r}")
+        if mode == "predict" and engine.alpha is None:
+            raise ValueError("scoring_service(mode='predict') needs a "
+                             "SigScoreEngine constructed with targets=")
+        from repro.kernels import ops
+        from repro.core import tensor_ops as tops
+        from repro.sigkernel import gram_diag, krr_predict
+
+        def compute(rp: RaggedPaths) -> jax.Array:
+            incs = tops.path_increments(rp.values)
+            S = ops.signature(incs, engine.depth, backend=engine.backend,
+                              lengths=rp.lengths)
+            K = ops.gram(S, engine.ref_sigs, engine.weights,
+                         backend=engine.backend,
+                         block_words=engine.block_words)
+            if mode == "predict":
+                return krr_predict(K, engine.alpha)
+            if engine.normalize:
+                qn = jnp.sqrt(jnp.maximum(gram_diag(S, engine.weights),
+                                          1e-12))
+                rn = jnp.sqrt(jnp.maximum(jnp.diag(engine.ref_gram), 1e-12))
+                K = K / (qn[:, None] * rn[None, :])
+            if mode == "nearest":
+                return jnp.argmax(K, axis=-1)
+            return K
+
+        return cls(compute, engine.d, max_len, **kw)

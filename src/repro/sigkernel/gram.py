@@ -72,27 +72,44 @@ def _as_plan(words, d: int) -> WordPlan:
     return make_plan(tuple(tuple(w) for w in words), d)
 
 
+def unpack_ragged(paths, lengths=None):
+    """(RaggedPaths | array, lengths-or-None) -> (values, lengths-or-None);
+    explicit ``lengths`` wins over the container's.  Thin wrapper over the
+    core protocol helper so there is ONE definition of what counts as a
+    ragged container."""
+    from repro.core.signature import _unpack_ragged
+    values, rl = _unpack_ragged(paths)
+    if rl is not None:
+        return values, (rl if lengths is None else lengths)
+    return jnp.asarray(values), lengths
+
+
 def signature_features(paths: jax.Array, depth: int | None = None, *,
                        words=None, backend: str = "auto",
-                       backward: str = "inverse") -> jax.Array:
+                       backward: str = "inverse",
+                       lengths=None) -> jax.Array:
     """The Gram legs: (B, M+1, d) paths -> (B, |I|) signature coordinates.
 
     ``words=None`` gives the full truncation (needs ``depth``); otherwise the
     projected coordinates of the word set / plan.  Routed through the engine
     dispatch, so the result is differentiable with the §4.2 inverse VJP on
-    every backend.
+    every backend.  ``lengths`` (B,) makes the batch ragged (exact
+    zero-masked padding; a :class:`repro.ragged.RaggedPaths` may be passed
+    directly as ``paths``).
     """
-    paths = jnp.asarray(paths)
+    paths, lengths = unpack_ragged(paths, lengths)
     if paths.ndim != 3:
         raise ValueError(f"expected batched paths (B, M+1, d), "
                          f"got {paths.shape}")
     incs = tops.path_increments(paths)
     if words is not None:
         plan = _as_plan(words, paths.shape[-1])
-        return ops.projected(incs, plan, backend=backend, backward=backward)
+        return ops.projected(incs, plan, backend=backend, backward=backward,
+                             lengths=lengths)
     if depth is None:
         raise ValueError("signature_features needs depth= or words=")
-    return ops.signature(incs, depth, backend=backend, backward=backward)
+    return ops.signature(incs, depth, backend=backend, backward=backward,
+                         lengths=lengths)
 
 
 def resolve_weights(paths_d: int, depth: int | None, words, weights,
@@ -134,7 +151,8 @@ def sig_gram(x: jax.Array, y: jax.Array | None = None,
              depth: int | None = None, *, words=None, weights=None,
              level_weights=None, gamma=None, route: str = "auto",
              backend: str = "auto", backward: str = "inverse",
-             block_words: int = 512) -> jax.Array:
+             block_words: int = 512, x_lengths=None,
+             y_lengths=None) -> jax.Array:
     """Batched signature Gram matrix K[i, j] = k_ω(x_i, y_j).
 
     x: (B_x, M+1, d) paths; y: (B_y, M'+1, d) paths or None (symmetric Gram
@@ -147,13 +165,20 @@ def sig_gram(x: jax.Array, y: jax.Array | None = None,
     dispatch so peak live memory is O(B_x·B_y + B·block_words).  Fully
     differentiable: the signature legs carry the §4.2 inverse VJP of the
     chosen ``backend``/``backward`` and the product has a closed-form VJP.
+
+    ``x_lengths`` / ``y_lengths`` make either path batch ragged — the legs
+    are computed with exact zero-masked padding, so the Gram of a padded
+    batch IS the Gram of the unpadded paths.  Either argument may also ride
+    in as a :class:`repro.ragged.RaggedPaths`.
     """
-    plan, w = resolve_weights(jnp.asarray(x).shape[-1], depth, words,
+    x, x_lengths = unpack_ragged(x, x_lengths)
+    plan, w = resolve_weights(x.shape[-1], depth, words,
                               weights, level_weights, gamma)
     Sx = signature_features(x, depth, words=plan, backend=backend,
-                            backward=backward)
+                            backward=backward, lengths=x_lengths)
     Sy = Sx if y is None else signature_features(
-        y, depth, words=plan, backend=backend, backward=backward)
+        y, depth, words=plan, backend=backend, backward=backward,
+        lengths=y_lengths)
     return gram_from_signatures(Sx, Sy, w, route=route, backend=backend,
                                 block_words=block_words)
 

@@ -17,7 +17,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from .gram import gram_from_signatures, resolve_weights, signature_features
+from .gram import (gram_from_signatures, resolve_weights, signature_features,
+                   unpack_ragged)
 
 
 def mmd_from_signatures(Sx: jax.Array, Sy: jax.Array, weights: jax.Array, *,
@@ -46,18 +47,23 @@ def sig_mmd(x: jax.Array, y: jax.Array, depth: int | None = None, *,
             words=None, weights=None, level_weights=None, gamma=None,
             unbiased: bool = True, route: str = "auto",
             backend: str = "auto", backward: str = "inverse",
-            block_words: int = 512) -> jax.Array:
+            block_words: int = 512, x_lengths=None,
+            y_lengths=None) -> jax.Array:
     """Signature-MMD² between two path samples x (B_x, M+1, d), y (B_y, M'+1, d).
 
     Kernel configuration matches :func:`repro.sigkernel.sig_gram` (depth or
     word set, plus weights / level_weights / gamma).  Returns a scalar;
     differentiable w.r.t. both path batches (and explicit ``weights``).
+    ``x_lengths`` / ``y_lengths`` (or :class:`repro.ragged.RaggedPaths`
+    samples) make either side ragged — the statistic compares the TRUE
+    variable-length paths, with zero gradient past each example's end.
     """
-    plan, w = resolve_weights(jnp.asarray(x).shape[-1], depth, words,
+    x, x_lengths = unpack_ragged(x, x_lengths)
+    plan, w = resolve_weights(x.shape[-1], depth, words,
                               weights, level_weights, gamma)
     Sx = signature_features(x, depth, words=plan, backend=backend,
-                            backward=backward)
+                            backward=backward, lengths=x_lengths)
     Sy = signature_features(y, depth, words=plan, backend=backend,
-                            backward=backward)
+                            backward=backward, lengths=y_lengths)
     return mmd_from_signatures(Sx, Sy, w, unbiased=unbiased, route=route,
                                backend=backend, block_words=block_words)

@@ -56,6 +56,12 @@ def make_sig_mmd_loss(cfg: ModelConfig):
     ``batch["paths"]`` (B_ref, S'+1, channels).  Differentiable end to end —
     signature legs on the configured backend carry the §4.2 inverse VJP, so
     the trainer's O(B·D_sig) memory law holds for kernel losses too.
+
+    Ragged batches: ``batch["mask"]`` (B, S right-padded attention mask)
+    truncates each generated trajectory at its true end, and
+    ``batch["path_lengths"]`` (B_ref,) marks the reference paths as ragged
+    (the spelling :class:`repro.data.RaggedPathStream` emits) — both sides
+    then compare TRUE variable-length paths with zero gradient past the end.
     """
     sc = cfg.sig_head
     if sc is None:
@@ -74,16 +80,28 @@ def make_sig_mmd_loss(cfg: ModelConfig):
                                  embeds=batch.get("embeds"),
                                  positions=batch.get("positions"),
                                  remat=remat)
+        mask = batch.get("mask")
+        lengths = None
         hp = params.get("sig_head")
         if hp is not None and "proj" in hp:
-            path = _learned_path(hp, hidden, sc)
+            if mask is None:
+                path = _learned_path(hp, hidden, sc)
+            else:
+                path, lengths = _learned_path(hp, hidden, sc, mask)
         else:
             path = hidden[..., :sc.channels].astype(jnp.float32)
             if sc.stride > 1:
                 path = path[:, ::sc.stride]
-            path = path / jnp.sqrt(jnp.float32(path.shape[1]))
+            if mask is None:
+                path = path / jnp.sqrt(jnp.float32(path.shape[1]))
+            else:
+                from repro.models.sig_head import mask_path_lengths
+                lengths, norm = mask_path_lengths(mask, sc.stride)
+                path = path / norm[:, None, None]
         mmd = sig_mmd(path, batch["paths"].astype(jnp.float32), sc.depth,
-                      backend=sc.backend, backward=sc.backward)
+                      backend=sc.backend, backward=sc.backward,
+                      x_lengths=lengths,
+                      y_lengths=batch.get("path_lengths"))
         loss = mmd + aux
         return loss, {"loss": loss, "sig_mmd": mmd, "aux": aux}
 

@@ -82,6 +82,10 @@ class strategies:  # noqa: N801 — mirrors the `hypothesis.strategies` module
         return _Strategy(lambda rng: seq[int(rng.integers(len(seq)))])
 
     @staticmethod
+    def booleans():
+        return _Strategy(lambda rng: bool(rng.integers(2)))
+
+    @staticmethod
     def data():
         return _DataStrategy()
 
@@ -97,9 +101,10 @@ def settings(**kw):
 
 
 def given(*strategy_args, **strategy_kwargs):
-    if strategy_kwargs:
+    if strategy_args and strategy_kwargs:
         raise NotImplementedError(
-            "the hypothesis fallback only supports positional strategies")
+            "the hypothesis fallback supports positional OR keyword "
+            "strategies, not a mix")
 
     def deco(fn):
         declared = getattr(fn, "_fallback_settings", {}).get(
@@ -111,7 +116,8 @@ def given(*strategy_args, **strategy_kwargs):
                 seed = zlib.adler32(f"{fn.__module__}.{fn.__qualname__}"
                                     f"#{i}".encode())
                 rng = np.random.default_rng(seed)
-                fn(*[s._draw(rng) for s in strategy_args])
+                fn(*[s._draw(rng) for s in strategy_args],
+                   **{k: s._draw(rng) for k, s in strategy_kwargs.items()})
 
         # pytest inspects the signature to map fixtures: expose a zero-arg
         # callable (the suite never mixes fixtures with @given)
