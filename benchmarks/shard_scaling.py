@@ -1,0 +1,151 @@
+"""Mesh-sharding benchmarks: weak scaling + Gram ring vs replicated.
+
+Two claims from the mesh-aware dispatch (see the mesh note in
+``repro.kernels.ops``) are tracked per PR:
+
+1. *Weak scaling*: with a fixed per-device batch, wall-clock of the
+   signature forward+grad under ``sharding_ctx(make_sig_mesh(P))`` should be
+   ~flat in P.  On CPU the 8 "devices" share the same cores, so the CPU
+   numbers measure dispatch overhead, not speedup — the *trajectory* (and
+   the TPU run of the same file) is the claim.
+2. *Ring communication law*: the cross-device Gram moves O(B·D_sig) bytes
+   over collective-permutes — measured from lowered HLO via
+   ``repro.distributed.hlo.collective_stats`` and compared against the
+   would-be replicated spellings (all-gather of Y: B·D_sig result bytes;
+   elementwise blow-up: B_x·B_y·D_sig).
+
+Every record lands in ``BENCH_shard.json`` (cwd), matching the other
+suites, so CI uploads it with the rest.  The module re-executes itself in a
+subprocess with 8 forced host devices (XLA locks the device count at first
+init, so the in-process ``run()`` entry point cannot force it).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+
+N_DEV = 8
+_FLAGS = f"--xla_force_host_platform_device_count={N_DEV}"
+JSON_PATH = os.environ.get("PATHSIG_BENCH_JSON_SHARD", "BENCH_shard.json")
+
+
+def run(quick: bool = True) -> None:
+    """benchmarks.run entry point: re-exec with forced host devices."""
+    env = dict(os.environ, XLA_FLAGS=_FLAGS)
+    cmd = [sys.executable, "-m", "benchmarks.shard_scaling", "--inner"]
+    if quick:
+        cmd.append("--quick")
+    r = subprocess.run(cmd, env=env)
+    if r.returncode:
+        raise RuntimeError(f"shard_scaling subprocess failed ({r.returncode})")
+
+
+def _bench(quick: bool) -> None:
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.words import sig_dim
+    from repro.distributed import collective_stats, sharding_ctx
+    from repro.kernels import ops
+    from repro.launch.mesh import make_sig_mesh
+    from repro.sigkernel import sig_gram, word_weights
+
+    from .common import header, make_paths, row, time_fn
+
+    assert len(jax.devices()) == N_DEV, jax.devices()
+    out = {"devices": N_DEV, "weak_scaling": [], "gram_ring": {}}
+
+    # --- 1. weak scaling: fixed per-device batch -------------------------
+    header("shard weak scaling (per-device batch fixed)")
+    b_dev, M, d, depth = (8, 64, 3, 4) if quick else (16, 256, 4, 4)
+    iters = 3 if quick else 5
+    t1 = None
+    for P in (1, 2, 4, 8):
+        mesh = make_sig_mesh(P)
+        x = make_paths(b_dev * P, M, d, seed=0)
+        incs = jnp.diff(x, axis=1)
+
+        def fwd_bwd(a):
+            return jax.grad(lambda z: ops.signature(
+                z, depth, backend="auto").sum())(a)
+
+        with sharding_ctx(mesh):
+            t = time_fn(jax.jit(fwd_bwd), incs, warmup=1, iters=iters)
+        t1 = t if t1 is None else t1
+        eff = t1 / t if t > 0 else 0.0
+        tag = f"P={P};B={b_dev * P};M={M};d={d};N={depth}"
+        row("shard/weak_fwdbwd", f"{t * 1e3:.3f}", "ms", tag)
+        out["weak_scaling"].append({"P": P, "B": b_dev * P, "M": M, "d": d,
+                                    "depth": depth, "ms": t * 1e3,
+                                    "efficiency_vs_P1": eff})
+
+    # --- 2. Gram ring vs replicated --------------------------------------
+    header("gram ring vs replicated (8-device mesh)")
+    B, gd, gN = (64, 3, 4) if quick else (256, 4, 4)
+    D = sig_dim(gd, gN)
+    X = make_paths(B, M, gd, seed=1)
+    w = jnp.asarray(word_weights(gd, gN))
+    mesh = make_sig_mesh(N_DEV)
+
+    def ring(a):
+        return sig_gram(a, None, gN, route="tiled", backend="jax")
+
+    def oracle(a):
+        return sig_gram(a, None, gN, route="oracle", backend="jax")
+
+    with sharding_ctx(mesh):
+        t_ring = time_fn(jax.jit(ring), X, warmup=1, iters=iters)
+        t_oracle = time_fn(jax.jit(oracle), X, warmup=1, iters=iters)
+        a = np.asarray(jax.jit(ring)(X))
+        b = np.asarray(jax.jit(oracle)(X))
+        err = float(np.max(np.abs(a - b)) / (np.max(np.abs(b)) + 1e-12))
+
+        Sx = jnp.asarray(np.random.default_rng(0).standard_normal(
+            (B, D)).astype(np.float32))
+        txt = jax.jit(lambda s: ops.gram(s, s, w, backend="jax")
+                      ).lower(Sx).compile().as_text()
+    st = collective_stats(txt, default_group=N_DEV)
+    permute_wire = st.by_kind.get("collective-permute", (0, 0, 0.0))[2]
+    ag_result = st.by_kind.get("all-gather", (0, 0.0, 0.0))[1]
+    replicated_y = B * D * 4                    # all-gather-of-Y spelling
+    blowup = B * B * D * 4                      # elementwise spelling
+    row("shard/ring_ms", f"{t_ring * 1e3:.3f}", "ms", f"B={B};D={D}")
+    row("shard/oracle_ms", f"{t_oracle * 1e3:.3f}", "ms", f"B={B};D={D}")
+    row("shard/ring_vs_oracle_relerr", f"{err:.2e}", "rel", "")
+    row("shard/permute_wire", f"{permute_wire / 2**20:.3f}", "MiB/dev",
+        f"replicated_y={replicated_y / 2**20:.3f}MiB;"
+        f"blowup={blowup / 2**20:.1f}MiB")
+    assert err < 1e-5, err
+    assert ag_result < blowup, (ag_result, blowup)
+    out["gram_ring"] = {"B": B, "D_sig": D, "ring_ms": t_ring * 1e3,
+                        "oracle_ms": t_oracle * 1e3, "relerr": err,
+                        "permute_wire_bytes_per_dev": permute_wire,
+                        "allgather_result_bytes": ag_result,
+                        "replicated_y_bytes": replicated_y,
+                        "elementwise_blowup_bytes": blowup,
+                        "collectives": {k: list(v)
+                                        for k, v in st.by_kind.items()}}
+
+    with open(JSON_PATH, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"\n# wrote {JSON_PATH}", flush=True)
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--inner", action="store_true",
+                    help="already re-executed with forced host devices")
+    args = ap.parse_args(argv)
+    if args.inner:
+        _bench(args.quick)
+    else:
+        run(quick=args.quick)
+
+
+if __name__ == "__main__":
+    main()

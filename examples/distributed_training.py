@@ -1,0 +1,103 @@
+"""Data-parallel signature training on a (fake) 8-device mesh.
+
+One context manager makes the whole stack SPMD: a `sharding_ctx(mesh)`
+installed around the training loop
+
+- splits every signature/Gram batch over the mesh's "batch" logical axis
+  (`repro.kernels.ops` wraps each dispatch cell in `shard_map`),
+- runs the signature-MMD Gram legs through the cross-device `ppermute`
+  ring (O(B·D_sig) communication, no replicated Gram-sized intermediate),
+- and turns `train_loop` data-parallel (params replicated, batches placed
+  with `batch_specs`, gradient mean = XLA's all-reduce).
+
+The demo fits a tiny path-generator to a drifted random-walk distribution
+by gradient descent on the unbiased signature-MMD², then shows the same
+context serving ragged traffic through a mesh-placed DynamicBatcher.
+
+Run:  PYTHONPATH=src python examples/distributed_training.py
+(8 host devices are forced below — no accelerator needed.)
+"""
+from __future__ import annotations
+
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax                                                    # noqa: E402
+import jax.numpy as jnp                                       # noqa: E402
+import numpy as np                                            # noqa: E402
+
+from repro.distributed import sharding_ctx                    # noqa: E402
+from repro.launch.mesh import make_sig_mesh                   # noqa: E402
+from repro.optim import adamw                                 # noqa: E402
+from repro.sigkernel import sig_mmd                           # noqa: E402
+
+DEPTH, D_CH, M_STEPS, BATCH = 3, 2, 24, 16
+
+
+def target_paths(n, seed):
+    """The distribution to match: drifted, anisotropic random walks."""
+    rng = np.random.default_rng(seed)
+    steps = rng.normal(size=(n, M_STEPS, D_CH)) * (0.2, 0.35) + (0.08, 0.0)
+    return jnp.asarray(np.concatenate(
+        [np.zeros((n, 1, D_CH)), np.cumsum(steps, 1)], 1).astype(np.float32))
+
+
+def generate(params, noise):
+    """Tiny generator: per-channel scale + drift applied to white noise."""
+    steps = noise * params["scale"] + params["drift"]
+    return jnp.concatenate([jnp.zeros_like(steps[:, :1]),
+                            jnp.cumsum(steps, axis=1)], axis=1)
+
+
+def main():
+    mesh = make_sig_mesh()                 # all (8 forced) devices, 1 axis
+    print(f"mesh: {mesh.shape} over {len(jax.devices())} devices")
+    params = {"scale": jnp.ones((D_CH,)) * 0.1, "drift": jnp.zeros((D_CH,))}
+
+    norm = float(np.sqrt(M_STEPS))         # sqrt-length path normalisation
+
+    def loss_fn(params, noise, ref):
+        fake = generate(params, noise)
+        return sig_mmd(fake / norm, ref / norm, DEPTH, backend="auto")
+
+    opt = adamw(lr=2e-2)
+    opt_state = opt.init(params)
+
+    with sharding_ctx(mesh):               # <- the only multi-device line
+        step = jax.jit(jax.value_and_grad(loss_fn))
+        rng = np.random.default_rng(0)
+        for it in range(120):
+            noise = jnp.asarray(rng.normal(
+                size=(BATCH, M_STEPS, D_CH)).astype(np.float32))
+            ref = target_paths(BATCH, seed=1000 + it)
+            mmd, g = step(params, noise, ref)
+            updates, opt_state = opt.update(g, opt_state, params)
+            params = jax.tree.map(jnp.add, params, updates)
+            if it % 30 == 0 or it == 119:
+                print(f"  it={it:3d}  sig-MMD²={float(mmd):+.5f}  "
+                      f"scale={np.round(np.asarray(params['scale']), 3)}  "
+                      f"drift={np.round(np.asarray(params['drift']), 3)}")
+
+    print("target  |scale|≈[0.2, 0.35] (sign unidentifiable from white "
+          "noise), drift≈[0.08, 0.0]; MMD²≈0 means matched")
+
+    # --- the same mesh serving ragged traffic ---------------------------
+    from repro.serve import DynamicBatcher
+    db = DynamicBatcher.signature_service(D_CH, DEPTH, max_len=64,
+                                          backend="auto", min_bucket=8,
+                                          mesh=mesh)
+    rng = np.random.default_rng(7)
+    reqs = [np.cumsum(rng.normal(size=(L + 1, D_CH)).astype(np.float32), 0)
+            for L in rng.integers(2, 64, size=25)]
+    tickets = [db.submit(r) for r in reqs]
+    feats = db.flush()
+    st = db.stats()
+    print(f"served {len(feats)} requests over {st['devices']} devices: "
+          f"{st['compiled_shapes']} compiled shapes, "
+          f"{st['rows_per_device']} rows/device, "
+          f"occupancy {st['occupancy']:.0%}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,1 +1,4 @@
-from .ctx import sharding_ctx, shard, resolve_spec, current_mesh, DEFAULT_RULES
+from .ctx import (DEFAULT_RULES, current_mesh, current_rules, logical_axes,
+                  logical_axis_size, named_sharding, resolve_spec, shard,
+                  sharding_ctx)
+from .hlo import collective_stats

@@ -37,6 +37,13 @@ DEFAULT_RULES: dict[str, object] = {
     # fully local after the EP all-to-all (§Perf cell A)
     "moe_slots": ("pod", "data"),
     "fsdp": "data",             # parameter sharding axis (ZeRO-3)
+    # signature-stack axes (repro.kernels.ops mesh path): the time axis of a
+    # path and the word-coordinate axis of a signature are never sharded by
+    # default — the engines scan over time and the word basis is the unit of
+    # kernel tiling.  They exist as logical names so rules can annotate them
+    # (with_sharding_constraint) without touching the SPMD batch split.
+    "path_time": None,
+    "sig_words": None,
 }
 
 
@@ -55,6 +62,40 @@ def sharding_ctx(mesh: Mesh, rules: dict | None = None):
 def current_mesh() -> Optional[Mesh]:
     ctx = _CTX.get()
     return ctx[0] if ctx else None
+
+
+def current_rules() -> Optional[dict]:
+    """The merged rule dict of the innermost context (None outside any)."""
+    ctx = _CTX.get()
+    return ctx[1] if ctx else None
+
+
+def logical_axes(logical: str) -> tuple[str, ...]:
+    """Mesh axis names a logical axis maps to under the current context
+    (() outside any context, when the rule is None, or when no mapped axis
+    is present in the mesh)."""
+    ctx = _CTX.get()
+    if ctx is None:
+        return ()
+    mesh, rules = ctx
+    r = rules.get(logical)
+    if r is None:
+        return ()
+    names = (r,) if isinstance(r, str) else tuple(r)
+    return tuple(a for a in names if a in set(mesh.axis_names))
+
+
+def logical_axis_size(logical: str) -> int:
+    """Total number of shards of a logical axis under the current context
+    (1 outside any context / when unmapped)."""
+    ctx = _CTX.get()
+    if ctx is None:
+        return 1
+    mesh = ctx[0]
+    size = 1
+    for a in logical_axes(logical):
+        size *= mesh.shape[a]
+    return size
 
 
 def resolve_spec(*logical: Optional[str]) -> Optional[P]:

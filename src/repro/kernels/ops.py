@@ -80,6 +80,24 @@ masked after the true-terminal slot (gather it back with
 ragged batches enter it through the signature legs
 (``repro.sigkernel.sig_gram(..., x_lengths=, y_lengths=)``).
 
+``mesh`` column: EVERY cell above (and :func:`gram`) is additionally
+SPMD-capable — orthogonal to backend × backward × stream × lengths because
+it is resolved OUTSIDE the engine.  Installing
+``repro.distributed.ctx.sharding_ctx(mesh)`` whose rules map the "batch"
+logical axis onto mesh axes (the default rules do, via 'data'/'pod';
+``repro.launch.mesh.make_sig_mesh()`` builds the 1-axis case) wraps the
+single-device cell in ``shard_map`` over that axis: each shard rebuilds the
+same custom-VJP closure on its local batch, so gradients shard identically
+to the primals; batches are zero-padded up to a multiple of the axis size
+(zero increments are identity updates, padded rows are sliced off, their
+cotangents are exactly zero); ``lengths`` ride along batch-sharded.
+:func:`gram` instead runs the cross-device ring of :func:`_gram_ring`
+(local X rows, Y tiles rotating by ``jax.lax.ppermute``, O(B·D_sig)
+communication, no replicated Gram-sized intermediate).  Outside any context
+every entry point is bit-identical to the single-device path.  The logical
+axes "path_time" and "sig_words" exist in the default rules (unsharded) so
+launchers can annotate time/word dims without touching the batch split.
+
 ``stream=True`` rows emit every ``stream_stride``-th prefix signature inside
 the time loop — (B, M_out, D) with M_out = ceil(M / stride), terminal step
 always included (``repro.core.signature.stream_emit_steps``).  Their
@@ -103,8 +121,12 @@ from functools import lru_cache, partial
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec
 
 from repro.core import tensor_ops as tops
+from repro.distributed.ctx import current_mesh, logical_axes
+from repro.distributed.ctx import shard as shard_constraint
 from repro.core.signature import (as_lengths, checkpoint_bwd_scan,
                                   default_chunk, inverse_bwd_scan,
                                   mask_increments, signature_from_increments,
@@ -121,6 +143,50 @@ from .sig_words import sig_words
 
 BACKENDS = ("jax", "pallas", "pallas_interpret", "auto", "hybrid")
 BACKWARDS = ("inverse", "checkpoint", "autodiff")
+
+
+# ---------------------------------------------------------------------------
+# plan caches: one shared bounded policy.  Every interned plan / compiled
+# closure / shard_map wrapper in this module is registered here, so serving
+# traffic with an unbounded stream of word sets evicts old entries instead of
+# growing without limit.  Eviction is always safe — entries are pure
+# functions of their keys, so a rebuilt entry produces bit-identical results
+# (jit recompiles, nothing else changes).
+# ---------------------------------------------------------------------------
+
+PLAN_CACHE_MAXSIZE = 256          # default per-cache bound
+
+_PLAN_CACHE_FNS: dict = {}        # cache name -> undecorated fn
+
+
+def plan_cache(fn):
+    """Register ``fn`` under the shared bounded-LRU plan-cache policy."""
+    _PLAN_CACHE_FNS[fn.__name__] = fn
+    return lru_cache(maxsize=PLAN_CACHE_MAXSIZE)(fn)
+
+
+def set_plan_cache_maxsize(maxsize: int | None) -> None:
+    """Rebuild every registered plan cache with a new bound (None =
+    unbounded).  Existing entries are dropped — safe, see above."""
+    global PLAN_CACHE_MAXSIZE
+    PLAN_CACHE_MAXSIZE = maxsize
+    g = globals()
+    for name, fn in _PLAN_CACHE_FNS.items():
+        g[name] = lru_cache(maxsize=maxsize)(fn)
+
+
+def clear_plan_caches() -> None:
+    """Drop every cached plan / kernel closure / shard_map wrapper (the
+    serving-side pressure valve; results are unaffected)."""
+    g = globals()
+    for name in _PLAN_CACHE_FNS:
+        g[name].cache_clear()
+
+
+def plan_cache_info() -> dict:
+    """{cache name: functools CacheInfo} for every registered cache."""
+    g = globals()
+    return {name: g[name].cache_info() for name in _PLAN_CACHE_FNS}
 
 
 def _on_tpu() -> bool:
@@ -155,7 +221,7 @@ def _check_backward(backward: str) -> None:
 # truncated signatures: Pallas forwards, §4.2 custom VJPs
 # ---------------------------------------------------------------------------
 
-@lru_cache(maxsize=None)
+@plan_cache
 def _pallas_sig_inverse(depth: int, batch_tile: int, split: int | None,
                         interpret: bool):
     """Kernel forward + inverse-reconstruction backward (paper §4.2)."""
@@ -179,7 +245,7 @@ def _pallas_sig_inverse(depth: int, batch_tile: int, split: int | None,
     return sig
 
 
-@lru_cache(maxsize=None)
+@plan_cache
 def _pallas_sig_checkpoint(depth: int, chunk: int, batch_tile: int,
                            split: int | None, interpret: bool):
     """Kernel chunk forward + √M-checkpoint backward.
@@ -232,7 +298,7 @@ def _pallas_sig_checkpoint(depth: int, chunk: int, batch_tile: int,
     return sig
 
 
-@lru_cache(maxsize=None)
+@plan_cache
 def _pallas_sig_stream(depth: int, stride: int, batch_tile: int,
                        split: int | None, interpret: bool):
     """Streamed kernel forward + generalised §4.2 backward: cotangents arrive
@@ -265,21 +331,21 @@ def _pallas_sig_stream(depth: int, stride: int, batch_tile: int,
 # the same compiled kernels instead of recompiling and growing the caches
 # ---------------------------------------------------------------------------
 
-@lru_cache(maxsize=None)
+@plan_cache
 def _plan_for_words(words: tuple, d: int) -> WordPlan:
     """The interned WordPlan for a word set: one canonical object per
     (words, d) content, shared by every jit/lru cache downstream."""
     return make_plan(words, d)
 
 
-@lru_cache(maxsize=None)
+@plan_cache
 def _tiled_for_words(words: tuple, d: int, max_rows: int) -> TiledPlan:
     """The interned TiledPlan — content-keyed for the same reason (TiledPlan
     hashes by identity, and ``sig_words`` jit-caches on the plan object)."""
     return make_tiled_plan(words, d, max_rows=max_rows)
 
 
-@lru_cache(maxsize=None)
+@plan_cache
 def _closure_tiled_plan(words: tuple, d: int, max_rows: int) -> TiledPlan:
     """Tiled plan whose *requested* words are the prefix closure of the word
     set — the kernel computes the closure rows anyway, so asking for them adds
@@ -304,7 +370,7 @@ def _normalise_plans(plan, d: int) -> tuple[WordPlan, TiledPlan | None]:
 # projected signatures: Pallas closure forward, §4.2 custom VJP
 # ---------------------------------------------------------------------------
 
-@lru_cache(maxsize=None)
+@plan_cache
 def _pallas_proj_inverse(words: tuple, d: int, batch_tile: int, max_rows: int,
                          interpret: bool):
     """Word-kernel forward over the prefix closure + §4.2 backward.
@@ -335,7 +401,7 @@ def _pallas_proj_inverse(words: tuple, d: int, batch_tile: int, max_rows: int,
     return proj
 
 
-@lru_cache(maxsize=None)
+@plan_cache
 def _pallas_proj_stream(words: tuple, d: int, stride: int, batch_tile: int,
                         max_rows: int, interpret: bool):
     """Streamed word-kernel forward over the prefix closure + streamed §4.2
@@ -373,7 +439,7 @@ def _pallas_proj_stream(words: tuple, d: int, stride: int, batch_tile: int,
 # hybrid engine: dense W_{<=N-1} + per-word top chains (repro.core.hybrid)
 # ---------------------------------------------------------------------------
 
-@lru_cache(maxsize=None)
+@plan_cache
 def _hybrid_gather(words: tuple, d: int):
     """-> (top_words, out_idx): the level-N words the hybrid engine must chain
     explicitly, and the gather from its [dense W_{<=N-1} ++ top] buffer back
@@ -411,6 +477,115 @@ def _hybrid_projected(increments: jax.Array, wplan: WordPlan,
 
 
 # ---------------------------------------------------------------------------
+# mesh-aware SPMD path: an installed sharding_ctx(mesh) whose rules map the
+# "batch" logical axis onto >= 2 devices turns EVERY dispatch cell into a
+# shard_map over that axis — the same engines run per shard with per-shard
+# custom-VJP closures (signatures are batch-elementwise, so gradients shard
+# identically), the batch is zero-padded up to a multiple of the axis size
+# (zero increments are identity updates; padded rows are sliced off, so their
+# cotangents are exactly zero), and outside any context every entry point is
+# bit-identical to the single-device path (the mesh branch is never taken).
+# ---------------------------------------------------------------------------
+
+
+def _mesh_batch():
+    """-> (mesh, batch axis names, axis size) when the current sharding
+    context shards the "batch" logical axis over >= 2 devices, else None."""
+    mesh = current_mesh()
+    if mesh is None:
+        return None
+    names = logical_axes("batch")
+    size = 1
+    for a in names:
+        size *= mesh.shape[a]
+    if size <= 1:
+        return None
+    return mesh, names, size
+
+
+def _axis_arg(names: tuple):
+    """Axis-name argument for PartitionSpec / collectives: a bare name for
+    1 axis, the tuple for several (treated as one flattened axis)."""
+    return names if len(names) > 1 else names[0]
+
+
+def _pad_rows(x: jax.Array, size: int) -> jax.Array:
+    """Zero-pad dim 0 up to a multiple of ``size``."""
+    pad = -x.shape[0] % size
+    if not pad:
+        return x
+    return jnp.pad(x, ((0, pad),) + ((0, 0),) * (x.ndim - 1))
+
+
+def _apply_sharded(fn, size: int, increments: jax.Array, lengths):
+    """Pad the batch to a multiple of the axis size, run the shard_map'd
+    ``fn``, slice the padding back off (its transpose zero-fills, so padded
+    rows contribute exactly zero cotangent)."""
+    B = increments.shape[0]
+    incs = _pad_rows(increments, size)
+    if lengths is None:
+        out = fn(incs)
+    else:
+        out = fn(incs, _pad_rows(lengths, size))
+    return out[:B] if incs.shape[0] != B else out
+
+
+def _shard_wrap(mesh, names: tuple, with_lengths: bool, local_fn):
+    """Wrap ``local_fn(increments, lengths_or_None)`` in shard_map with every
+    argument batch-sharded on dim 0.  The body is the single-device dispatch,
+    so the custom-VJP closure is rebuilt per shard and gradients shard
+    identically to the primals.  ``check_rep=False``: pallas_call has no
+    replication rule."""
+    spec = PartitionSpec(_axis_arg(names))
+    if with_lengths:
+        def body(incs, lens):
+            return local_fn(incs, lens)
+        in_specs = (spec, spec)
+    else:
+        def body(incs):
+            return local_fn(incs, None)
+        in_specs = (spec,)
+    return shard_map(body, mesh=mesh, in_specs=in_specs, out_specs=spec,
+                     check_rep=False)
+
+
+@plan_cache
+def _sharded_sig(mesh, names: tuple, with_lengths: bool, depth: int,
+                 engine: str, interpret: bool, backward: str, batch_tile: int,
+                 split: int | None, time_chunks: int, stream: bool,
+                 stream_stride: int):
+    """shard_map wrapper around the truncated-signature cell."""
+    return _shard_wrap(mesh, names, with_lengths, partial(
+        _signature_local, depth=depth, engine=engine, interpret=interpret,
+        backward=backward, batch_tile=batch_tile, split=split,
+        time_chunks=time_chunks, stream=stream,
+        stream_stride=stream_stride))
+
+
+@plan_cache
+def _sharded_proj(mesh, names: tuple, with_lengths: bool, words: tuple,
+                  d: int, engine: str, interpret: bool, backward: str,
+                  batch_tile: int, max_rows: int, stream: bool,
+                  stream_stride: int):
+    """shard_map wrapper around the projected-signature cell (incl. the
+    hybrid engine)."""
+    return _shard_wrap(mesh, names, with_lengths, partial(
+        _projected_local, words=words, d=d, engine=engine,
+        interpret=interpret, backward=backward, batch_tile=batch_tile,
+        max_rows=max_rows, stream=stream, stream_stride=stream_stride))
+
+
+@plan_cache
+def _sharded_proj_fwd(mesh, names: tuple, with_lengths: bool, words: tuple,
+                      d: int, engine: str, interpret: bool, batch_tile: int,
+                      max_rows: int):
+    """shard_map wrapper around :func:`projected_forward_only`'s body."""
+    return _shard_wrap(mesh, names, with_lengths, partial(
+        _projected_fwd_local, words=words, d=d, engine=engine,
+        interpret=interpret, batch_tile=batch_tile, max_rows=max_rows))
+
+
+# ---------------------------------------------------------------------------
 # weighted Gram product: word-blocked routes + closed-form product VJP
 # ---------------------------------------------------------------------------
 
@@ -440,7 +615,7 @@ def _gram_blocked_jax(Sx: jax.Array, Sy: jax.Array, w: jax.Array,
     return jax.lax.fori_loop(0, n, body, jnp.zeros((Bx, By), dt))
 
 
-@lru_cache(maxsize=None)
+@plan_cache
 def _gram_vjp(engine: str, interpret: bool, block_words: int, bx_tile: int,
               by_tile: int):
     def forward(Sx, Sy, w):
@@ -470,6 +645,48 @@ def _gram_vjp(engine: str, interpret: bool, block_words: int, bx_tile: int,
     return gram_fn
 
 
+@plan_cache
+def _gram_ring(mesh, names: tuple, size: int, engine: str, interpret: bool,
+               block_words: int, bx_tile: int, by_tile: int):
+    """Cross-device Gram: X rows stay local, Y signature tiles rotate around
+    the mesh axis in a ``jax.lax.ppermute`` ring.
+
+    Both operands are batch-sharded; device p computes the (B_x/P, B_y/P)
+    tile against whichever Y shard it currently holds, writes it into its
+    output row block at the shard's *origin* columns, and passes the shard to
+    its left neighbour — P steps visit every tile.  Per-device communication
+    is (P-1)/P · B_y · D bytes (O(B·D_sig) in total), live memory is one Y
+    shard + the local (B_x/P, B_y) row block, and no collective ever carries
+    a replicated Gram-sized or (B_x, B_y, D_sig) intermediate — asserted via
+    :func:`repro.distributed.hlo.collective_stats` in the shard tests.
+    Differentiable: each tile rides the closed-form product VJP and the ring
+    transposes to the reversed ring.
+    """
+    local = _gram_vjp(engine, interpret, block_words, bx_tile, by_tile)
+    ax = _axis_arg(names)
+    spec = PartitionSpec(ax)
+    perm = [(i, (i - 1) % size) for i in range(size)]
+
+    def body(sx, sy, w):
+        p = jax.lax.axis_index(ax)
+        by = sy.shape[0]
+        dt = jnp.promote_types(sx.dtype, jnp.float32)
+
+        def step(s, carry):
+            sy_cur, G = carry
+            src = (p + s) % size          # origin device of the held shard
+            tile = local(sx, sy_cur, w).astype(dt)
+            G = jax.lax.dynamic_update_slice(G, tile, (0, src * by))
+            return jax.lax.ppermute(sy_cur, ax, perm), G
+
+        G0 = jnp.zeros((sx.shape[0], by * size), dt)
+        _, G = jax.lax.fori_loop(0, size, step, (sy, G0))
+        return G
+
+    return shard_map(body, mesh=mesh, in_specs=(spec, spec, PartitionSpec()),
+                     out_specs=spec, check_rep=False)
+
+
 def gram(Sx: jax.Array, Sy: jax.Array, weights: jax.Array, *,
          backend: str = "auto", block_words: int = 512, bx_tile: int = 128,
          by_tile: int = 128) -> jax.Array:
@@ -481,6 +698,13 @@ def gram(Sx: jax.Array, Sy: jax.Array, weights: jax.Array, *,
     backend (see the support-matrix note in the module docstring).
     Differentiable in all three operands via the closed-form product VJP —
     gradients flow into learned signatures AND learned weights.
+
+    Under an installed ``sharding_ctx(mesh)`` that shards the "batch"
+    logical axis, the product runs as the cross-device ring of
+    :func:`_gram_ring`: (B_x/P, B_y/P) tiles, O(B·D_sig) communication,
+    never a replicated (B_x, B_y) or (B_x, B_y, D_sig) intermediate.  Both
+    operands are padded up to a multiple of the axis size with zero rows
+    (exact: zero rows / columns are sliced back off).
     """
     engine, interpret = resolve_backend(backend)
     if engine == "hybrid":  # the gram product has no dense/word split
@@ -492,6 +716,16 @@ def gram(Sx: jax.Array, Sy: jax.Array, weights: jax.Array, *,
         raise ValueError(
             f"gram needs Sx (B_x, D), Sy (B_y, D), weights (D,); got "
             f"{Sx.shape}, {Sy.shape}, {weights.shape}")
+    mb = _mesh_batch()
+    if mb is not None:
+        mesh, names, size = mb
+        ring = _gram_ring(mesh, names, size, engine, interpret, block_words,
+                          bx_tile, by_tile)
+        Bx, By = Sx.shape[0], Sy.shape[0]
+        G = ring(_pad_rows(Sx, size), _pad_rows(Sy, size), weights)
+        if G.shape != (Bx, By):
+            G = G[:Bx, :By]
+        return shard_constraint(G, "batch", None)
     return _gram_vjp(engine, interpret, block_words, bx_tile,
                      by_tile)(Sx, Sy, weights)
 
@@ -508,6 +742,48 @@ def _mask_stream_out(out: jax.Array, M: int, stride: int,
         return out
     return out * stream_emit_mask(M, stride, lengths)[..., None].astype(
         out.dtype)
+
+
+def _signature_local(increments: jax.Array, lengths, *, depth: int,
+                     engine: str, interpret: bool, backward: str,
+                     batch_tile: int, split: int | None, time_chunks: int,
+                     stream: bool, stream_stride: int) -> jax.Array:
+    """Single-device truncated-signature dispatch — the body of
+    :func:`signature` after validation and mesh routing.  Under a mesh this
+    runs per shard inside :func:`_sharded_sig` (never consults the context
+    again, so shard_map bodies cannot recurse into the mesh branch)."""
+    if lengths is not None:
+        lengths = as_lengths(lengths, increments.shape[0])
+        increments = mask_increments(increments, lengths)
+    if stream:
+        if engine == "jax" or backward == "autodiff" \
+                or increments.shape[1] == 0:  # M=0: no emissions, any engine
+            out = signature_from_increments(
+                increments, depth, stream=True, stream_stride=stream_stride,
+                backward=backward, backend="jax")
+        else:
+            out = _pallas_sig_stream(depth, stream_stride, batch_tile, split,
+                                     interpret)(increments)
+        return _mask_stream_out(out, increments.shape[1], stream_stride,
+                                lengths)
+    if engine == "jax" or backward == "autodiff":
+        # autodiff has no Pallas rule: route to the jax engine entirely so
+        # the forward actually produces the residuals the scan AD consumes.
+        return signature_from_increments(increments, depth, backward=backward,
+                                         backend="jax")
+    if time_chunks > 1:
+        return _time_parallel_combine(
+            lambda x: _signature_local(x, None, depth=depth, engine=engine,
+                                       interpret=interpret, backward=backward,
+                                       batch_tile=batch_tile, split=split,
+                                       time_chunks=1, stream=False,
+                                       stream_stride=1),
+            increments, depth, time_chunks)
+    if backward == "checkpoint":
+        chunk = default_chunk(increments.shape[1])
+        return _pallas_sig_checkpoint(depth, chunk, batch_tile, split,
+                                      interpret)(increments)
+    return _pallas_sig_inverse(depth, batch_tile, split, interpret)(increments)
 
 
 def signature(increments: jax.Array, depth: int, *, backend: str = "auto",
@@ -528,6 +804,12 @@ def signature(increments: jax.Array, depth: int, *, backend: str = "auto",
     multiply zeroes cotangents past each true end); streamed outputs are
     additionally masked after each example's true-terminal slot
     (:func:`repro.core.signature.stream_emit_slots` gathers it).
+
+    Under an installed ``sharding_ctx(mesh)`` whose rules shard the "batch"
+    logical axis, the call is SPMD: the batch is split over the mesh with
+    ``shard_map`` and each shard runs this same cell (see the mesh note in
+    the module docstring).  Outside any context the result is bit-identical
+    to the single-device path.
     """
     engine, interpret = resolve_backend(backend)
     _check_backward(backward)
@@ -535,9 +817,6 @@ def signature(increments: jax.Array, depth: int, *, backend: str = "auto",
         raise ValueError(
             "backend='hybrid' only applies to projected word sets (the "
             "truncated signature IS the dense engine); use backend='jax'")
-    if lengths is not None:
-        lengths = as_lengths(lengths, increments.shape[0])
-        increments = mask_increments(increments, lengths)
     if stream:
         if stream_stride < 1:
             raise ValueError(
@@ -548,30 +827,61 @@ def signature(increments: jax.Array, depth: int, *, backend: str = "auto",
             raise NotImplementedError(
                 "stream=True is incompatible with time_chunks > 1: chunked "
                 "signatures only reconstruct the terminal state")
+    kw = dict(depth=depth, engine=engine, interpret=interpret,
+              backward=backward, batch_tile=batch_tile, split=split,
+              time_chunks=time_chunks, stream=stream,
+              stream_stride=stream_stride)
+    mb = _mesh_batch()
+    if mb is None:
+        return _signature_local(increments, lengths, **kw)
+    mesh, names, size = mb
+    if lengths is not None:
+        lengths = as_lengths(lengths, increments.shape[0])
+    fn = _sharded_sig(mesh, names, lengths is not None, depth, engine,
+                      interpret, backward, batch_tile, split, time_chunks,
+                      stream, stream_stride)
+    out = _apply_sharded(fn, size, increments, lengths)
+    if stream:
+        return shard_constraint(out, "batch", "path_time", "sig_words")
+    return shard_constraint(out, "batch", "sig_words")
+
+
+def _projected_local(increments: jax.Array, lengths, *, words: tuple, d: int,
+                     engine: str, interpret: bool, backward: str,
+                     batch_tile: int, max_rows: int, stream: bool,
+                     stream_stride: int) -> jax.Array:
+    """Single-device projected-signature dispatch — the body of
+    :func:`projected` after validation and mesh routing (``max_rows`` is
+    already resolved from any caller-supplied TiledPlan)."""
+    wplan = _plan_for_words(words, d)
+    if lengths is not None:
+        lengths = as_lengths(lengths, increments.shape[0])
+        increments = mask_increments(increments, lengths)
+    if engine == "hybrid":
+        if backward == "checkpoint":
+            # no chunk-boundary buffer in the hybrid engine: run on jax
+            return projected_signature_from_increments(
+                increments, wplan, backward=backward, backend="jax")
+        return _hybrid_projected(increments, wplan, backward)
+    if stream:
         if engine == "jax" or backward == "autodiff" \
                 or increments.shape[1] == 0:  # M=0: no emissions, any engine
-            out = signature_from_increments(
-                increments, depth, stream=True, stream_stride=stream_stride,
+            out = projected_signature_from_increments(
+                increments, wplan, stream=True, stream_stride=stream_stride,
                 backward=backward, backend="jax")
         else:
-            out = _pallas_sig_stream(depth, stream_stride, batch_tile, split,
-                                     interpret)(increments)
+            out = _pallas_proj_stream(wplan.words, wplan.d, stream_stride,
+                                      batch_tile, max_rows,
+                                      interpret)(increments)
         return _mask_stream_out(out, increments.shape[1], stream_stride,
                                 lengths)
-    if engine == "jax" or backward == "autodiff":
-        # autodiff has no Pallas rule: route to the jax engine entirely so
-        # the forward actually produces the residuals the scan AD consumes.
-        return signature_from_increments(increments, depth, backward=backward,
-                                         backend="jax")
-    if time_chunks > 1:
-        return signature_time_parallel(increments, depth, time_chunks,
-                                       backend=backend, backward=backward,
-                                       batch_tile=batch_tile, split=split)
-    if backward == "checkpoint":
-        chunk = default_chunk(increments.shape[1])
-        return _pallas_sig_checkpoint(depth, chunk, batch_tile, split,
-                                      interpret)(increments)
-    return _pallas_sig_inverse(depth, batch_tile, split, interpret)(increments)
+    if engine == "jax" or backward != "inverse":
+        # checkpoint needs chunk-boundary closure states the word kernel
+        # cannot emit; autodiff needs scan residuals — both run on jax.
+        return projected_signature_from_increments(
+            increments, wplan, backward=backward, backend="jax")
+    return _pallas_proj_inverse(wplan.words, wplan.d, batch_tile, max_rows,
+                                interpret)(increments)
 
 
 def projected(increments: jax.Array, plan, *, backend: str = "auto",
@@ -584,62 +894,48 @@ def projected(increments: jax.Array, plan, *, backend: str = "auto",
 
     ``stream=True`` -> (B, M_out, |I|) per-step projections.  ``lengths``
     (B,) makes the batch ragged, with the same zero-masked-increment
-    exactness guarantees as :func:`signature`.
+    exactness guarantees as :func:`signature`.  An installed
+    ``sharding_ctx(mesh)`` sharding the "batch" logical axis makes the call
+    SPMD exactly like :func:`signature`.
     """
     engine, interpret = resolve_backend(backend)
     _check_backward(backward)
     wplan, tplan = _normalise_plans(plan, increments.shape[-1])
-    if lengths is not None:
-        lengths = as_lengths(lengths, increments.shape[0])
-        increments = mask_increments(increments, lengths)
-    if engine == "hybrid":
-        if stream:
-            raise NotImplementedError(
-                "backend='hybrid' has no streamed forward; use "
-                "backend='jax' or a pallas backend for stream=True")
-        if backward == "checkpoint":
-            # no chunk-boundary buffer in the hybrid engine: run on jax
-            return projected_signature_from_increments(
-                increments, wplan, backward=backward, backend="jax")
-        return _hybrid_projected(increments, wplan, backward)
+    if engine == "hybrid" and stream:
+        raise NotImplementedError(
+            "backend='hybrid' has no streamed forward; use "
+            "backend='jax' or a pallas backend for stream=True")
     if stream:
         if stream_stride < 1:
             raise ValueError(
                 f"stream_stride must be >= 1, got {stream_stride}")
         if backward == "checkpoint":
             raise unsupported_stream_backward(backward)
-        if engine == "jax" or backward == "autodiff" \
-                or increments.shape[1] == 0:  # M=0: no emissions, any engine
-            out = projected_signature_from_increments(
-                increments, wplan, stream=True, stream_stride=stream_stride,
-                backward=backward, backend="jax")
-        else:
-            if tplan is not None:  # keep the caller's tile granularity
-                max_rows = max(p.closure_size for p in tplan.tiles)
-            out = _pallas_proj_stream(wplan.words, wplan.d, stream_stride,
-                                      batch_tile, max_rows,
-                                      interpret)(increments)
-        return _mask_stream_out(out, increments.shape[1], stream_stride,
-                                lengths)
-    if engine == "jax" or backward != "inverse":
-        # checkpoint needs chunk-boundary closure states the word kernel
-        # cannot emit; autodiff needs scan residuals — both run on jax.
-        return projected_signature_from_increments(
-            increments, wplan, backward=backward, backend="jax")
     if tplan is not None:  # keep the caller's tile granularity
         max_rows = max(p.closure_size for p in tplan.tiles)
-    return _pallas_proj_inverse(wplan.words, wplan.d, batch_tile, max_rows,
-                                interpret)(increments)
+    kw = dict(words=wplan.words, d=wplan.d, engine=engine,
+              interpret=interpret, backward=backward, batch_tile=batch_tile,
+              max_rows=max_rows, stream=stream, stream_stride=stream_stride)
+    mb = _mesh_batch()
+    if mb is None:
+        return _projected_local(increments, lengths, **kw)
+    mesh, names, size = mb
+    if lengths is not None:
+        lengths = as_lengths(lengths, increments.shape[0])
+    fn = _sharded_proj(mesh, names, lengths is not None, wplan.words,
+                       wplan.d, engine, interpret, backward, batch_tile,
+                       max_rows, stream, stream_stride)
+    out = _apply_sharded(fn, size, increments, lengths)
+    if stream:
+        return shard_constraint(out, "batch", "path_time", "sig_words")
+    return shard_constraint(out, "batch", "sig_words")
 
 
-def projected_forward_only(increments: jax.Array, plan, *,
-                           backend: str = "auto", batch_tile: int = 128,
-                           max_rows: int = 256, lengths=None) -> jax.Array:
-    """Inference-only projected signature: skips the closure readout (the
-    kernel gathers just the requested rows).  Not differentiable on the
-    pallas engines — use :func:`projected` for training."""
-    engine, interpret = resolve_backend(backend)
-    wplan, tplan = _normalise_plans(plan, increments.shape[-1])
+def _projected_fwd_local(increments: jax.Array, lengths, *, words: tuple,
+                         d: int, engine: str, interpret: bool,
+                         batch_tile: int, max_rows: int) -> jax.Array:
+    """Single-device body of :func:`projected_forward_only`."""
+    wplan = _plan_for_words(words, d)
     if lengths is not None:
         increments = mask_increments(
             increments, as_lengths(lengths, increments.shape[0]))
@@ -648,29 +944,49 @@ def projected_forward_only(increments: jax.Array, plan, *,
     if engine == "jax":
         return projected_signature_from_increments(increments, wplan,
                                                    backend="jax")
-    if tplan is None:
-        tplan = _tiled_for_words(wplan.words, wplan.d, max_rows)
+    tplan = _tiled_for_words(wplan.words, wplan.d, max_rows)
     return sig_words(increments, tplan, batch_tile=batch_tile,
                      interpret=interpret)
 
 
-def signature_time_parallel(increments: jax.Array, depth: int,
-                            time_chunks: int, *, backend: str = "auto",
-                            backward: str = "inverse", batch_tile: int = 128,
-                            split: int | None = None) -> jax.Array:
-    """Chunked-time signature: fold chunks into batch, tree-Chen-combine.
+def projected_forward_only(increments: jax.Array, plan, *,
+                           backend: str = "auto", batch_tile: int = 128,
+                           max_rows: int = 256, lengths=None) -> jax.Array:
+    """Inference-only projected signature: skips the closure readout (the
+    kernel gathers just the requested rows).  Not differentiable on the
+    pallas engines — use :func:`projected` for training.  Mesh-aware like
+    :func:`projected` (per-shard kernels under a batch-sharding context)."""
+    engine, interpret = resolve_backend(backend)
+    wplan, tplan = _normalise_plans(plan, increments.shape[-1])
+    if tplan is not None:  # keep the caller's tile granularity
+        max_rows = max(p.closure_size for p in tplan.tiles)
+    kw = dict(words=wplan.words, d=wplan.d, engine=engine,
+              interpret=interpret, batch_tile=batch_tile, max_rows=max_rows)
+    mb = _mesh_batch()
+    if mb is None:
+        return _projected_fwd_local(increments, lengths, **kw)
+    mesh, names, size = mb
+    if lengths is not None:
+        lengths = as_lengths(lengths, increments.shape[0])
+    fn = _sharded_proj_fwd(mesh, names, lengths is not None, wplan.words,
+                           wplan.d, engine, interpret, batch_tile, max_rows)
+    out = _apply_sharded(fn, size, increments, lengths)
+    return shard_constraint(out, "batch", "sig_words")
 
-    Differentiable end to end: the per-chunk signatures carry the dispatch
-    layer's custom VJPs and the combination tree is plain jnp algebra.
-    """
+
+def _time_parallel_combine(sig_flat_fn, increments: jax.Array, depth: int,
+                           time_chunks: int) -> jax.Array:
+    """Fold time chunks into the batch axis, compute chunk signatures with
+    ``sig_flat_fn`` ((B·C, Mc, d) -> (B·C, D_sig)), Chen-combine in a
+    log-depth tree.  Shared by :func:`signature_time_parallel` (public,
+    routed through the dispatch) and the mesh path's per-shard body."""
     B, M, d = increments.shape
     C = max(1, min(time_chunks, M))
     Mc = -(-M // C)
     pad = C * Mc - M
     x = jnp.pad(increments, ((0, 0), (0, pad), (0, 0)))  # zero incs = identity
     x = x.reshape(B, C, Mc, d).reshape(B * C, Mc, d)
-    flat = signature(x, depth, backend=backend, backward=backward,
-                     batch_tile=batch_tile, split=split, time_chunks=1)
+    flat = sig_flat_fn(x)
     parts = flat.reshape(B, C, -1)
     # log-depth Chen combination tree
     while parts.shape[1] > 1:
@@ -684,3 +1000,19 @@ def signature_time_parallel(increments: jax.Array, depth: int,
             merged = jnp.concatenate([merged, parts[:, -1:]], axis=1)
         parts = merged
     return parts[:, 0]
+
+
+def signature_time_parallel(increments: jax.Array, depth: int,
+                            time_chunks: int, *, backend: str = "auto",
+                            backward: str = "inverse", batch_tile: int = 128,
+                            split: int | None = None) -> jax.Array:
+    """Chunked-time signature: fold chunks into batch, tree-Chen-combine.
+
+    Differentiable end to end: the per-chunk signatures carry the dispatch
+    layer's custom VJPs and the combination tree is plain jnp algebra.
+    """
+    return _time_parallel_combine(
+        lambda x: signature(x, depth, backend=backend, backward=backward,
+                            batch_tile=batch_tile, split=split,
+                            time_chunks=1),
+        increments, depth, time_chunks)

@@ -15,5 +15,41 @@ def make_production_mesh(*, multi_pod: bool = False):
 
 
 def make_dev_mesh(data: int = 1, model: int = 1):
-    """Small mesh for CPU tests (uses however many devices exist)."""
+    """Small mesh for CPU tests (uses however many devices exist).
+
+    Validates the device count up front — ``jax.make_mesh`` with too few
+    devices otherwise surfaces as an opaque XLA reshape failure.
+    """
+    n = len(jax.devices())
+    if data < 1 or model < 1:
+        raise ValueError(f"mesh axes must be >= 1, got data={data}, "
+                         f"model={model}")
+    if data * model > n:
+        raise ValueError(
+            f"make_dev_mesh(data={data}, model={model}) needs "
+            f"{data * model} devices but only {n} are visible — launch with "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={data * model}"
+            f" (CPU) or shrink the mesh")
     return jax.make_mesh((data, model), ("data", "model"))
+
+
+def make_sig_mesh(batch: int | None = None):
+    """1-axis mesh for the signature stack: install it with
+    ``sharding_ctx(make_sig_mesh())`` and every entry point in
+    ``repro.kernels.ops`` shards the "batch" logical axis over it (the
+    default rules map "batch" onto the 'data' axis).
+
+    ``batch=None`` uses every visible device.
+    """
+    n = len(jax.devices())
+    if batch is None:
+        batch = n
+    if batch < 1:
+        raise ValueError(f"batch axis must be >= 1, got {batch}")
+    if batch > n:
+        raise ValueError(
+            f"make_sig_mesh(batch={batch}) needs {batch} devices but only "
+            f"{n} are visible — launch with "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={batch} (CPU)"
+            f" or shrink the axis")
+    return jax.make_mesh((batch,), ("data",))

@@ -24,9 +24,20 @@ The two factories bind the batcher to the serving engines of
 window features a :class:`SigStreamEngine` tracks online, and
 :meth:`scoring_service` rides a :class:`SigScoreEngine`'s cached reference
 signatures/Gram for retrieval scores or KRR predictions per request.
+
+Multi-device: give the batcher a mesh (``mesh=`` or build it inside an
+installed ``sharding_ctx``) and every flushed rung is placed across it —
+the batch rung rounds up to a multiple of the mesh's batch-shard count so
+each device owns the same number of rows, values/lengths are device_put
+batch-sharded, and the per-shape jitted computes trace under the mesh
+context (so the engine calls inside take the SPMD path of
+:mod:`repro.kernels.ops`).  :meth:`stats` then reports per-device occupancy
+(``devices`` / ``rows_per_device`` / ``occupancy``) next to the shape
+accounting.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from typing import Callable, Optional
 
@@ -34,6 +45,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.distributed.ctx import (current_mesh, logical_axis_size,
+                                   named_sharding, sharding_ctx)
 from repro.ragged import (RaggedPaths, assign_buckets, batch_rung,
                           bucket_ladder, pad_batch)
 
@@ -62,6 +75,8 @@ class DynamicBatcher:
     max_batch: int = 64               # top rung of the batch ladder
     ladder: Optional[np.ndarray] = None   # explicit rungs override
     jit_compute: bool = True          # one executable per (rung, batch) shape
+    mesh: Optional[object] = None     # jax Mesh: place rungs across devices
+    mesh_rules: Optional[dict] = None     # logical-axis rule overrides
 
     def __post_init__(self):
         if self.ladder is None:
@@ -70,6 +85,8 @@ class DynamicBatcher:
                                         growth=self.growth)
         self.ladder = np.asarray(self.ladder, np.int64)
         self.max_len = int(self.ladder[-1])
+        if self.mesh is None:  # adopt an installed context at build time
+            self.mesh = current_mesh()
         self._compute = jax.jit(self.compute) if self.jit_compute \
             else self.compute
         self._queue: list[_Request] = []
@@ -77,6 +94,37 @@ class DynamicBatcher:
         self.shapes_seen: set[tuple[int, int]] = set()
         self.padded_steps = 0         # Σ padded increments fed to the engine
         self.true_steps = 0           # Σ true increments served
+        self.padded_rows = 0          # Σ batch rows fed to the engine
+        self.true_rows = 0            # Σ real requests served
+
+    # -- mesh placement ----------------------------------------------------
+
+    def _mesh_scope(self):
+        """Context manager installing this batcher's mesh (a no-op stack
+        entry when the batcher is single-device)."""
+        if self.mesh is None:
+            return contextlib.nullcontext()
+        return sharding_ctx(self.mesh, self.mesh_rules)
+
+    def _batch_shards(self) -> int:
+        """Shards of the "batch" logical axis under this batcher's OWN mesh
+        (fixed at construction — never the ambient context, so rung rounding
+        and stats() accounting cannot drift with the call site)."""
+        if self.mesh is None:
+            return 1
+        with self._mesh_scope():
+            return logical_axis_size("batch")
+
+    def _place(self, rp: RaggedPaths) -> RaggedPaths:
+        """device_put a flushed rung across the mesh: values and lengths
+        batch-sharded, so each device owns B_pad / P requests."""
+        if self.mesh is None:
+            return rp
+        with self._mesh_scope():
+            shardings = RaggedPaths(
+                values=named_sharding("batch", "path_time", None),
+                lengths=named_sharding("batch"))
+        return jax.device_put(rp, shardings)
 
     # -- request side ------------------------------------------------------
 
@@ -109,6 +157,7 @@ class DynamicBatcher:
         out: dict[int, jax.Array] = {}
         if not queue:
             return out
+        shards = self._batch_shards()
         lengths = np.asarray([r.length for r in queue], np.int64)
         which = assign_buckets(lengths, self.ladder)
         for k in np.unique(which):
@@ -120,17 +169,25 @@ class DynamicBatcher:
                 rp = RaggedPaths.from_list([r.path for r in part],
                                            pad_to=rung)
                 B_pad = batch_rung(len(part), self.max_batch)
-                rp = pad_batch(rp, B_pad)
+                # round the rung up to a multiple of the mesh's batch shards
+                # so every device owns the same number of rows
+                B_pad = -(-B_pad // shards) * shards
+                rp = self._place(pad_batch(rp, B_pad))
                 self.shapes_seen.add((rung, B_pad))
                 self.padded_steps += rung * B_pad
                 self.true_steps += int(sum(r.length for r in part))
-                res = self._compute(rp)
+                self.padded_rows += B_pad
+                self.true_rows += len(part)
+                with self._mesh_scope():
+                    res = self._compute(rp)
                 for row, req in enumerate(part):
                     out[req.ticket] = res[row]
         return out
 
     def stats(self) -> dict:
-        """Shape-count + padding-waste accounting for the traffic so far."""
+        """Shape-count + padding-waste accounting for the traffic so far,
+        plus per-device occupancy when the batcher places across a mesh."""
+        shards = self._batch_shards()
         return {
             "compiled_shapes": len(self.shapes_seen),
             "shapes": sorted(self.shapes_seen),
@@ -139,6 +196,10 @@ class DynamicBatcher:
             "true_steps": self.true_steps,
             "padding_overhead": (self.padded_steps / self.true_steps
                                  if self.true_steps else 0.0),
+            "devices": shards,
+            "rows_per_device": self.padded_rows // shards,
+            "occupancy": (self.true_rows / self.padded_rows
+                          if self.padded_rows else 0.0),
         }
 
     # -- engine factories --------------------------------------------------

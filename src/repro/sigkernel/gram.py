@@ -14,6 +14,14 @@ backend), and routes the Gram product either through the naive oracle
 ``S_x @ diag(ω) @ S_yᵀ`` or through the tiled word-blocked route
 (:func:`repro.kernels.ops.gram`) that never materialises the
 (B_x, B_y, D_sig) intermediate.
+
+Multi-device: under an installed ``sharding_ctx(mesh)`` the signature legs
+batch-shard over the mesh and the tiled route becomes the cross-device
+``ppermute`` ring of ``repro.kernels.ops`` — (B_x/P, B_y/P) tiles,
+O(B·D_sig) communication, never a replicated Gram-sized intermediate.
+``sig_mmd``, ``krr`` and the feature maps ride it unchanged (they all go
+through :func:`gram_from_signatures`); ``route="oracle"`` stays the naive
+single-device reference.
 """
 from __future__ import annotations
 

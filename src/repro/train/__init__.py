@@ -1,2 +1,2 @@
 from .trainer import TrainLoopConfig, make_sig_mmd_loss, make_train_step, \
-    make_eval_step, train_loop
+    make_eval_step, place_batch, replicate_tree, train_loop

@@ -1,6 +1,18 @@
 """Training step + loop: mixed precision, microbatch accumulation, remat,
 gradient clipping/compression hooks, checkpoint/restart, straggler-aware
-step timing."""
+step timing.
+
+Data parallelism: run :func:`train_loop` inside ``sharding_ctx(mesh)``
+(:mod:`repro.distributed.ctx`) and it goes SPMD — parameters and optimizer
+state are replicated over the mesh, every batch is placed with
+:func:`repro.distributed.sharding.batch_specs` (the "batch" logical axis
+split over the mesh's data axes), and the gradient mean over the axis is
+XLA's all-reduce (the loss means over the global batch, so GSPMD inserts
+exactly one psum per step).  The signature heads / sig-MMD loss inside the
+step ride the same context through the engine dispatch's ``shard_map`` path
+(:mod:`repro.kernels.ops`), so hidden-path signatures are computed on the
+shard that owns each example.  Outside any context nothing changes.
+"""
 from __future__ import annotations
 
 import dataclasses
@@ -11,6 +23,7 @@ import jax
 import jax.numpy as jnp
 
 import repro.models as M
+from repro.distributed.ctx import current_mesh, current_rules
 from repro.models.config import ModelConfig
 from repro.optim import Optimizer, global_norm
 
@@ -106,6 +119,26 @@ def make_sig_mmd_loss(cfg: ModelConfig):
         return loss, {"loss": loss, "sig_mmd": mmd, "aux": aux}
 
     return loss_fn
+
+
+def replicate_tree(tree, mesh):
+    """Place every leaf replicated over the mesh (params / optimizer state
+    in data-parallel training — ZeRO sharding is the launcher's job)."""
+    from jax.sharding import NamedSharding, PartitionSpec
+    rep = NamedSharding(mesh, PartitionSpec())
+    return jax.device_put(tree, jax.tree.map(lambda _: rep, tree))
+
+
+def place_batch(batch, mesh=None, rules=None):
+    """Shard a batch over the mesh's data axes via
+    :func:`repro.distributed.sharding.batch_specs` (no-op without a mesh).
+    Defaults come from the installed sharding context."""
+    mesh = current_mesh() if mesh is None else mesh
+    if mesh is None:
+        return batch
+    from repro.distributed.sharding import batch_specs
+    rules = current_rules() if rules is None else rules
+    return jax.device_put(batch, batch_specs(batch, mesh, rules))
 
 
 def _resolve_loss(cfg: ModelConfig, loss: str):
@@ -207,11 +240,17 @@ def train_loop(cfg: ModelConfig, params, opt: Optimizer, data_iter,
     if checkpointer is not None and start_step:
         params, opt_state, _ = checkpointer.restore(params, opt_state,
                                                     start_step)
+    mesh = current_mesh()          # data-parallel when a context is installed
+    if mesh is not None:
+        params = replicate_tree(params, mesh)
+        opt_state = replicate_tree(opt_state, mesh)
     history = []
     try:
         for step in range(start_step, loop.steps):
             t0 = time.perf_counter()
             batch = next(data_iter)
+            if mesh is not None:
+                batch = place_batch(batch, mesh)
             params, opt_state, metrics = step_fn(params, opt_state, batch)
             jax.block_until_ready(metrics["loss"])   # honest step timing
             dt = time.perf_counter() - t0
