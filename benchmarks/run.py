@@ -14,7 +14,7 @@ import argparse
 import time
 
 SUITES = ("table1", "table2", "table3", "fig3", "proj", "gram", "ragged",
-          "shard")
+          "sessions", "shard")
 
 
 def main(argv=None) -> None:
@@ -27,12 +27,13 @@ def main(argv=None) -> None:
     only = [s.strip() for s in args.only.split(",") if s.strip()] or SUITES
 
     from . import fig3_windows, gram_scaling, proj_sparse, \
-        ragged_throughput, shard_scaling, table1_runtime, table2_memory, \
-        table3_logsig
+        ragged_throughput, session_throughput, shard_scaling, \
+        table1_runtime, table2_memory, table3_logsig
     mods = {"table1": table1_runtime, "table2": table2_memory,
             "table3": table3_logsig, "fig3": fig3_windows,
             "proj": proj_sparse, "gram": gram_scaling,
-            "ragged": ragged_throughput, "shard": shard_scaling}
+            "ragged": ragged_throughput, "sessions": session_throughput,
+            "shard": shard_scaling}
     t0 = time.time()
     for name in only:
         mods[name].run(quick=not args.full)

@@ -1,0 +1,204 @@
+"""Multi-tenant session serving throughput: pooled SessionStore vs
+one-SignatureStream-per-session.
+
+The serving question the session subsystem answers: N live tenants (1e4 →
+1e6) each hold a running window signature, and every ingest round a bursty,
+heavy-tailed subset of them ticks (``repro.data.SessionTickStream``
+traffic).  Two physical plans compute the SAME per-session signatures:
+
+- ``per_object`` — the pre-pool design: a dict of per-session
+  :class:`repro.core.stream.SignatureStream` carries (batch=1), one
+  dispatch call per ticking session per round.  Python object count and
+  dispatch count scale with the *ticking set*; device utilisation is
+  batch=1.
+- ``pooled``     — :class:`repro.serve.SessionStore`: every tenant is a row
+  of one struct-of-arrays pool; a round is queued with ``ingest_many`` and
+  delivered by ``flush()`` as a handful of tick-rung × row-rung bucketed
+  gather → extend → scatter calls, with compiled shapes bounded by
+  (tick rungs × row rungs × pool sizes) regardless of traffic.
+
+Per plan and session count this bench reports cold/warm wall-clock, warm
+updates/sec, p99 ingest staleness (pooled), compiled-shape counts, and an
+explicit ``comparison`` block with the acceptance gate: at >= 1e5 sessions
+the pooled plan must clear **5x** per-object throughput with a bounded
+compiled-shape count.  Results land in ``BENCH_sessions.json``.
+
+Wall-clock here is CPU wall-clock (see benchmarks.common); the pooled win
+is a dispatch-count and batching argument, which is exactly what survives
+the change of hardware.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro.core.stream import signature_stream_init
+from repro.data import session_tick_stream
+from repro.serve import SessionStore
+from .common import header, row
+
+BACKEND = os.environ.get("PATHSIG_BACKEND", "jax")
+JSON_PATH = os.environ.get("PATHSIG_BENCH_JSON", "BENCH_sessions.json")
+
+# mean of the traffic model's Pareto(1.2)+1 activity multiplier, used to
+# aim the expected ticking-set size at k_per_round
+_RATE_MEAN = 6.0
+
+
+def make_rounds(seed: int, n_sessions: int, d: int, n_rounds: int,
+                k_per_round: int, max_ticks: int):
+    """Pre-generated ingest rounds from the shared traffic model (workload
+    generation is excluded from the timed region)."""
+    stream = session_tick_stream(
+        n_sessions, d, seed=seed, max_ticks=max_ticks,
+        tick_prob=min(1.0, k_per_round / (_RATE_MEAN * n_sessions)))
+    rounds = []
+    for _ in range(n_rounds):
+        r = next(stream)
+        rounds.append((r["sids"], r["counts"], r["ticks"]))
+    return rounds
+
+
+def run_pooled(d, depth, n_sessions, rounds):
+    store = SessionStore(d, depth, initial_sessions=n_sessions,
+                         backend=BACKEND)
+
+    def epoch():
+        for sids, counts, ticks in rounds:
+            store.ingest_many(sids, counts, ticks, auto_create=True)
+            store.flush()
+        jax.block_until_ready(store.pool.sig)
+
+    t0 = time.perf_counter()
+    epoch()
+    cold = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    epoch()
+    warm = time.perf_counter() - t0
+    return store, cold, warm
+
+
+def run_per_object(d, depth, rounds):
+    streams = {}
+
+    def epoch():
+        out = []
+        for sids, counts, ticks in rounds:
+            bounds = np.cumsum(counts)[:-1]
+            for sid, chunk in zip(sids, np.split(ticks, bounds)):
+                st = streams.get(sid)
+                if st is None:
+                    st = signature_stream_init(1, d, depth)
+                streams[sid] = st.extend(chunk[None], backend=BACKEND)
+            out.append(streams[sids[-1]].sig if sids else None)
+        jax.block_until_ready([x for x in out if x is not None])
+
+    t0 = time.perf_counter()
+    epoch()
+    cold = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    epoch()
+    warm = time.perf_counter() - t0
+    return streams, cold, warm
+
+
+def bench(seed, n_sessions, d, depth, n_rounds, k_per_round, max_ticks,
+          check_per_object=True):
+    rounds = make_rounds(seed, n_sessions, d, n_rounds, k_per_round,
+                         max_ticks)
+    ticks_per_epoch = int(sum(int(c.sum()) for _, c, _ in rounds))
+    touched = len({s for sids, _, _ in rounds for s in sids})
+    tag = (f"n={n_sessions};d={d};N={depth};rounds={n_rounds};"
+           f"backend={BACKEND}")
+    row("sessions/workload", f"{ticks_per_epoch}",
+        "ticks", f"{tag};touched={touched}")
+
+    store, p_cold, p_warm = run_pooled(d, depth, n_sessions, rounds)
+    stats = store.stats()
+    rec = {"n_sessions": n_sessions, "ticks_per_epoch": ticks_per_epoch,
+           "touched_sessions": touched,
+           "pooled": {"cold_s": p_cold, "warm_s": p_warm,
+                      "updates_per_s_warm": ticks_per_epoch / p_warm,
+                      "p99_staleness_s": stats["p99_staleness_s"],
+                      "p50_staleness_s": stats["p50_staleness_s"],
+                      "compiled_shapes": stats["compiled_shapes"],
+                      "flush_shapes": [list(s) for s in
+                                       stats["flush_shapes"]],
+                      "pool_size": stats["pool_size"],
+                      "occupancy": stats["occupancy"]}}
+    row("sessions/pooled_warm", f"{p_warm*1e3:.1f}", "ms",
+        f"{tag};shapes={stats['compiled_shapes']}")
+    row("sessions/pooled_updates_per_s",
+        f"{ticks_per_epoch / p_warm:.0f}", "1/s", tag)
+    row("sessions/pooled_p99_staleness", f"{stats['p99_staleness_s']*1e3:.2f}",
+        "ms", tag)
+
+    # the compiled-shape bound the pool design guarantees: tick rungs x
+    # row rungs x pool sizes (plus one admission scatter per pool size)
+    n_tick_rungs = int(np.log2(store.max_ticks)) + 1
+    n_row_rungs = int(np.log2(store.max_rows)) + 1
+    shape_bound = n_tick_rungs * n_row_rungs * len(stats["pool_sizes"])
+    rec["pooled"]["compiled_shape_bound"] = shape_bound
+    rec["pooled"]["shapes_bounded"] = \
+        stats["compiled_shapes"] <= shape_bound
+
+    if check_per_object:
+        streams, o_cold, o_warm = run_per_object(d, depth, rounds)
+        rec["per_object"] = {"cold_s": o_cold, "warm_s": o_warm,
+                             "updates_per_s_warm": ticks_per_epoch / o_warm,
+                             "live_objects": len(streams)}
+        row("sessions/per_object_warm", f"{o_warm*1e3:.1f}", "ms", tag)
+        # exactness: both plans saw every round twice -> identical state
+        worst = 0.0
+        for sid in list(streams)[:8]:
+            got = np.asarray(store.features(sid))
+            want = np.asarray(streams[sid].sig[0])
+            worst = max(worst, float(np.max(np.abs(got - want))))
+        rec["max_abs_err_pooled_vs_per_object"] = worst
+        row("sessions/pooled_err", f"{worst:.2e}", "", tag)
+        speedup = o_warm / p_warm
+        rec["pooled_vs_per_object_speedup_warm"] = speedup
+        row("sessions/pooled_vs_per_object_speedup", f"{speedup:.2f}", "x",
+            tag)
+    return rec
+
+
+def run(quick: bool = True) -> None:
+    header("sessions: pooled multi-tenant serving throughput (repro.serve)")
+    sweep = [10_000, 100_000] if quick else [10_000, 100_000, 1_000_000]
+    cfg = dict(seed=0, d=3, depth=3, n_rounds=2 if quick else 4,
+               k_per_round=256 if quick else 512, max_ticks=32)
+    points = []
+    for n in sweep:
+        points.append(bench(n_sessions=n, **cfg))
+
+    gate_points = [p for p in points if p["n_sessions"] >= 100_000
+                   and "per_object" in p]
+    comparison = {
+        "speedup_at_1e5_plus": [p["pooled_vs_per_object_speedup_warm"]
+                                for p in gate_points],
+        "pooled_beats_per_object_5x": all(
+            p["pooled_vs_per_object_speedup_warm"] >= 5.0
+            for p in gate_points),
+        "shapes_bounded": all(p["pooled"]["shapes_bounded"]
+                              for p in points),
+    }
+    out = {"benchmark": "session_throughput", "backend": BACKEND,
+           "quick": quick, "points": points, "comparison": comparison}
+    with open(JSON_PATH, "w") as f:
+        json.dump(out, f, indent=2)
+    row("sessions/json", JSON_PATH, "path", "")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI sizes (the default; kept explicit for CI logs)")
+    ap.add_argument("--full", action="store_true", help="paper-scale sweeps")
+    args = ap.parse_args()
+    run(quick=not args.full)

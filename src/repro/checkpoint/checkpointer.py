@@ -57,10 +57,15 @@ class Checkpointer:
         tree = {"params": params, "opt_state": opt_state}
         leaves, treedef = _flatten(tree)
         host = [np.asarray(jax.device_get(x)) for x in leaves]
+        try:
+            # informational only (restore flattens against params_like);
+            # proto serialization rejects custom pytree nodes
+            treedef_hex = treedef.serialize_using_proto().hex()
+        except (AttributeError, ValueError):
+            treedef_hex = None
         manifest = {
             "step": step,
-            "treedef": jax.tree_util.tree_structure(tree).serialize_using_proto().hex()
-            if hasattr(treedef, "serialize_using_proto") else None,
+            "treedef": treedef_hex,
             "n_leaves": len(host),
             "shapes": [list(x.shape) for x in host],
             "dtypes": [str(x.dtype) for x in host],
@@ -101,6 +106,21 @@ class Checkpointer:
                           ignore_errors=True)
 
     # --------------------------------------------------------------- restore
+    def peek_extra(self, step: int | None = None) -> dict:
+        """The manifest's ``extra`` dict without touching the arrays.
+
+        Restoring a stateful subsystem (e.g. a session pool) is a two-phase
+        read: the extra block carries the host-side metadata needed to build
+        the ``params_like`` template whose shapes :meth:`restore` validates.
+        """
+        self.wait()
+        step = step if step is not None else latest_step(self.dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {self.dir}")
+        path = os.path.join(self.dir, f"step_{step}")
+        with open(os.path.join(path, "manifest.json")) as f:
+            return json.load(f).get("extra", {})
+
     def restore(self, params_like, opt_state_like, step: int | None = None,
                 shardings=None):
         """Restore into the given tree structure; arrays are re-laid-out

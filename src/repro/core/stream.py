@@ -1,31 +1,49 @@
-"""Online signature state: the ``SignatureStream`` carry.
+"""Online signature state: the pooled ``StreamCarry`` core and the
+``SignatureStream`` view.
 
 The streamed kernels answer "all prefix signatures of a path I already have";
 this module answers the *online* question: path steps arrive chunk by chunk
 (serving, sensors, tick data) and per-window signature features must stay
-current without ever recomputing from scratch.  The carry is
+current without ever recomputing from scratch.
 
-- ``sig``    — (B, D_sig) flat signature of every increment in the current
-               window, updated by Chen's identity  S' = S ⊗ S(chunk)  (one
-               dispatch call per chunk, any backend);
-- ``ring``   — (B, R, d) ring buffer holding exactly the window's increments,
-               so the *left* end of the window can move too: dropping the
-               oldest increment is the exact group operation
-               S' = exp(-ΔX_oldest) ⊗ S  (Lemma 4.5 / Prop. 4.6 applied from
-               the left — exact only because ΔX_oldest IS the leftmost
-               increment of ``sig``, which the ring invariant guarantees);
-- ``length`` / ``end`` — window length and ring write head.  These are
-  *static* host ints: chunk sizes and drop counts fix them at trace time, so
-  occupancy violations raise immediately instead of silently corrupting the
-  window (a ring overwrite of an increment still covered by ``sig`` would
-  make every later drop inexact).
+Two layers:
 
-All array operations are functional (a new ``SignatureStream`` is returned),
-jit- and grad-compatible: the carry is a registered pytree with static
-(d, depth, length, end) metadata.  ``extend(..., return_stream=True)``
-additionally emits the per-step features S_{window_start, t} for every new
-step — the carried prefix Chen-combined with the *streamed* chunk signature
-from the engine dispatch, so the hot loop stays on the configured backend.
+1. **Pooled functional core** — :class:`StreamCarry` is a struct-of-arrays
+   carry for N independent streams sharing one device-resident pool:
+
+   - ``sig``    — (N, D_sig) flat signature of every increment in each row's
+                  current window, updated by Chen's identity S' = S ⊗ S(chunk);
+   - ``ring``   — (N, R, d) ring buffers holding exactly each window's
+                  increments, so the *left* end can move too: dropping the
+                  oldest increment is the exact group operation
+                  S' = exp(-ΔX_oldest) ⊗ S (Lemma 4.5 / Prop. 4.6 applied from
+                  the left — exact only because ΔX_oldest IS the leftmost
+                  increment of ``sig``, the ring invariant);
+   - ``length`` / ``end`` — per-row occupancy and ring write head, *traced*
+     int32 lanes (rows advance independently);
+   - ``valid``  — per-row liveness mask: dead lanes pass through every
+     operation bit-identically, which is what lets a serving pool keep free
+     slots resident on device instead of reallocating.
+
+   :func:`stream_extend` / :func:`stream_rolling_drop` take per-row
+   ``counts`` so one compiled call advances any subset of rows by any
+   (bounded) number of ticks — the primitive `repro.serve.SessionStore`
+   builds continuous-batching ingest on.  Because these lanes are traced,
+   occupancy violations cannot raise here; pool owners keep host mirrors and
+   raise *before* dispatch (``SessionStore`` does).
+
+2. **``SignatureStream``** — the original per-object carry, kept as a thin
+   view over the same shared update math with *static* host-int
+   length/end: chunk sizes and drop counts fix them at trace time, so
+   occupancy violations raise immediately instead of silently corrupting the
+   window.  Every existing call site is untouched.
+
+All array operations are functional (a new carry is returned), jit- and
+grad-compatible: both carries are registered pytrees.  ``extend(...,
+return_stream=True)`` additionally emits the per-step features
+S_{window_start, t} for every new step — the carried prefix Chen-combined
+with the *streamed* chunk signature from the engine dispatch, so the hot
+loop stays on the configured backend.
 """
 from __future__ import annotations
 
@@ -38,6 +56,245 @@ from . import tensor_ops as tops
 from .signature import signature_from_increments
 from .words import sig_dim
 
+
+# ---------------------------------------------------------------------------
+# shared update math (the pure functional core both carries ride)
+# ---------------------------------------------------------------------------
+
+def _combine_flat(prefix_flat: jax.Array, chunk_flat: jax.Array, d: int,
+                  depth: int) -> jax.Array:
+    """Chen combine with broadcasting: prefix (B, D) ⊗ chunk (B, T, D)."""
+    a = [jnp.broadcast_to(lv[:, None], (*chunk_flat.shape[:2], lv.shape[-1]))
+         for lv in tops.flat_to_levels(prefix_flat, d, depth)]
+    b = tops.flat_to_levels(chunk_flat, d, depth)
+    return tops.levels_to_flat(tops.chen_mul(a, b))
+
+
+def extend_sig(sig: jax.Array, increments: jax.Array, d: int, depth: int, *,
+               backend: str = "jax", backward: str = "inverse",
+               return_stream: bool = False, stream_stride: int = 1):
+    """S ← S ⊗ S(chunk) for a (B, m, d) chunk against a (B, D_sig) carry.
+
+    One dispatch call on the configured backend; returns ``(new_sig, feats)``
+    where feats is the (B, m_out, D_sig) per-step features when
+    ``return_stream`` (None otherwise).  A zero increment is the identity
+    Chen update, so rows whose chunk is all-zero come back unchanged (up to
+    exact +0.0 adds) — the algebraic fact pooled ingest relies on.
+    """
+    if return_stream:
+        chunk = signature_from_increments(
+            increments, depth, stream=True, stream_stride=stream_stride,
+            backward=backward, backend=backend)        # (B, m_out, D)
+        feats = _combine_flat(sig, chunk, d, depth)
+        return feats[:, -1], feats
+    chunk = signature_from_increments(increments, depth, backward=backward,
+                                      backend=backend)
+    return _combine_flat(sig, chunk[:, None], d, depth)[:, 0], None
+
+
+def drop_sig(sig: jax.Array, dropped: jax.Array, d: int,
+             depth: int) -> jax.Array:
+    """S ← exp(-ΔX_k) ⊗ ... ⊗ exp(-ΔX_1) ⊗ S for (B, n, d) oldest-first
+    dropped increments (the exact left-inverse window update).  All-zero
+    rows of ``dropped`` are exact identity steps."""
+    def step(levels, dx):
+        e = tops.tensor_exp(-dx, depth)
+        return tops.chen_mul(e, levels), None
+
+    levels = tops.flat_to_levels(sig, d, depth)
+    levels, _ = jax.lax.scan(step, levels, jnp.moveaxis(dropped, 1, 0))
+    return tops.levels_to_flat(levels)
+
+
+# ---------------------------------------------------------------------------
+# pooled struct-of-arrays carry
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class StreamCarry:
+    """Struct-of-arrays carry for N pooled streams (see module docstring).
+
+    Build with :func:`stream_init`; update with :func:`stream_extend` /
+    :func:`stream_rolling_drop`; move rows with :func:`stream_take` /
+    :func:`stream_scatter`.  ``length``/``end``/``valid`` are *data* lanes —
+    rows advance independently inside one compiled call.
+    """
+    sig: jax.Array      # (N, D_sig) per-row window signature
+    ring: jax.Array     # (N, R, d) per-row window increments (R may be 0)
+    length: jax.Array   # (N,) int32 increments covered by ``sig``
+    end: jax.Array      # (N,) int32 ring write position
+    valid: jax.Array    # (N,) bool live-lane mask
+    d: int              # static: path dimension
+    depth: int          # static: truncation depth
+
+    @property
+    def capacity(self) -> int:
+        return self.ring.shape[1]
+
+    @property
+    def size(self) -> int:
+        """Pool row count N."""
+        return self.sig.shape[0]
+
+
+jax.tree_util.register_dataclass(
+    StreamCarry, data_fields=("sig", "ring", "length", "end", "valid"),
+    meta_fields=("d", "depth"))
+
+
+def stream_init(n: int, d: int, depth: int, *, capacity: int = 0,
+                dtype=jnp.float32, valid: bool = False) -> StreamCarry:
+    """Fresh pool of ``n`` rows: identity signatures, empty rings.
+
+    ``capacity`` is the per-row ring size R: with a ring, a row may never
+    hold more than R increments (pool owners enforce this on the host — see
+    module docstring), and up to ``length`` oldest increments can be dropped
+    at any time.  ``capacity=0`` disables rings: expanding-window only.
+    ``valid=True`` starts every lane live (the engines' fixed-slot case).
+    """
+    if depth < 1:
+        raise ValueError("depth must be >= 1")
+    if capacity < 0:
+        raise ValueError("capacity must be >= 0")
+    return StreamCarry(
+        sig=jnp.zeros((n, sig_dim(d, depth)), dtype),
+        ring=jnp.zeros((n, capacity, d), dtype),
+        length=jnp.zeros((n,), jnp.int32),
+        end=jnp.zeros((n,), jnp.int32),
+        valid=jnp.full((n,), bool(valid)),
+        d=d, depth=depth)
+
+
+def stream_take(carry: StreamCarry, slots) -> StreamCarry:
+    """Gather pool rows into a (len(slots), ...) sub-carry.  Out-of-range
+    slots clamp (jnp.take's jit behaviour) — pair them with ``counts == 0``
+    so the clamped row passes through unchanged and its write-back is
+    dropped by :func:`stream_scatter`."""
+    slots = jnp.asarray(slots, jnp.int32)
+    return dataclasses.replace(
+        carry,
+        sig=jnp.take(carry.sig, slots, axis=0),
+        ring=jnp.take(carry.ring, slots, axis=0),
+        length=jnp.take(carry.length, slots, axis=0),
+        end=jnp.take(carry.end, slots, axis=0),
+        valid=jnp.take(carry.valid, slots, axis=0))
+
+
+def stream_scatter(carry: StreamCarry, slots, sub: StreamCarry) -> StreamCarry:
+    """Write a sub-carry's rows back into the pool.  Out-of-range slots are
+    dropped (``mode="drop"``), so padding rows can point past the pool."""
+    slots = jnp.asarray(slots, jnp.int32)
+    return dataclasses.replace(
+        carry,
+        sig=carry.sig.at[slots].set(sub.sig, mode="drop"),
+        ring=carry.ring.at[slots].set(sub.ring, mode="drop"),
+        length=carry.length.at[slots].set(sub.length, mode="drop"),
+        end=carry.end.at[slots].set(sub.end, mode="drop"),
+        valid=carry.valid.at[slots].set(sub.valid, mode="drop"))
+
+
+def stream_extend(carry: StreamCarry, increments: jax.Array, *,
+                  counts=None, backend: str = "jax",
+                  backward: str = "inverse", return_stream: bool = False,
+                  stream_stride: int = 1):
+    """Append up to m new increments (N, m, d) to every row of the pool.
+
+    ``counts`` is a per-row (N,) int32 tick count <= m: row i consumes its
+    first ``counts[i]`` increments (the rest are masked to zero = identity),
+    advancing ``length``/``end``/ring by exactly ``counts[i]``.  ``None``
+    means the full m for every valid row.  Rows with count 0 (and invalid
+    lanes) come back bit-identical — that is what makes zero-padded
+    continuous-batching rungs exact.
+
+    Occupancy (``length + counts <= capacity`` when a ring exists, and
+    ``counts <= m``) is the CALLER's contract — these are traced lanes, so
+    violations cannot raise here (see module docstring).
+
+    ``return_stream=True`` additionally returns the (N, m_out, D_sig)
+    per-step features; it requires uniform full-chunk counts
+    (``counts=None``) because emitted steps past a row's true count would
+    repeat the prefix.
+    """
+    N, m, d = increments.shape
+    if d != carry.d:
+        raise ValueError(f"increment dim {d} != pool dim {carry.d}")
+    if N != carry.size:
+        raise ValueError(f"batch {N} != pool size {carry.size}")
+    if counts is not None and return_stream:
+        raise ValueError("return_stream=True needs uniform chunks "
+                         "(counts=None)")
+    increments = increments.astype(carry.sig.dtype)
+    if counts is None:
+        counts = jnp.where(carry.valid, m, 0).astype(jnp.int32)
+    else:
+        counts = jnp.asarray(counts, jnp.int32) * carry.valid
+    mask = jnp.arange(m)[None, :] < counts[:, None]            # (N, m)
+    inc = jnp.where(mask[..., None], increments, 0.0)
+    new_sig, feats = extend_sig(carry.sig, inc, carry.d, carry.depth,
+                                backend=backend, backward=backward,
+                                return_stream=return_stream,
+                                stream_stride=stream_stride)
+    active = counts > 0
+    sig = jnp.where(active[:, None], new_sig, carry.sig)
+    R = carry.capacity
+    if R:
+        rows = jnp.arange(N)[:, None]
+        idx = (carry.end[:, None] + jnp.arange(m)) % R          # (N, m)
+        cur = carry.ring[rows, idx]
+        ring = carry.ring.at[rows, idx].set(
+            jnp.where(mask[..., None], inc, cur))
+        end = (carry.end + counts) % R
+    else:
+        ring, end = carry.ring, carry.end
+    new = dataclasses.replace(carry, sig=sig, ring=ring,
+                              length=carry.length + counts, end=end)
+    return (new, feats) if return_stream else new
+
+
+def stream_rolling_drop(carry: StreamCarry, counts, *,
+                        max_drop: int | None = None) -> StreamCarry:
+    """Drop each row's ``counts[i]`` oldest increments: for each, the exact
+    left-inverse update S ← exp(-ΔX_oldest) ⊗ S.
+
+    ``max_drop`` is the static scan bound (>= max(counts)); it defaults to
+    ``counts`` itself when that is a host int.  Rows with count 0 pass
+    through bit-identically; a row dropped to length 0 resets to the exact
+    identity (no accumulated float error).  ``counts <= length`` is the
+    caller's contract (traced lanes — see module docstring).
+    """
+    if carry.capacity == 0:
+        raise ValueError("rolling_drop needs ring buffers: init the pool "
+                         "with capacity > 0")
+    if max_drop is None:
+        try:
+            max_drop = int(counts)      # host ints / np scalars / 0-d arrays
+        except TypeError:               # per-row or traced counts
+            raise ValueError("stream_rolling_drop with per-row counts needs "
+                             "a static max_drop= bound") from None
+    max_drop = int(max_drop)
+    if max_drop == 0:
+        return carry
+    N, R = carry.size, carry.capacity
+    counts = (jnp.broadcast_to(jnp.asarray(counts, jnp.int32), (N,))
+              * carry.valid)
+    start = (carry.end - carry.length) % R                  # oldest slot
+    rows = jnp.arange(N)[:, None]
+    idx = (start[:, None] + jnp.arange(max_drop)) % R        # (N, max_drop)
+    dropped = carry.ring[rows, idx]                          # oldest-first
+    dropped = jnp.where(
+        (jnp.arange(max_drop)[None, :] < counts[:, None])[..., None],
+        dropped, 0.0)                                        # identity steps
+    new_sig = drop_sig(carry.sig, dropped, carry.d, carry.depth)
+    new_len = carry.length - counts
+    # a fully-drained window is exactly the identity — no float drift
+    new_sig = jnp.where((new_len == 0)[:, None], 0.0, new_sig)
+    sig = jnp.where((counts > 0)[:, None], new_sig, carry.sig)
+    return dataclasses.replace(carry, sig=sig, length=new_len)
+
+
+# ---------------------------------------------------------------------------
+# SignatureStream: the per-object static-occupancy view
+# ---------------------------------------------------------------------------
 
 @dataclasses.dataclass(frozen=True)
 class SignatureStream:
@@ -93,15 +350,6 @@ def signature_stream_init(batch: int, d: int, depth: int, *,
         length=0, end=0, d=d, depth=depth)
 
 
-def _combine_flat(prefix_flat: jax.Array, chunk_flat: jax.Array, d: int,
-                  depth: int) -> jax.Array:
-    """Chen combine with broadcasting: prefix (B, D) ⊗ chunk (B, T, D)."""
-    a = [jnp.broadcast_to(lv[:, None], (*chunk_flat.shape[:2], lv.shape[-1]))
-         for lv in tops.flat_to_levels(prefix_flat, d, depth)]
-    b = tops.flat_to_levels(chunk_flat, d, depth)
-    return tops.levels_to_flat(tops.chen_mul(a, b))
-
-
 def signature_stream_extend(state: SignatureStream, increments: jax.Array, *,
                             backend: str = "jax", backward: str = "inverse",
                             return_stream: bool = False,
@@ -115,7 +363,9 @@ def signature_stream_extend(state: SignatureStream, increments: jax.Array, *,
 
     With a ring, ``length + m`` must stay within capacity (call
     :func:`signature_stream_rolling_drop` first to make room) — that is the
-    invariant that keeps later drops exact.
+    invariant that keeps later drops exact.  Static occupancy means this
+    check raises at trace time; the pooled spelling of the same update is
+    :func:`stream_extend`.
     """
     B, m, d = increments.shape
     if d != state.d:
@@ -129,17 +379,10 @@ def signature_stream_extend(state: SignatureStream, increments: jax.Array, *,
             f"ring of capacity {R}; rolling_drop at least "
             f"{state.length + m - R} first")
     increments = increments.astype(state.sig.dtype)
-    if return_stream:
-        chunk = signature_from_increments(
-            increments, state.depth, stream=True, stream_stride=stream_stride,
-            backward=backward, backend=backend)        # (B, m_out, D)
-        feats = _combine_flat(state.sig, chunk, state.d, state.depth)
-        new_sig = feats[:, -1]
-    else:
-        chunk = signature_from_increments(increments, state.depth,
-                                          backward=backward, backend=backend)
-        new_sig = _combine_flat(state.sig, chunk[:, None], state.d,
-                                state.depth)[:, 0]
+    new_sig, feats = extend_sig(state.sig, increments, state.d, state.depth,
+                                backend=backend, backward=backward,
+                                return_stream=return_stream,
+                                stream_stride=stream_stride)
     if R == 0:
         new = dataclasses.replace(state, sig=new_sig,
                                   length=state.length + m)
@@ -172,12 +415,6 @@ def signature_stream_rolling_drop(state: SignatureStream,
     start = (state.end - state.length) % R          # oldest retained slot
     idx = (start + jnp.arange(n)) % R
     dropped = jnp.take(state.ring, idx, axis=1)     # (B, n, d) oldest-first
-
-    def step(levels, dx):
-        e = tops.tensor_exp(-dx, state.depth)
-        return tops.chen_mul(e, levels), None
-
-    levels = tops.flat_to_levels(state.sig, state.d, state.depth)
-    levels, _ = jax.lax.scan(step, levels, jnp.moveaxis(dropped, 1, 0))
-    return dataclasses.replace(state, sig=tops.levels_to_flat(levels),
-                               length=state.length - n)
+    return dataclasses.replace(
+        state, sig=drop_sig(state.sig, dropped, state.d, state.depth),
+        length=state.length - n)

@@ -1,4 +1,5 @@
-from .pipeline import (RaggedPathStream, ShardedLoader, TokenStream,
-                       fbm_paths, geometric_lengths, hurst_dataset,
-                       ragged_fbm_dataset, ragged_token_batches,
+from .pipeline import (RaggedPathStream, SessionTickStream, ShardedLoader,
+                       TokenStream, fbm_paths, geometric_lengths,
+                       hurst_dataset, ragged_fbm_dataset,
+                       ragged_token_batches, session_tick_stream,
                        synthetic_lm_batches)

@@ -1,11 +1,12 @@
 """Pallas TPU kernels for the paper's compute hot-spot (signature updates),
 with jit'd wrappers (ops) and pure-jnp oracles (ref)."""
 from . import ops, ref
-from .ops import clear_plan_caches, plan_cache_info, set_plan_cache_maxsize
+from .ops import (BoundedCache, clear_plan_caches, plan_cache_info,
+                  set_plan_cache_maxsize)
 from .sig_gram import sig_gram_tiles
 from .sig_trunc import sig_trunc, choose_split, cone_rows
 from .sig_words import sig_words
 
 __all__ = ["ops", "ref", "sig_trunc", "sig_words", "sig_gram_tiles",
-           "choose_split", "cone_rows", "clear_plan_caches",
+           "choose_split", "cone_rows", "BoundedCache", "clear_plan_caches",
            "plan_cache_info", "set_plan_cache_maxsize"]

@@ -116,6 +116,8 @@ tree.  The paper explicitly does not parallelise over sequence length
 """
 from __future__ import annotations
 
+import weakref
+from collections import OrderedDict, namedtuple
 from functools import lru_cache, partial
 
 import jax
@@ -165,14 +167,71 @@ def plan_cache(fn):
     return lru_cache(maxsize=PLAN_CACHE_MAXSIZE)(fn)
 
 
+CacheInfo = namedtuple("CacheInfo", ("hits", "misses", "maxsize", "currsize"))
+
+# name -> WeakSet of live BoundedCache instances sharing that report line
+_INSTANCE_CACHES: dict[str, weakref.WeakSet] = {}
+
+
+class BoundedCache:
+    """Per-instance LRU under the shared plan-cache policy.
+
+    The serving layer keeps jitted per-shape computes on *instances*
+    (``DynamicBatcher``, ``SessionStore``) rather than module functions, so
+    ``lru_cache`` can't bound them.  A ``BoundedCache`` follows
+    ``PLAN_CACHE_MAXSIZE`` dynamically (``set_plan_cache_maxsize`` re-trims,
+    ``clear_plan_caches`` clears) and reports — aggregated per ``name``
+    across live instances — through ``plan_cache_info()``.  Eviction is
+    always safe: entries are jit wrappers, pure functions of their shape
+    key, so a rebuilt entry recompiles to bit-identical results.
+    """
+
+    def __init__(self, name: str):
+        self.name = name
+        self._data: OrderedDict = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        _INSTANCE_CACHES.setdefault(name, weakref.WeakSet()).add(self)
+
+    def get(self, key, make):
+        """Cached value for ``key``, building (and possibly evicting) via
+        ``make()`` on a miss."""
+        if key in self._data:
+            self._data.move_to_end(key)
+            self.hits += 1
+            return self._data[key]
+        self.misses += 1
+        val = make()
+        self._data[key] = val
+        self.trim()
+        return val
+
+    def trim(self) -> None:
+        if PLAN_CACHE_MAXSIZE is None:
+            return
+        while len(self._data) > PLAN_CACHE_MAXSIZE:
+            self._data.popitem(last=False)
+
+    def clear(self) -> None:
+        self._data.clear()
+
+    def info(self) -> CacheInfo:
+        return CacheInfo(self.hits, self.misses, PLAN_CACHE_MAXSIZE,
+                         len(self._data))
+
+
 def set_plan_cache_maxsize(maxsize: int | None) -> None:
     """Rebuild every registered plan cache with a new bound (None =
-    unbounded).  Existing entries are dropped — safe, see above."""
+    unbounded).  Existing entries are dropped — safe, see above.  Live
+    instance caches (``BoundedCache``) are re-trimmed to the new bound."""
     global PLAN_CACHE_MAXSIZE
     PLAN_CACHE_MAXSIZE = maxsize
     g = globals()
     for name, fn in _PLAN_CACHE_FNS.items():
         g[name] = lru_cache(maxsize=maxsize)(fn)
+    for caches in _INSTANCE_CACHES.values():
+        for c in caches:
+            c.trim()
 
 
 def clear_plan_caches() -> None:
@@ -181,12 +240,24 @@ def clear_plan_caches() -> None:
     g = globals()
     for name in _PLAN_CACHE_FNS:
         g[name].cache_clear()
+    for caches in _INSTANCE_CACHES.values():
+        for c in caches:
+            c.clear()
 
 
 def plan_cache_info() -> dict:
-    """{cache name: functools CacheInfo} for every registered cache."""
+    """{cache name: CacheInfo} for every registered cache — the module-level
+    ``@plan_cache`` functions plus each live ``BoundedCache`` family
+    (hits/misses/currsize summed over instances)."""
     g = globals()
-    return {name: g[name].cache_info() for name in _PLAN_CACHE_FNS}
+    out = {name: g[name].cache_info() for name in _PLAN_CACHE_FNS}
+    for name, caches in _INSTANCE_CACHES.items():
+        infos = [c.info() for c in caches]
+        out[name] = CacheInfo(sum(i.hits for i in infos),
+                              sum(i.misses for i in infos),
+                              PLAN_CACHE_MAXSIZE,
+                              sum(i.currsize for i in infos))
+    return out
 
 
 def _on_tpu() -> bool:

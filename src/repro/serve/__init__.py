@@ -1,3 +1,8 @@
+from .sessions import SessionHandle, SessionStore
 from .engine import (make_prefill_step, make_serve_step, ServeEngine,
                      SigScoreEngine, SigStreamEngine)
 from .batcher import DynamicBatcher
+
+__all__ = ["DynamicBatcher", "ServeEngine", "SessionHandle", "SessionStore",
+           "SigScoreEngine", "SigStreamEngine", "make_prefill_step",
+           "make_serve_step"]

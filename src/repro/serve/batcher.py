@@ -47,6 +47,7 @@ import numpy as np
 
 from repro.distributed.ctx import (current_mesh, logical_axis_size,
                                    named_sharding, sharding_ctx)
+from repro.kernels.ops import BoundedCache
 from repro.ragged import (RaggedPaths, assign_buckets, batch_rung,
                           bucket_ladder, pad_batch)
 
@@ -87,8 +88,10 @@ class DynamicBatcher:
         self.max_len = int(self.ladder[-1])
         if self.mesh is None:  # adopt an installed context at build time
             self.mesh = current_mesh()
-        self._compute = jax.jit(self.compute) if self.jit_compute \
-            else self.compute
+        # per-(rung, batch) jitted computes, bounded under the shared
+        # plan-cache policy: evicting a shape frees its executable; traffic
+        # returning to it just re-jits (bit-identical results)
+        self._compute_cache = BoundedCache("dynamic_batcher_compute")
         self._queue: list[_Request] = []
         self._next_ticket = 0
         self.shapes_seen: set[tuple[int, int]] = set()
@@ -178,8 +181,11 @@ class DynamicBatcher:
                 self.true_steps += int(sum(r.length for r in part))
                 self.padded_rows += B_pad
                 self.true_rows += len(part)
+                fn = (self._compute_cache.get((rung, B_pad),
+                                              lambda: jax.jit(self.compute))
+                      if self.jit_compute else self.compute)
                 with self._mesh_scope():
-                    res = self._compute(rp)
+                    res = fn(rp)
                 for row, req in enumerate(part):
                     out[req.ticket] = res[row]
         return out
@@ -200,6 +206,7 @@ class DynamicBatcher:
             "rows_per_device": self.padded_rows // shards,
             "occupancy": (self.true_rows / self.padded_rows
                           if self.padded_rows else 0.0),
+            "compute_cache": dict(self._compute_cache.info()._asdict()),
         }
 
     # -- engine factories --------------------------------------------------

@@ -5,8 +5,10 @@ signature-feature engines.
 token for every sequence in the batch against a seq_len-sized KV/state cache.
 ``SigStreamEngine`` is the streaming analogue for signature features: fixed
 batch slots whose per-step windowed signatures stay current as path chunks
-arrive, on an O(B·D_sig) carry (:class:`repro.core.stream.SignatureStream`)
-instead of recomputation per request.  ``SigScoreEngine`` layers the kernel
+arrive, on an O(B·D_sig) pooled carry — the slots are sessions in a
+:class:`repro.serve.sessions.SessionStore` (a private pool by default, or a
+shared multi-tenant one via ``store=``) instead of recomputation per
+request.  ``SigScoreEngine`` layers the kernel
 methods of :mod:`repro.sigkernel` on top: incoming streams are scored /
 KRR-predicted against a cached reference Gram using the stream's terminal
 signature states.
@@ -21,9 +23,10 @@ import jax.numpy as jnp
 
 import repro.models as M
 from repro.core import tensor_ops as tops
-from repro.core.stream import SignatureStream, signature_stream_init
+from repro.core.stream import SignatureStream
 from repro.models import encdec, transformer as T
 from repro.models.config import ModelConfig
+from repro.serve.sessions import SessionHandle, SessionStore
 
 
 def make_prefill_step(cfg: ModelConfig, remat: str = "dots"):
@@ -65,20 +68,40 @@ def make_serve_step(cfg: ModelConfig, temperature: float = 0.0):
     return serve_step
 
 
-def _hop_window(state: SignatureStream, increments: jax.Array, window: int):
+def _hop_window(length: int, increments: jax.Array, window: int):
     """Shared hopping-window step: truncate a chunk larger than the window to
-    its tail, drop however many oldest increments keep occupancy <= window.
-    Returns (state, increments) ready for ``extend`` — the ring-occupancy
-    invariant that keeps ``rolling_drop`` exact lives HERE, once."""
+    its tail, and compute how many oldest increments must drop to keep
+    occupancy <= window.  Returns (need, increments) ready for the block
+    extend — the ring-occupancy invariant that keeps ``rolling_drop`` exact
+    lives HERE, once."""
     m = increments.shape[1]
     if window and m > window:
         increments = increments[:, m - window:]
         m = window
-    if window:
-        need = max(0, state.length + m - window)
-        if need:
-            state = state.rolling_drop(need)
-    return state, increments
+    need = max(0, length + m - window) if window else 0
+    return need, increments
+
+
+def _engine_block(engine, store: SessionStore | None) -> SessionStore:
+    """Admit an engine's fixed batch slots into a session pool (the engine's
+    own single-tenant pool by default, or a shared multi-tenant one)."""
+    if store is None:
+        store = SessionStore(engine.d, engine.depth,
+                             ring_capacity=engine.window,
+                             initial_sessions=engine.batch,
+                             backend=engine.backend, dtype=engine.dtype)
+    else:
+        if (store.d, store.depth) != (engine.d, engine.depth):
+            raise ValueError(
+                f"shared store is (d={store.d}, depth={store.depth}) but the "
+                f"engine needs (d={engine.d}, depth={engine.depth})")
+        if engine.window and store.ring_capacity < engine.window:
+            raise ValueError(
+                f"shared store rings hold {store.ring_capacity} increments; "
+                f"the engine's hopping window needs >= {engine.window}")
+    engine._handles = store.create_block(
+        engine.batch, prefix=f"{type(engine).__name__.lower()}/")
+    return store
 
 
 @dataclasses.dataclass
@@ -86,15 +109,16 @@ class SigStreamEngine:
     """Batched online signature-feature engine (continuous-batching analogue
     for streaming features).
 
-    Fixed batch slots share one :class:`SignatureStream` carry; every
-    :meth:`push` of a (B, m, d) increment chunk returns the per-step
-    signature features over the current window, (B, m_out, D_sig).  With
-    ``window > 0`` the engine keeps a hopping window: before each push it
-    drops however many oldest increments are needed so the window never
-    exceeds ``window`` (chunks larger than the window keep only their tail).
-    The carry is O(B·D_sig + B·window·d) — independent of how long the
-    streams run — and the hot loop is the engine dispatch's streamed forward
-    on the configured backend.
+    Fixed batch slots live in a :class:`repro.serve.sessions.SessionStore`
+    pool (the engine builds a private one, or joins a shared multi-tenant
+    pool via ``store=``); every :meth:`push` of a (B, m, d) increment chunk
+    returns the per-step signature features over the current window,
+    (B, m_out, D_sig).  With ``window > 0`` the engine keeps a hopping
+    window: before each push it drops however many oldest increments are
+    needed so the window never exceeds ``window`` (chunks larger than the
+    window keep only their tail).  The carry is O(B·D_sig + B·window·d) —
+    independent of how long the streams run — and the hot loop is the engine
+    dispatch's streamed forward on the configured backend.
     """
     d: int
     depth: int
@@ -103,28 +127,46 @@ class SigStreamEngine:
     backend: str = "auto"
     stream_stride: int = 1
     dtype: jnp.dtype = jnp.float32
+    store: Optional[SessionStore] = None    # join a shared pool
 
     def __post_init__(self):
-        self.state: SignatureStream = signature_stream_init(
-            self.batch, self.d, self.depth, capacity=self.window,
-            dtype=self.dtype)
+        self.store = _engine_block(self, self.store)
+
+    @property
+    def handles(self) -> list[SessionHandle]:
+        """The pool sessions backing this engine's batch slots."""
+        return self._handles
+
+    @property
+    def state(self) -> SignatureStream:
+        """The slots' current carry as a (B,)-batched
+        :class:`SignatureStream` view.  Assignable: installing a carry
+        writes it back into the pool slots."""
+        return self.store.block_view(self._handles)
+
+    @state.setter
+    def state(self, new: SignatureStream) -> None:
+        self.store.set_block(self._handles, new)
 
     def push(self, increments: jax.Array) -> jax.Array:
         """Feed (B, m, d) new increments; returns (B, m_out, D_sig) per-step
         features of the emitted steps (terminal step always included)."""
-        state, increments = _hop_window(self.state, increments, self.window)
-        self.state, feats = state.extend(
-            increments, backend=self.backend, return_stream=True,
+        increments = jnp.asarray(increments)
+        need, increments = _hop_window(
+            self.store.length(self._handles[0]), increments, self.window)
+        if need:
+            self.store.drop_block(self._handles, need)
+        return self.store.extend_block(
+            self._handles, increments, return_stream=True,
             stream_stride=self.stream_stride)
-        return feats
 
     @property
     def features(self) -> jax.Array:
         """Current (B, D_sig) window signature for every slot."""
-        return self.state.sig
+        return self.store.block_features(self._handles)
 
     def reset(self) -> None:
-        self.__post_init__()
+        self.store.reset_block(self._handles)
 
 
 @dataclasses.dataclass
@@ -133,13 +175,15 @@ class SigScoreEngine:
 
     At construction the reference paths' signatures, the (R, R) reference
     Gram and (optionally) the KRR dual coefficients are computed ONCE through
-    the engine dispatch and cached.  At serve time, fixed batch slots carry a
-    :class:`SignatureStream` (hopping window like :class:`SigStreamEngine`);
-    every :meth:`push` of an increment chunk updates the O(B·D_sig) carry and
-    returns (B, R) kernel scores of the *terminal* window signatures against
-    the references — one tiled cross-Gram per chunk, never a recomputation
-    of reference signatures.  :meth:`predict` turns the same cross-Gram into
-    kernel-ridge predictions; :meth:`nearest` into retrieval indices.
+    the engine dispatch and cached.  At serve time, fixed batch slots live in
+    a :class:`repro.serve.sessions.SessionStore` pool (private by default,
+    shared via ``store=``) with a hopping window like
+    :class:`SigStreamEngine`; every :meth:`push` of an increment chunk
+    updates the O(B·D_sig) carry and returns (B, R) kernel scores of the
+    *terminal* window signatures against the references — one tiled
+    cross-Gram per chunk, never a recomputation of reference signatures.
+    :meth:`predict` turns the same cross-Gram into kernel-ridge predictions;
+    :meth:`nearest` into retrieval indices.
     """
     d: int
     depth: int
@@ -154,6 +198,7 @@ class SigScoreEngine:
     normalize: bool = True
     block_words: int = 512
     dtype: jnp.dtype = jnp.float32
+    store: Optional[SessionStore] = None     # join a shared pool
 
     def __post_init__(self):
         from repro.kernels import ops
@@ -172,25 +217,47 @@ class SigScoreEngine:
                                  block_words=self.block_words)
         self.alpha = None if self.targets is None else krr_fit(
             self.ref_gram, jnp.asarray(self.targets), self.reg)
-        self.state: SignatureStream = signature_stream_init(
-            self.batch, self.d, self.depth, capacity=self.window,
-            dtype=self.dtype)
+        self.store = _engine_block(self, self.store)
         self._cross = None          # cached raw (B, R) Gram of current state
+
+    @property
+    def handles(self) -> list[SessionHandle]:
+        """The pool sessions backing this engine's batch slots."""
+        return self._handles
+
+    @property
+    def state(self) -> SignatureStream:
+        """The slots' current carry as a (B,)-batched
+        :class:`SignatureStream` view.  Assignable: installing a carry
+        writes it back into the pool slots."""
+        return self.store.block_view(self._handles)
+
+    @state.setter
+    def state(self, new: SignatureStream) -> None:
+        self.store.set_block(self._handles, new)
+        self._cross = None
 
     def push(self, increments: jax.Array) -> jax.Array:
         """Feed (B, m, d) new increments; returns the refreshed (B, R)
         reference scores of every slot's current window."""
-        state, increments = _hop_window(self.state, increments, self.window)
-        self.state = state.extend(increments, backend=self.backend)
+        increments = jnp.asarray(increments)
+        need, increments = _hop_window(
+            self.store.length(self._handles[0]), increments, self.window)
+        if need:
+            self.store.drop_block(self._handles, need)
+        self.store.extend_block(self._handles, increments)
         self._cross = None          # state moved: invalidate the cached Gram
         return self.scores()
+
+    def _terminal_sigs(self) -> jax.Array:
+        return self.store.block_features(self._handles)
 
     def _cross_gram(self) -> jax.Array:
         """The raw (B, R) cross-Gram of the current terminal signatures,
         computed once per state — scores/predict/nearest all share it."""
         if self._cross is None:
             from repro.kernels import ops
-            self._cross = ops.gram(self.state.sig, self.ref_sigs,
+            self._cross = ops.gram(self._terminal_sigs(), self.ref_sigs,
                                    self.weights, backend=self.backend,
                                    block_words=self.block_words)
         return self._cross
@@ -202,8 +269,8 @@ class SigScoreEngine:
         K = self._cross_gram()
         if not self.normalize:
             return K
-        qn = jnp.sqrt(jnp.maximum(gram_diag(self.state.sig, self.weights),
-                                  1e-12))
+        qn = jnp.sqrt(jnp.maximum(
+            gram_diag(self._terminal_sigs(), self.weights), 1e-12))
         rn = jnp.sqrt(jnp.maximum(jnp.diag(self.ref_gram), 1e-12))
         return K / (qn[:, None] * rn[None, :])
 
@@ -220,9 +287,7 @@ class SigScoreEngine:
         return jnp.argmax(self.scores(), axis=-1)
 
     def reset(self) -> None:
-        self.state = signature_stream_init(self.batch, self.d, self.depth,
-                                           capacity=self.window,
-                                           dtype=self.dtype)
+        self.store.reset_block(self._handles)
         self._cross = None
 
 

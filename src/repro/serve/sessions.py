@@ -1,0 +1,776 @@
+"""Pooled multi-tenant session layer: millions of live signature streams in
+ONE struct-of-arrays device pool.
+
+Per-user streaming state used to be one ``SignatureStream`` pytree per user:
+N users meant N carries, N dispatch calls per round, and a Python object
+graph the device never saw.  ``SessionStore`` turns that into a serving
+subsystem shaped like an LLM-serving KV pool:
+
+- **Pool** — one :class:`repro.core.stream.StreamCarry`: (N, D_sig)
+  signatures + (N, R, d) rings + per-row ``length``/``end``/``valid`` lanes,
+  resident on device (batch-sharded across a mesh under ``sharding_ctx``).
+  Slots are recycled through a free list; *generation counters* make stale
+  handles detectable instead of silently reading another tenant's lane.
+  The pool grows by doubling, so compiled shapes stay bounded (log₂ many
+  pool sizes ever exist).
+
+- **Continuous-batching ingest** — :meth:`ingest` / :meth:`ingest_many`
+  queue ticks per session on the host; :meth:`flush` buckets whichever
+  sessions have new ticks by tick-count rung (powers of two, zero-padded —
+  a zero increment is the identity Chen update, so padding is exact), pads
+  the row count up a power-of-two rung, and runs ONE gather → extend →
+  scatter compute per bucket.  Compiled shapes are bounded by
+  (tick rungs × row rungs × pool sizes) no matter what the traffic does,
+  and the per-shape jitted computes live in a :class:`repro.kernels.ops.
+  BoundedCache` under the shared plan-cache policy.
+
+- **Eviction** — explicit (:meth:`evict`), TTL (sessions idle longer than
+  ``ttl`` logical-clock units are swept at flush), and LRU (a full pool at
+  ``max_sessions`` evicts the least-recently-seen session to admit a new
+  one).  All three are accounted in :meth:`stats`, next to occupancy, flush
+  shapes, and p99 ingest staleness.
+
+- **Checkpoint/restore** — :meth:`checkpoint` writes the whole pool (device
+  carry + host metadata) through :class:`repro.checkpoint.Checkpointer`;
+  :meth:`restore` brings every session back bit-identically, including onto
+  a different mesh (elastic restore).
+
+Time is a *logical clock*: every flush advances ``now`` by 1.0, and every
+public mutator takes ``now=`` to override — deterministic TTL tests, no
+wall-clock in semantics.  Wall-clock is used only for the staleness numbers
+reported by :meth:`stats`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Iterable, Optional, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import Checkpointer
+from repro.core.stream import (SignatureStream, StreamCarry, stream_extend,
+                               stream_init, stream_rolling_drop,
+                               stream_scatter, stream_take)
+from repro.distributed.ctx import (current_mesh, logical_axis_size,
+                                   named_sharding, sharding_ctx)
+from repro.kernels.ops import BoundedCache
+from repro.ragged import batch_rung
+
+import contextlib
+
+Sid = Union[str, int]
+
+
+@dataclasses.dataclass(frozen=True)
+class SessionHandle:
+    """Ticket for one live session: (sid, slot, generation).
+
+    The generation is the slot's reuse counter — a handle outlives its
+    session only as a *detectably* stale ticket (store methods raise on it),
+    never as a silent read of whichever tenant holds the slot now.
+    """
+    sid: Sid
+    slot: int
+    generation: int
+
+
+def _pow2(n: int) -> int:
+    return 1 << max(0, int(n) - 1).bit_length()
+
+
+@dataclasses.dataclass
+class _Pending:
+    """Host-side per-session ingest buffer."""
+    chunks: list            # list of (m_i, d) np arrays, arrival order
+    ticks: int              # total queued increments
+    t_enqueue: float        # wall time of the oldest undelivered tick
+
+
+class SessionStore:
+    """Pooled multi-tenant signature sessions (see module docstring).
+
+    Parameters
+    ----------
+    d, depth        signature configuration of every session in the pool.
+    ring_capacity   per-session increment ring R (0 = expanding windows
+                    only; rolling drops need R > 0).
+    initial_sessions  starting pool size (rounded up to a power of two and
+                    to the mesh's batch-shard count); the pool doubles as
+                    sessions exceed it.
+    max_sessions    hard pool bound; a full pool LRU-evicts (when
+                    ``lru_evict``) or refuses creates.
+    ttl             idle time (logical-clock units) after which a session
+                    is evicted at flush; None disables.
+    max_ticks       top tick-count rung per session per flush wave; a
+                    session with more queued ticks drains over several
+                    waves in arrival order.
+    max_rows        top row rung per flush bucket.
+    backend / dtype engine dispatch configuration for the hot loop.
+    mesh            place the pool batch-sharded across this mesh (or the
+                    ambient ``sharding_ctx`` at construction).
+    """
+
+    def __init__(self, d: int, depth: int, *, ring_capacity: int = 0,
+                 initial_sessions: int = 64,
+                 max_sessions: Optional[int] = None,
+                 ttl: Optional[float] = None, max_ticks: int = 64,
+                 max_rows: int = 4096, backend: str = "jax",
+                 lru_evict: bool = True, dtype=jnp.float32,
+                 mesh=None, mesh_rules: Optional[dict] = None,
+                 staleness_window: int = 100_000):
+        if d < 1 or depth < 1:
+            raise ValueError(f"need d >= 1 and depth >= 1, got {d}, {depth}")
+        if ring_capacity < 0:
+            raise ValueError("ring_capacity must be >= 0")
+        if max_ticks < 1 or max_rows < 1:
+            raise ValueError("max_ticks and max_rows must be >= 1")
+        self.d, self.depth = d, depth
+        self.ring_capacity = ring_capacity
+        self.max_sessions = max_sessions
+        self.ttl = ttl
+        self.max_ticks = _pow2(max_ticks)
+        self.max_rows = _pow2(max_rows)
+        self.backend = backend
+        self.lru_evict = lru_evict
+        self.dtype = dtype
+        self.mesh = mesh if mesh is not None else current_mesh()
+        self.mesh_rules = mesh_rules
+
+        n0 = max(_pow2(initial_sessions), self._batch_shards())
+        if max_sessions is not None and n0 > _pow2(max_sessions):
+            n0 = max(_pow2(max_sessions), self._batch_shards())
+        self._carry: StreamCarry = self._place(stream_init(
+            n0, d, depth, capacity=ring_capacity, dtype=dtype))
+
+        # host mirrors (the schedulable truth; device lanes are belt-and-
+        # braces for padded rows inside compiled flushes)
+        self._ids: dict[Sid, int] = {}
+        self._valid = np.zeros(n0, bool)
+        self._length = np.zeros(n0, np.int64)
+        self._end = np.zeros(n0, np.int64)
+        self._generation = np.zeros(n0, np.int64)
+        self._last_seen = np.zeros(n0, np.float64)
+        self._free: list[int] = list(range(n0 - 1, -1, -1))
+        self._pending: dict[int, _Pending] = {}
+        self._auto_sid = 0
+
+        self.now = 0.0                      # logical clock
+        self._jit = BoundedCache("session_flush")
+        self._shape_keys: set[tuple] = set()
+        self._flush_shapes: set[tuple[int, int]] = set()
+        self._pool_sizes: list[int] = [n0]
+        self._staleness = deque(maxlen=staleness_window)
+        self.created = 0
+        self.updates = 0                    # ticks applied to the pool
+        self.flushes = 0
+        self.evictions = {"explicit": 0, "ttl": 0, "lru": 0}
+
+    # -- mesh placement ----------------------------------------------------
+
+    def _mesh_scope(self):
+        if self.mesh is None:
+            return contextlib.nullcontext()
+        return sharding_ctx(self.mesh, self.mesh_rules)
+
+    def _batch_shards(self) -> int:
+        if self.mesh is None:
+            return 1
+        with self._mesh_scope():
+            return logical_axis_size("batch")
+
+    def _pool_shardings(self) -> Optional[StreamCarry]:
+        """Batch-sharded placement of every pool lane (None off-mesh)."""
+        if self.mesh is None:
+            return None
+        with self._mesh_scope():
+            return StreamCarry(
+                sig=named_sharding("batch", None),
+                ring=named_sharding("batch", None, None),
+                length=named_sharding("batch"), end=named_sharding("batch"),
+                valid=named_sharding("batch"), d=self.d, depth=self.depth)
+
+    def _place(self, carry: StreamCarry) -> StreamCarry:
+        sh = self._pool_shardings()
+        return carry if sh is None else jax.device_put(carry, sh)
+
+    # -- pool views --------------------------------------------------------
+
+    @property
+    def pool(self) -> StreamCarry:
+        """The live struct-of-arrays carry (read-only by convention)."""
+        return self._carry
+
+    @property
+    def pool_size(self) -> int:
+        return self._carry.size
+
+    def __len__(self) -> int:
+        return len(self._ids)
+
+    def __contains__(self, sid: Sid) -> bool:
+        return sid in self._ids
+
+    # -- id / handle resolution --------------------------------------------
+
+    def lookup(self, session: Union[Sid, SessionHandle]) -> SessionHandle:
+        """sid or handle -> fresh valid handle.  Raises ``KeyError`` on an
+        unknown sid and ``ValueError`` on a stale-generation handle."""
+        if isinstance(session, SessionHandle):
+            slot = self._ids.get(session.sid)
+            if slot is None or slot != session.slot or \
+                    self._generation[slot] != session.generation:
+                raise ValueError(
+                    f"stale session handle {session}: the session was "
+                    f"evicted (or its slot was reassigned); look the sid up "
+                    f"again or create a new session")
+            return session
+        slot = self._ids.get(session)
+        if slot is None:
+            raise KeyError(f"unknown session id {session!r}")
+        return SessionHandle(session, slot, int(self._generation[slot]))
+
+    def _slots_of(self, sessions) -> np.ndarray:
+        return np.asarray([self.lookup(s).slot for s in sessions], np.int64)
+
+    # -- create / evict ----------------------------------------------------
+
+    def create(self, sid: Optional[Sid] = None, *,
+               now: Optional[float] = None) -> SessionHandle:
+        """Admit one session (auto-generated sid when None).  Double-create
+        raises; a full pool grows (doubling) up to ``max_sessions``, then
+        LRU-evicts or refuses."""
+        return self.create_many([sid], now=now)[0]
+
+    def create_many(self, sids: Iterable[Optional[Sid]], *,
+                    now: Optional[float] = None) -> list[SessionHandle]:
+        """Bulk admission: one device reset for the whole batch of slots."""
+        now = self.now if now is None else float(now)
+        sids = list(sids)
+        out_sids: list[Sid] = []
+        for sid in sids:
+            if sid is None:
+                while f"s{self._auto_sid}" in self._ids:
+                    self._auto_sid += 1
+                sid = f"s{self._auto_sid}"
+                self._auto_sid += 1
+            if sid in self._ids:
+                raise ValueError(f"session {sid!r} already exists "
+                                 f"(double-create); evict it first or use "
+                                 f"a fresh id")
+            if sid in out_sids:
+                raise ValueError(f"duplicate sid {sid!r} in create_many")
+            out_sids.append(sid)
+        slots = [self._take_slot(now) for _ in out_sids]
+        handles = []
+        for sid, slot in zip(out_sids, slots):
+            self._ids[sid] = slot
+            self._valid[slot] = True
+            self._length[slot] = 0
+            self._end[slot] = 0
+            self._last_seen[slot] = now
+            handles.append(SessionHandle(sid, slot,
+                                         int(self._generation[slot])))
+        self.created += len(handles)
+        # one scatter resets every admitted row (sig/ring zero, valid True)
+        idx = jnp.asarray(np.asarray(slots, np.int64))
+        fresh = stream_init(len(slots), self.d, self.depth,
+                            capacity=self.ring_capacity, dtype=self.dtype,
+                            valid=True)
+        self._carry = stream_scatter(self._carry, idx, fresh)
+        return handles
+
+    def _take_slot(self, now: float) -> int:
+        if self.max_sessions is not None and \
+                len(self._ids) >= self.max_sessions:
+            if self.lru_evict and self._ids:
+                victim = min(self._ids,
+                             key=lambda s: self._last_seen[self._ids[s]])
+                self._evict_sids([victim], reason="lru")
+            else:
+                raise RuntimeError(
+                    f"session pool full ({len(self._ids)} sessions, "
+                    f"max_sessions={self.max_sessions}) and lru_evict is off")
+        if not self._free:
+            self._grow(2 * self._carry.size)
+        return self._free.pop()
+
+    def _grow(self, new_n: int) -> None:
+        """Double the pool: copy rows into a fresh (new_n, ...) carry."""
+        new_n = max(_pow2(new_n), self._carry.size * 2)
+        old_n = self._carry.size
+        self._carry = self._place(jax.tree.map(
+            lambda a: jnp.zeros((new_n, *a.shape[1:]), a.dtype).at[:old_n]
+            .set(a), self._carry))
+        for arr in ("_valid", "_length", "_end", "_generation", "_last_seen"):
+            old = getattr(self, arr)
+            new = np.zeros(new_n, old.dtype)
+            new[:old_n] = old
+            setattr(self, arr, new)
+        self._free = list(range(new_n - 1, old_n - 1, -1)) + self._free
+        self._pool_sizes.append(new_n)
+
+    def evict(self, session: Union[Sid, SessionHandle], *,
+              reason: str = "explicit") -> None:
+        """Release a session's slot (pending ticks are dropped).  The slot's
+        generation bumps, so outstanding handles go stale."""
+        h = self.lookup(session)
+        self._evict_sids([h.sid], reason=reason)
+
+    def _evict_sids(self, sids: list[Sid], *, reason: str) -> None:
+        slots = []
+        for sid in sids:
+            slot = self._ids.pop(sid)
+            self._valid[slot] = False
+            self._generation[slot] += 1
+            self._pending.pop(slot, None)
+            self._free.append(slot)
+            slots.append(slot)
+        self.evictions[reason] = self.evictions.get(reason, 0) + len(sids)
+        idx = jnp.asarray(np.asarray(slots, np.int64))
+        self._carry = dataclasses.replace(
+            self._carry,
+            valid=self._carry.valid.at[idx].set(False, mode="drop"))
+
+    def sweep(self, *, now: Optional[float] = None) -> int:
+        """Evict sessions idle for more than ``ttl`` (no-op without one).
+        Runs automatically at every flush; returns the eviction count."""
+        if self.ttl is None:
+            return 0
+        now = self.now if now is None else float(now)
+        stale = [sid for sid, slot in self._ids.items()
+                 if now - self._last_seen[slot] > self.ttl
+                 and slot not in self._pending]
+        if stale:
+            self._evict_sids(stale, reason="ttl")
+        return len(stale)
+
+    # -- ingest ------------------------------------------------------------
+
+    def ingest(self, session: Union[Sid, SessionHandle], increments, *,
+               now: Optional[float] = None) -> None:
+        """Queue (m, d) new increments for one session (delivered at the
+        next :meth:`flush`)."""
+        h = self.lookup(session)
+        inc = np.asarray(increments, np.float32)
+        if inc.ndim != 2 or inc.shape[-1] != self.d:
+            raise ValueError(f"increments must be (m, {self.d}), got "
+                             f"{inc.shape}")
+        self._queue(h.slot, inc, now)
+
+    def ingest_many(self, sids, counts, ticks, *,
+                    now: Optional[float] = None,
+                    auto_create: bool = False) -> None:
+        """Bulk ingest: ``ticks`` is the (Σ counts, d) concatenation of each
+        session's new increments, in ``sids`` order.  With ``auto_create``
+        unknown sids are admitted first (the serving arrival path)."""
+        sids = list(sids)
+        counts = np.asarray(counts, np.int64)
+        ticks = np.asarray(ticks, np.float32)
+        if len(sids) != len(counts):
+            raise ValueError(f"{len(sids)} sids vs {len(counts)} counts")
+        if ticks.ndim != 2 or ticks.shape[-1] != self.d:
+            raise ValueError(f"ticks must be (sum(counts), {self.d}), got "
+                             f"{ticks.shape}")
+        if counts.sum() != ticks.shape[0]:
+            raise ValueError(f"counts sum to {counts.sum()} but ticks has "
+                             f"{ticks.shape[0]} rows")
+        if auto_create:
+            fresh = [s for s in sids if s not in self._ids]
+            if fresh:
+                self.create_many(dict.fromkeys(fresh), now=now)
+        bounds = np.cumsum(counts)[:-1]
+        for sid, chunk in zip(sids, np.split(ticks, bounds)):
+            h = self.lookup(sid)
+            if len(chunk):
+                self._queue(h.slot, chunk, now)
+
+    def _queue(self, slot: int, inc: np.ndarray, now: Optional[float]) -> None:
+        t = time.perf_counter()
+        p = self._pending.get(slot)
+        if p is None:
+            self._pending[slot] = _Pending([inc], inc.shape[0], t)
+        else:
+            p.chunks.append(inc)
+            p.ticks += inc.shape[0]
+        self._last_seen[slot] = self.now if now is None else float(now)
+
+    @property
+    def pending_sessions(self) -> int:
+        return len(self._pending)
+
+    @property
+    def pending_ticks(self) -> int:
+        return sum(p.ticks for p in self._pending.values())
+
+    # -- flush: continuous-batching delivery -------------------------------
+
+    def flush(self, *, now: Optional[float] = None) -> int:
+        """Deliver every queued tick through bucketed pool updates; advance
+        the logical clock; TTL-sweep.  Returns the number of ticks applied.
+
+        Occupancy is validated up front (host mirrors), so a ring overflow
+        raises *before* any device work — the pool is never left corrupted.
+        """
+        R = self.ring_capacity
+        if R:
+            for slot, p in self._pending.items():
+                if self._length[slot] + p.ticks > R:
+                    sid = next(s for s, sl in self._ids.items() if sl == slot)
+                    raise ValueError(
+                        f"flushing {p.ticks} queued increments for session "
+                        f"{sid!r} would hold {self._length[slot] + p.ticks} "
+                        f"in a ring of capacity {R}; rolling_drop at least "
+                        f"{self._length[slot] + p.ticks - R} first")
+        pending, self._pending = self._pending, {}
+        applied = 0
+        t0 = time.perf_counter()
+        for p in pending.values():
+            self._staleness.append(t0 - p.t_enqueue)
+        # waves: each wave takes at most max_ticks per session, arrival order
+        work = {s: np.concatenate(p.chunks) if len(p.chunks) > 1
+                else p.chunks[0] for s, p in pending.items()}
+        while work:
+            wave = {s: a[:self.max_ticks] for s, a in work.items()}
+            work = {s: a[self.max_ticks:] for s, a in work.items()
+                    if a.shape[0] > self.max_ticks}
+            applied += self._apply_wave(wave)
+        self.flushes += 1
+        self.now = (self.now + 1.0) if now is None else float(now)
+        self.sweep()
+        return applied
+
+    def _apply_wave(self, wave: dict[int, np.ndarray]) -> int:
+        """Bucket one wave's (slot -> (m_i, d)) chunks by tick rung and run
+        the gather → extend → scatter compute per bucket."""
+        shards = self._batch_shards()
+        slots = np.fromiter(wave.keys(), np.int64, len(wave))
+        ms = np.asarray([wave[s].shape[0] for s in slots], np.int64)
+        rungs = np.minimum(self.max_ticks,
+                           2 ** np.ceil(np.log2(np.maximum(ms, 1))).astype(
+                               np.int64))
+        applied = 0
+        for rung in np.unique(rungs):
+            sel = slots[rungs == rung]
+            for off in range(0, len(sel), self.max_rows):
+                part = sel[off:off + self.max_rows]
+                B = batch_rung(len(part), self.max_rows)
+                B = -(-B // shards) * shards
+                incs = np.zeros((B, int(rung), self.d), np.float32)
+                counts = np.zeros(B, np.int32)
+                for i, slot in enumerate(part):
+                    m = wave[slot].shape[0]
+                    incs[i, :m] = wave[slot]
+                    counts[i] = m
+                # padding rows point one past the pool: gathers clamp with
+                # count 0 (pass-through), scatters drop
+                idx = np.full(B, self._carry.size, np.int64)
+                idx[:len(part)] = part
+                self._run_flush_step(int(rung), B, idx, incs, counts)
+                self._length[part] += counts[:len(part)]
+                if self.ring_capacity:
+                    self._end[part] = (self._end[part] + counts[:len(part)]) \
+                        % self.ring_capacity
+                applied += int(counts.sum())
+                self._flush_shapes.add((int(rung), B))
+                self._shape_keys.add(("flush", int(rung), B,
+                                      self._carry.size))
+        self.updates += applied
+        return applied
+
+    def _run_flush_step(self, rung: int, B: int, idx, incs, counts) -> None:
+        key = ("flush", rung, B, self._carry.size, self.backend)
+
+        def make():
+            def step(carry, slots, inc, cnt):
+                sub = stream_take(carry, slots)
+                sub = stream_extend(sub, inc, counts=cnt,
+                                    backend=self.backend)
+                return stream_scatter(carry, slots, sub)
+            return jax.jit(step, donate_argnums=self._donate)
+
+        fn = self._jit.get(key, make)
+        with self._mesh_scope():
+            self._carry = fn(self._carry, jnp.asarray(idx),
+                             jnp.asarray(incs), jnp.asarray(counts))
+
+    @property
+    def _donate(self) -> tuple:
+        # buffer donation is a no-op (plus a warning) on CPU; elsewhere it
+        # keeps the O(N·D_sig) pool from being copied every flush
+        return () if jax.default_backend() == "cpu" else (0,)
+
+    # -- reads -------------------------------------------------------------
+
+    def features(self, session: Union[Sid, SessionHandle]) -> jax.Array:
+        """(D_sig,) current window signature of one session."""
+        return self._carry.sig[self.lookup(session).slot]
+
+    def block_features(self, sessions) -> jax.Array:
+        """(B, D_sig) gathered signatures for a block of sessions."""
+        return jnp.take(self._carry.sig,
+                        jnp.asarray(self._slots_of(sessions)), axis=0)
+
+    def length(self, session: Union[Sid, SessionHandle]) -> int:
+        return int(self._length[self.lookup(session).slot])
+
+    def block_view(self, sessions) -> SignatureStream:
+        """A :class:`SignatureStream` view of a uniform-occupancy block —
+        the N=1-per-row spelling the engines expose as ``.state``."""
+        slots = self._slots_of(sessions)
+        lens, ends = self._length[slots], self._end[slots]
+        if len(slots) and (np.any(lens != lens[0]) or np.any(ends != ends[0])):
+            raise ValueError("block_view needs uniform occupancy across the "
+                             "block (use features()/length() per session)")
+        idx = jnp.asarray(slots)
+        return SignatureStream(
+            sig=jnp.take(self._carry.sig, idx, axis=0),
+            ring=jnp.take(self._carry.ring, idx, axis=0),
+            length=int(lens[0]) if len(slots) else 0,
+            end=int(ends[0]) if len(slots) else 0,
+            d=self.d, depth=self.depth)
+
+    def set_block(self, sessions, state: SignatureStream) -> None:
+        """Write a (B,)-batched :class:`SignatureStream` carry back into a
+        block's slots — the inverse of :meth:`block_view`, for call sites
+        that advance the view functionally and reinstall it."""
+        slots = self._slots_of(sessions)
+        if state.batch != len(slots):
+            raise ValueError(f"carry batch {state.batch} != block size "
+                             f"{len(slots)}")
+        if (state.d, state.depth) != (self.d, self.depth):
+            raise ValueError(f"carry is (d={state.d}, depth={state.depth}) "
+                             f"but the pool holds (d={self.d}, "
+                             f"depth={self.depth})")
+        if state.capacity != self.ring_capacity:
+            raise ValueError(f"carry ring capacity {state.capacity} != pool "
+                             f"ring capacity {self.ring_capacity}")
+        B = len(slots)
+        sub = StreamCarry(
+            sig=jnp.asarray(state.sig), ring=jnp.asarray(state.ring),
+            length=jnp.full((B,), int(state.length), jnp.int32),
+            end=jnp.full((B,), int(state.end), jnp.int32),
+            valid=jnp.ones((B,), bool), d=self.d, depth=self.depth)
+        self._carry = stream_scatter(self._carry, jnp.asarray(slots), sub)
+        self._length[slots] = int(state.length)
+        self._end[slots] = int(state.end)
+
+    # -- synchronous block updates (the engines' fixed-slot path) ----------
+
+    def create_block(self, n: int, *,
+                     prefix: str = "slot") -> list[SessionHandle]:
+        """n fresh sessions with generated ids ``{prefix}0..`` (skipping
+        taken ids) — the fixed batch slots a serving engine owns."""
+        sids: list[str] = []
+        k = 0
+        while len(sids) < n:
+            sid = f"{prefix}{k}"
+            k += 1
+            if sid not in self._ids:
+                sids.append(sid)
+        return self.create_many(sids)
+
+    def extend_block(self, sessions, increments, *,
+                     return_stream: bool = False, stream_stride: int = 1,
+                     backward: str = "inverse",
+                     now: Optional[float] = None):
+        """Synchronously append one uniform (B, m, d) chunk to a block of
+        sessions (bypassing the ingest queue).  Returns the (B, m_out,
+        D_sig) per-step features when ``return_stream``.  Raises on ring
+        overflow exactly like ``SignatureStream.extend``."""
+        slots = self._slots_of(sessions)
+        increments = jnp.asarray(increments)
+        if increments.ndim != 3 or increments.shape[-1] != self.d:
+            raise ValueError(f"increments must be (B, m, {self.d}), got "
+                             f"{increments.shape}")
+        if increments.shape[0] != len(slots):
+            raise ValueError(f"batch {increments.shape[0]} != block size "
+                             f"{len(slots)}")
+        m = increments.shape[1]
+        R = self.ring_capacity
+        if R:
+            worst = int(self._length[slots].max(initial=0))
+            if worst + m > R:
+                raise ValueError(
+                    f"extending by {m} would hold {worst + m} increments in "
+                    f"a ring of capacity {R}; rolling_drop at least "
+                    f"{worst + m - R} first")
+        key = ("extend", len(slots), m, self._carry.size, return_stream,
+               stream_stride, backward, self.backend)
+
+        def make():
+            def step(carry, idx, inc):
+                sub = stream_take(carry, idx)
+                out = stream_extend(sub, inc, backend=self.backend,
+                                    backward=backward,
+                                    return_stream=return_stream,
+                                    stream_stride=stream_stride)
+                sub, feats = out if return_stream else (out, None)
+                carry = stream_scatter(carry, idx, sub)
+                return (carry, feats) if return_stream else carry
+            return jax.jit(step, donate_argnums=self._donate)
+
+        fn = self._jit.get(key, make)
+        with self._mesh_scope():
+            out = fn(self._carry, jnp.asarray(slots), increments)
+        self._carry, feats = out if return_stream else (out, None)
+        self._shape_keys.add(key)
+        self._length[slots] += m
+        if R:
+            self._end[slots] = (self._end[slots] + m) % R
+        self._last_seen[slots] = self.now if now is None else float(now)
+        self.updates += int(m * len(slots))
+        return feats
+
+    def drop_block(self, sessions, n: int) -> None:
+        """Synchronously drop each block session's ``n`` oldest increments
+        (the exact left-inverse update)."""
+        slots = self._slots_of(sessions)
+        if self.ring_capacity == 0:
+            raise ValueError("rolling_drop needs ring buffers: build the "
+                             "store with ring_capacity > 0")
+        shortest = int(self._length[slots].min()) if len(slots) else 0
+        if not 0 <= n <= shortest:
+            raise ValueError(f"cannot drop {n} increments from a window of "
+                             f"length {shortest}")
+        if n == 0:
+            return
+        key = ("drop", len(slots), int(n), self._carry.size)
+
+        def make():
+            def step(carry, idx):
+                sub = stream_take(carry, idx)
+                sub = stream_rolling_drop(sub, int(n))
+                return stream_scatter(carry, idx, sub)
+            return jax.jit(step, donate_argnums=self._donate)
+
+        fn = self._jit.get(key, make)
+        with self._mesh_scope():
+            self._carry = fn(self._carry, jnp.asarray(slots))
+        self._shape_keys.add(key)
+        self._length[slots] -= n
+
+    def reset_block(self, sessions) -> None:
+        """Zero a block's windows in place (lengths back to 0, handles stay
+        valid)."""
+        slots = self._slots_of(sessions)
+        fresh = stream_init(len(slots), self.d, self.depth,
+                            capacity=self.ring_capacity, dtype=self.dtype,
+                            valid=True)
+        self._carry = stream_scatter(self._carry, jnp.asarray(slots), fresh)
+        self._length[slots] = 0
+        self._end[slots] = 0
+
+    # -- accounting --------------------------------------------------------
+
+    def stats(self) -> dict:
+        """Occupancy / eviction / flush-shape / staleness accounting."""
+        stale = np.asarray(self._staleness) if self._staleness else \
+            np.zeros(0)
+        return {
+            "sessions": len(self._ids),
+            "pool_size": self._carry.size,
+            "occupancy": len(self._ids) / self._carry.size,
+            "pool_sizes": list(self._pool_sizes),
+            "created": self.created,
+            "evictions": dict(self.evictions),
+            "updates": self.updates,
+            "flushes": self.flushes,
+            "pending_sessions": self.pending_sessions,
+            "pending_ticks": self.pending_ticks,
+            "flush_shapes": sorted(self._flush_shapes),
+            "compiled_shapes": len(self._shape_keys),
+            "compute_cache": dict(self._jit.info()._asdict()),
+            "devices": self._batch_shards(),
+            "p50_staleness_s": float(np.percentile(stale, 50)) if len(stale)
+            else 0.0,
+            "p99_staleness_s": float(np.percentile(stale, 99)) if len(stale)
+            else 0.0,
+            "now": self.now,
+        }
+
+    # -- checkpoint / restore ----------------------------------------------
+
+    def _host_state(self) -> dict:
+        return {
+            "kind": "session_store",
+            "d": self.d, "depth": self.depth,
+            "ring_capacity": self.ring_capacity,
+            "pool_size": self._carry.size,
+            "max_sessions": self.max_sessions, "ttl": self.ttl,
+            "max_ticks": self.max_ticks, "max_rows": self.max_rows,
+            "backend": self.backend, "lru_evict": self.lru_evict,
+            "dtype": str(np.dtype(self.dtype)),
+            "ids": [[sid, int(slot)] for sid, slot in self._ids.items()],
+            "generation": self._generation.tolist(),
+            "valid": self._valid.astype(int).tolist(),
+            "length": self._length.tolist(),
+            "end": self._end.tolist(),
+            "last_seen": self._last_seen.tolist(),
+            "free": list(self._free),
+            "auto_sid": self._auto_sid,
+            "now": self.now,
+            "created": self.created, "updates": self.updates,
+            "flushes": self.flushes,
+            "evictions": dict(self.evictions),
+            "pool_sizes": list(self._pool_sizes),
+            "flush_shapes": sorted(self._flush_shapes),
+        }
+
+    def checkpoint(self, ckptr: Checkpointer, step: int) -> None:
+        """Write the whole pool (device carry + host metadata).  Pending
+        ticks are flushed first, so a restore resumes every session from
+        exactly this state."""
+        if self._pending:
+            self.flush()
+        ckptr.save(self._carry, {}, step, extra=self._host_state())
+
+    @classmethod
+    def restore(cls, ckptr: Checkpointer, *, step: Optional[int] = None,
+                backend: Optional[str] = None, mesh=None,
+                mesh_rules: Optional[dict] = None) -> "SessionStore":
+        """Rebuild a store from a checkpoint, bit-identically: every
+        session's signature, ring, occupancy, id, generation and the
+        logical clock come back exactly.  ``mesh`` (or the ambient context)
+        re-places the pool — restarts may change topology."""
+        extra = ckptr.peek_extra(step)
+        if extra.get("kind") != "session_store":
+            raise ValueError(f"checkpoint is not a session pool: {extra!r}")
+        store = cls(
+            extra["d"], extra["depth"],
+            ring_capacity=extra["ring_capacity"],
+            initial_sessions=extra["pool_size"],
+            max_sessions=extra["max_sessions"], ttl=extra["ttl"],
+            max_ticks=extra["max_ticks"], max_rows=extra["max_rows"],
+            backend=backend or extra["backend"],
+            lru_evict=extra["lru_evict"],
+            dtype=jnp.dtype(extra["dtype"]), mesh=mesh,
+            mesh_rules=mesh_rules)
+        if store.pool_size != extra["pool_size"]:
+            raise ValueError(f"pool size {extra['pool_size']} does not "
+                             f"round-trip (got {store.pool_size})")
+        sh = store._pool_shardings()
+        carry, _, _ = ckptr.restore(
+            store._carry, {}, step,
+            shardings={"params": sh, "opt_state": {}} if sh is not None
+            else None)
+        store._carry = carry
+        store._ids = {sid: int(slot) for sid, slot in extra["ids"]}
+        store._generation = np.asarray(extra["generation"], np.int64)
+        store._valid = np.asarray(extra["valid"], bool)
+        store._length = np.asarray(extra["length"], np.int64)
+        store._end = np.asarray(extra["end"], np.int64)
+        store._last_seen = np.asarray(extra["last_seen"], np.float64)
+        store._free = list(extra["free"])
+        store._auto_sid = int(extra["auto_sid"])
+        store.now = float(extra["now"])
+        store.created = int(extra["created"])
+        store.updates = int(extra["updates"])
+        store.flushes = int(extra["flushes"])
+        store.evictions = dict(extra["evictions"])
+        store._pool_sizes = list(extra["pool_sizes"])
+        store._flush_shapes = {tuple(s) for s in extra["flush_shapes"]}
+        return store

@@ -1,0 +1,558 @@
+"""Pooled multi-tenant session layer: SessionStore semantics, traffic,
+checkpoint/restore bit-identity, and the bounded serving caches.
+
+Four testable contracts:
+
+1. *Pool semantics*: continuous-batching ingest through one struct-of-arrays
+   pool matches per-session oracles exactly; slots recycle through free
+   list + generation counters; TTL/LRU eviction and grow-by-doubling keep
+   occupancy honest; invalid input raises BEFORE any device work.
+2. *Traffic*: ``SessionTickStream`` is deterministic under seed and
+   seekable (state/restore replays the same rounds).
+3. *Checkpoint/restore*: SignatureStream carries, RaggedPaths, and the
+   whole session pool round-trip through ``repro.checkpoint`` bit-identical
+   — single-device here, and an 8-device mesh twin in a subprocess
+   (test_shard.py pattern; XLA locks the device count at first init).
+4. *Bounded caches*: the per-shape jitted computes of DynamicBatcher and
+   SessionStore live under the shared plan-cache policy — eviction is a
+   pure perf event (results identical at maxsize=1).
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import Checkpointer
+from repro.core.signature import signature_from_increments
+from repro.core.stream import StreamCarry, signature_stream_init, stream_init
+from repro.data import SessionTickStream, session_tick_stream
+from repro.serve import SessionStore, SigStreamEngine
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def _oracle(chunks, depth):
+    allinc = np.concatenate(chunks)
+    return np.asarray(signature_from_increments(
+        jnp.asarray(allinc)[None], depth)[0])
+
+
+# ---------------------------------------------------------------------------
+# pool semantics
+# ---------------------------------------------------------------------------
+
+def test_session_pool_matches_per_row_oracle(rng):
+    d, depth = 3, 3
+    store = SessionStore(d, depth, ring_capacity=64, initial_sessions=4,
+                         max_ticks=8)
+    handles = [store.create(f"u{i}") for i in range(10)]
+    truth = {h.sid: [] for h in handles}
+    for _ in range(3):
+        for h in handles:
+            if rng.random() < 0.3:
+                continue                      # bursty: not everyone ticks
+            inc = rng.normal(size=(int(rng.integers(1, 12)), d)) \
+                .astype(np.float32)
+            store.ingest(h.sid, inc)
+            truth[h.sid].append(inc)
+        store.flush()
+    for h in handles:
+        if not truth[h.sid]:
+            assert store.length(h.sid) == 0
+            continue
+        np.testing.assert_allclose(np.asarray(store.features(h.sid)),
+                                   _oracle(truth[h.sid], depth),
+                                   atol=1e-5, err_msg=h.sid)
+        assert store.length(h.sid) == sum(c.shape[0] for c in truth[h.sid])
+    st = store.stats()
+    assert st["sessions"] == 10 and st["pending_ticks"] == 0
+    assert st["updates"] == sum(c.shape[0] for v in truth.values()
+                                for c in v)
+    # every flushed shape is a (pow2 tick rung, pow2 row rung) pair
+    for rung, B in st["flush_shapes"]:
+        assert rung & (rung - 1) == 0 and rung <= store.max_ticks
+        assert B & (B - 1) == 0
+
+
+def test_session_ingest_many_matches_ingest(rng):
+    d, depth = 2, 3
+    a = SessionStore(d, depth, initial_sessions=4)
+    b = SessionStore(d, depth, initial_sessions=4)
+    sids = [f"s{i}" for i in range(6)]
+    counts = rng.integers(1, 9, size=6)
+    ticks = rng.normal(size=(int(counts.sum()), d)).astype(np.float32)
+    b.create_many(sids)
+    a.ingest_many(sids, counts, ticks, auto_create=True)   # arrival path
+    bounds = np.cumsum(counts)[:-1]
+    for sid, chunk in zip(sids, np.split(ticks, bounds)):
+        b.ingest(sid, chunk)
+    a.flush()
+    b.flush()
+    for sid in sids:
+        np.testing.assert_array_equal(np.asarray(a.features(sid)),
+                                      np.asarray(b.features(sid)))
+
+
+def test_session_validation_errors(rng):
+    d, depth = 2, 2
+    store = SessionStore(d, depth, ring_capacity=4, initial_sessions=2)
+    store.create("u")
+    with pytest.raises(ValueError, match="already exists"):
+        store.create("u")
+    with pytest.raises(KeyError, match="unknown session"):
+        store.lookup("nope")
+    with pytest.raises(ValueError, match=r"must be \(m, 2\)"):
+        store.ingest("u", np.zeros((3, 5), np.float32))
+    with pytest.raises(ValueError, match="counts sum"):
+        store.ingest_many(["u"], [3], np.zeros((2, d), np.float32))
+    h = store.lookup("u")
+    store.evict("u")
+    with pytest.raises(ValueError, match="stale session handle"):
+        store.lookup(h)
+    with pytest.raises(ValueError, match="stale session handle"):
+        store.ingest(h, np.zeros((1, d), np.float32))
+    # ring overflow raises BEFORE any device work, pool untouched
+    store.create("v")
+    store.ingest("v", rng.normal(size=(3, d)).astype(np.float32))
+    store.flush()
+    before = np.asarray(store.pool.sig)
+    store.ingest("v", rng.normal(size=(2, d)).astype(np.float32))
+    with pytest.raises(ValueError, match="rolling_drop at least 1"):
+        store.flush()
+    np.testing.assert_array_equal(np.asarray(store.pool.sig), before)
+
+
+def test_session_occupancy_errors_raise_through_pooled_engine_path(rng):
+    # the SignatureStream occupancy contract survives the SessionStore
+    # re-backing: block extends past the ring raise the same way
+    eng = SigStreamEngine(d=2, depth=2, batch=2, window=8, backend="jax")
+    with pytest.raises(ValueError, match="rolling_drop at least"):
+        eng.store.extend_block(eng.handles,
+                               np.zeros((2, 9, 2), np.float32))
+    with pytest.raises(ValueError, match="cannot drop"):
+        eng.store.drop_block(eng.handles, 1)
+    nowin = SessionStore(2, 2, initial_sessions=2)
+    blk = nowin.create_block(2)
+    with pytest.raises(ValueError, match="ring_capacity > 0"):
+        nowin.drop_block(blk, 1)
+
+
+def test_session_ttl_and_lru_eviction(rng):
+    st = SessionStore(2, 2, initial_sessions=4, ttl=2.0)
+    st.create("x", now=0.0)
+    st.create("y", now=0.0)
+    st.ingest("y", rng.normal(size=(2, 2)).astype(np.float32), now=3.0)
+    st.flush(now=3.5)                        # sweeps: x idle > ttl
+    assert "x" not in st and "y" in st
+    assert st.evictions["ttl"] == 1
+
+    lru = SessionStore(2, 2, initial_sessions=2, max_sessions=2)
+    lru.create("p", now=0.0)
+    lru.create("q", now=1.0)
+    lru.ingest("p", rng.normal(size=(1, 2)).astype(np.float32), now=2.0)
+    lru.create("r", now=3.0)                 # full: evicts q (oldest seen)
+    assert "q" not in lru and "p" in lru and "r" in lru
+    assert lru.evictions["lru"] == 1 and len(lru) == 2
+
+    strict = SessionStore(2, 2, initial_sessions=2, max_sessions=2,
+                          lru_evict=False)
+    strict.create_many(["a", "b"])
+    with pytest.raises(RuntimeError, match="pool full"):
+        strict.create("c")
+
+
+def test_session_slot_reuse_bumps_generation(rng):
+    store = SessionStore(2, 2, initial_sessions=2, max_sessions=2)
+    h_old = store.create("old")
+    store.ingest("old", rng.normal(size=(4, 2)).astype(np.float32))
+    store.flush()
+    store.evict("old")
+    h_new = store.create("new")              # reuses the freed slot
+    assert h_new.slot == h_old.slot
+    assert h_new.generation == h_old.generation + 1
+    # the recycled slot is a FRESH session, not the old tenant's state
+    assert store.length("new") == 0
+    np.testing.assert_array_equal(np.asarray(store.features("new")), 0.0)
+    with pytest.raises(ValueError, match="stale session handle"):
+        store.lookup(h_old)
+
+
+def test_session_pool_growth_preserves_rows(rng):
+    d, depth = 3, 2
+    store = SessionStore(d, depth, initial_sessions=2)
+    store.create("keep")
+    inc = rng.normal(size=(5, d)).astype(np.float32)
+    store.ingest("keep", inc)
+    store.flush()
+    before = np.asarray(store.features("keep"))
+    store.create_many([f"g{i}" for i in range(40)])   # forces doublings
+    assert store.pool_size >= 41
+    st = store.stats()
+    assert st["pool_sizes"] == sorted(st["pool_sizes"])
+    assert len(st["pool_sizes"]) >= 3                 # grew by doubling
+    np.testing.assert_array_equal(np.asarray(store.features("keep")),
+                                  before)
+    assert store.length("keep") == 5
+
+
+def test_session_flush_shapes_stay_bounded(rng):
+    # adversarial traffic: every distinct (ticking-set size, tick count)
+    # combination — compiled shapes must stay under the rung-grid bound
+    d, depth = 2, 2
+    store = SessionStore(d, depth, initial_sessions=32, max_ticks=16)
+    store.create_many([f"u{i}" for i in range(30)])
+    for r in range(12):
+        k = int(rng.integers(1, 30))
+        for sid in rng.choice(30, size=k, replace=False):
+            m = int(rng.integers(1, 17))
+            store.ingest(f"u{sid}",
+                         rng.normal(size=(m, d)).astype(np.float32))
+        store.flush()
+    st = store.stats()
+    n_tick_rungs = int(np.log2(store.max_ticks)) + 1
+    n_row_rungs = int(np.log2(store.max_rows)) + 1
+    bound = n_tick_rungs * n_row_rungs * len(st["pool_sizes"])
+    assert st["compiled_shapes"] <= bound, st
+    assert st["compute_cache"]["currsize"] <= st["compiled_shapes"] + 4
+
+
+# ---------------------------------------------------------------------------
+# traffic generator
+# ---------------------------------------------------------------------------
+
+def test_session_tick_stream_deterministic_and_seekable():
+    kw = dict(seed=11, arrival_rate=2.0, churn_prob=0.05)
+    a = session_tick_stream(40, 3, **kw)
+    b = session_tick_stream(40, 3, **kw)
+    for _ in range(4):
+        ra, rb = next(a), next(b)
+        assert ra["sids"] == rb["sids"]
+        np.testing.assert_array_equal(ra["counts"], rb["counts"])
+        np.testing.assert_array_equal(ra["ticks"], rb["ticks"])
+        assert ra["departures"] == rb["departures"]
+    state = a.state()
+    r1 = next(a)
+    c = SessionTickStream(40, 3, **kw)
+    c.restore(state)
+    r2 = next(c)
+    assert r1["sids"] == r2["sids"]
+    np.testing.assert_array_equal(r1["ticks"], r2["ticks"])
+    assert r1["departures"] == r2["departures"]
+
+
+def test_session_tick_stream_is_heavy_tailed_and_feeds_store():
+    totals = {}
+    s = session_tick_stream(150, 2, seed=1)
+    store = SessionStore(2, 2, initial_sessions=8)
+    for _ in range(20):
+        r = next(s)
+        assert r["ticks"].shape == (int(r["counts"].sum()), 2)
+        assert (r["counts"] >= 1).all() and \
+            (r["counts"] <= s.max_ticks).all()
+        store.ingest_many(r["sids"], r["counts"], r["ticks"],
+                          auto_create=True)
+        store.flush()
+        for sid, cnt in zip(r["sids"], r["counts"]):
+            totals[sid] = totals.get(sid, 0) + int(cnt)
+    v = np.asarray(sorted(totals.values()))
+    assert v.max() / max(np.percentile(v, 50), 1) > 4   # whales exist
+    assert store.stats()["updates"] == int(v.sum())
+
+
+# ---------------------------------------------------------------------------
+# checkpoint round trips (bit-identical)
+# ---------------------------------------------------------------------------
+
+def test_stream_carry_checkpoint_roundtrip(rng, tmp_path):
+    d, depth = 3, 3
+    ck = Checkpointer(str(tmp_path), async_save=False)
+    state = signature_stream_init(4, d, depth, capacity=8)
+    state = state.extend(jnp.asarray(
+        rng.normal(size=(4, 6, d)).astype(np.float32)))
+    pooled = stream_init(5, d, depth, capacity=8, valid=True)
+    from repro.core.stream import stream_extend
+    pooled = stream_extend(pooled, jnp.asarray(
+        rng.normal(size=(5, 3, d)).astype(np.float32)),
+        counts=jnp.asarray([3, 0, 2, 3, 1], jnp.int32))
+    ck.save({"view": state, "pool": pooled}, {}, 1)
+    like = {"view": signature_stream_init(4, d, depth, capacity=8)
+            .extend(jnp.zeros((4, 6, d), jnp.float32)),
+            "pool": stream_init(5, d, depth, capacity=8)}
+    got, _, _ = ck.restore(like, {})
+    for lane in ("sig", "ring"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(got["view"], lane)),
+            np.asarray(getattr(state, lane)))
+    for lane in ("sig", "ring", "length", "end", "valid"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(got["pool"], lane)),
+            np.asarray(getattr(pooled, lane)))
+    assert isinstance(got["pool"], StreamCarry)
+    assert (got["pool"].d, got["pool"].depth) == (d, depth)
+
+
+def test_ragged_paths_checkpoint_roundtrip(rng, tmp_path):
+    from repro.ragged import RaggedPaths
+    ck = Checkpointer(str(tmp_path), async_save=False)
+    rp = RaggedPaths.from_list(
+        [rng.normal(size=(L + 1, 2)).astype(np.float32)
+         for L in (3, 7, 5)], pad_to=8)
+    ck.save(rp, {}, 3)
+    like = RaggedPaths(values=jnp.zeros_like(rp.values),
+                       lengths=jnp.zeros_like(rp.lengths))
+    got, _, _ = ck.restore(like, {})
+    np.testing.assert_array_equal(np.asarray(got.values),
+                                  np.asarray(rp.values))
+    np.testing.assert_array_equal(np.asarray(got.lengths),
+                                  np.asarray(rp.lengths))
+
+
+def test_session_store_checkpoint_restart_resume(rng, tmp_path):
+    d, depth = 3, 3
+    ck = Checkpointer(str(tmp_path), async_save=False)
+    store = SessionStore(d, depth, ring_capacity=512, initial_sessions=4,
+                         ttl=100.0)
+    traffic = session_tick_stream(12, d, seed=3)
+    for _ in range(3):
+        r = next(traffic)
+        store.ingest_many(r["sids"], r["counts"], r["ticks"],
+                          auto_create=True)
+        store.flush()
+    store.evict(next(iter(store._ids)))      # a freed slot must round-trip
+    store.checkpoint(ck, step=5)
+
+    restored = SessionStore.restore(ck)
+    # bit-identical pool and host metadata
+    for lane in ("sig", "ring", "length", "end", "valid"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(restored.pool, lane)),
+            np.asarray(getattr(store.pool, lane)), err_msg=lane)
+    assert restored._ids == store._ids
+    assert restored._free == store._free
+    assert restored.now == store.now
+    assert restored.stats()["evictions"] == store.stats()["evictions"]
+    for sid in store._ids:
+        h_old, h_new = store.lookup(sid), restored.lookup(sid)
+        assert h_old.slot == h_new.slot
+        assert h_old.generation == h_new.generation
+
+    # resume: identical traffic -> identical state on both sides
+    tr2 = session_tick_stream(12, d, seed=3)
+    tr2.restore(traffic.state())
+    for src, st in ((traffic, store), (tr2, restored)):
+        r = next(src)
+        live = [s for s in r["sids"] if s in st]
+        keep = [i for i, s in enumerate(r["sids"]) if s in st]
+        counts = r["counts"][keep]
+        chunks = np.split(r["ticks"], np.cumsum(r["counts"])[:-1])
+        ticks = np.concatenate([chunks[i] for i in keep]) if keep else \
+            np.zeros((0, d), np.float32)
+        if live:
+            st.ingest_many(live, counts, ticks)
+            st.flush()
+    for sid in store._ids:
+        np.testing.assert_array_equal(
+            np.asarray(store.features(sid)),
+            np.asarray(restored.features(sid)), err_msg=sid)
+
+    # restored pool keeps evicting / admitting correctly
+    h = restored.create("fresh")
+    assert h.sid in restored
+    restored.evict("fresh")
+
+
+def test_session_store_restore_rejects_non_pool_checkpoint(tmp_path):
+    ck = Checkpointer(str(tmp_path), async_save=False)
+    ck.save({"w": jnp.zeros((2, 2))}, {}, 1, extra={"kind": "model"})
+    with pytest.raises(ValueError, match="not a session pool"):
+        SessionStore.restore(ck)
+
+
+# ---------------------------------------------------------------------------
+# engines on the shared pool
+# ---------------------------------------------------------------------------
+
+def test_engine_joins_shared_multi_tenant_pool(rng):
+    d, depth = 2, 3
+    pool = SessionStore(d, depth, ring_capacity=16, initial_sessions=8)
+    pool.create("tenant")
+    tchunks = [rng.normal(size=(4, d)).astype(np.float32)]
+    pool.ingest("tenant", tchunks[0])
+    pool.flush()
+
+    shared = SigStreamEngine(d=d, depth=depth, batch=3, window=12,
+                             backend="jax", store=pool)
+    private = SigStreamEngine(d=d, depth=depth, batch=3, window=12,
+                              backend="jax")
+    x = rng.normal(size=(3, 20, d)).astype(np.float32) * 0.3
+    for k in range(5):
+        fa = shared.push(x[:, 4 * k:4 * (k + 1)])
+        fb = private.push(x[:, 4 * k:4 * (k + 1)])
+        np.testing.assert_allclose(np.asarray(fa), np.asarray(fb),
+                                   atol=1e-6)
+    assert shared.store is pool and shared.state.length <= 12
+    # the tenant's state survived the engine traffic in the same pool
+    np.testing.assert_allclose(np.asarray(pool.features("tenant")),
+                               _oracle(tchunks, depth), atol=1e-5)
+    with pytest.raises(ValueError, match="needs >= "):
+        SigStreamEngine(d=d, depth=depth, batch=2, window=32,
+                        backend="jax", store=pool)
+    with pytest.raises(ValueError, match="but the engine needs"):
+        SigStreamEngine(d=d, depth=depth + 1, batch=2, backend="jax",
+                        store=SessionStore(d, depth))
+
+
+# ---------------------------------------------------------------------------
+# bounded serving caches: eviction is a pure perf event
+# ---------------------------------------------------------------------------
+
+def test_batcher_and_pool_cache_eviction_never_changes_results(rng):
+    from repro.kernels import ops
+    from repro.serve import DynamicBatcher
+
+    reqs = [rng.normal(size=(L + 1, 2)).astype(np.float32)
+            for L in (3, 20, 7, 40, 12, 2)]
+
+    def serve(maxsize):
+        db = DynamicBatcher.signature_service(2, 3, max_len=64,
+                                              backend="jax", min_bucket=4,
+                                              max_batch=4)
+        out = []
+        for p in reqs:                        # one flush per request:
+            t = db.submit(p)                  # alternate shapes -> evict
+            out.append(np.asarray(db.flush()[t]))
+        return out, db
+
+    ref, _ = serve(None)
+    old = ops.PLAN_CACHE_MAXSIZE
+    try:
+        ops.set_plan_cache_maxsize(1)
+        got, db = serve(1)
+        info = db.stats()["compute_cache"]
+        assert info["maxsize"] == 1 and info["currsize"] <= 1
+        assert info["misses"] > len(db.stats()["shapes"])   # re-jits happened
+        for a, b in zip(got, ref):
+            np.testing.assert_array_equal(a, b)
+
+        # same policy bounds the session pool's flush computes
+        store = SessionStore(2, 2, initial_sessions=4, max_ticks=8)
+        store.create_many(["a", "b"])
+        truth = {"a": [], "b": []}
+        for m in (1, 5, 2, 8, 3, 1):          # alternate rungs -> evict
+            inc = rng.normal(size=(m, 2)).astype(np.float32)
+            store.ingest("a", inc)
+            truth["a"].append(inc)
+            store.flush()
+        ci = store.stats()["compute_cache"]
+        assert ci["maxsize"] == 1 and ci["currsize"] <= 1
+        np.testing.assert_allclose(np.asarray(store.features("a")),
+                                   _oracle(truth["a"], 2), atol=1e-5)
+    finally:
+        ops.set_plan_cache_maxsize(old)
+
+    # the pool's cache family is visible to the global registry
+    store2 = SessionStore(2, 2, initial_sessions=2)
+    store2.create("x")
+    store2.ingest("x", np.zeros((2, 2), np.float32))
+    store2.flush()
+    info = ops.plan_cache_info()
+    assert "session_flush" in info
+    assert "dynamic_batcher_compute" in info
+
+
+# ---------------------------------------------------------------------------
+# 8-device mesh twin (subprocess: XLA locks the device count at first init)
+# ---------------------------------------------------------------------------
+
+_MESH_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import tempfile
+    import jax, jax.numpy as jnp
+    import numpy as np
+    from repro.checkpoint import Checkpointer
+    from repro.data import session_tick_stream
+    from repro.launch.mesh import make_sig_mesh
+    from repro.serve import SessionStore
+
+    assert len(jax.devices()) == 8, jax.devices()
+    mesh = make_sig_mesh()
+    d, depth = 3, 3
+
+    def play(store, seed=7, rounds=3):
+        tr = session_tick_stream(24, d, seed=seed)
+        for _ in range(rounds):
+            r = next(tr)
+            store.ingest_many(r["sids"], r["counts"], r["ticks"],
+                              auto_create=True)
+            store.flush()
+        return store
+
+    ref = play(SessionStore(d, depth, initial_sessions=8))
+    dist = play(SessionStore(d, depth, initial_sessions=8, mesh=mesh))
+    st = dist.stats()
+    assert st["devices"] == 8, st
+    assert dist.pool_size % 8 == 0, dist.pool_size
+    assert dist._ids == ref._ids
+    for sid in ref._ids:
+        np.testing.assert_allclose(np.asarray(dist.features(sid)),
+                                   np.asarray(ref.features(sid)),
+                                   rtol=1e-6, atol=1e-6, err_msg=sid)
+    print("ok spmd ingest", flush=True)
+
+    # checkpoint on the mesh -> restore on the mesh AND off it (elastic):
+    # both bit-identical to the saved pool
+    tmp = tempfile.mkdtemp()
+    ck = Checkpointer(tmp, async_save=False)
+    dist.checkpoint(ck, step=2)
+    saved = {lane: np.asarray(getattr(dist.pool, lane))
+             for lane in ("sig", "ring", "length", "end", "valid")}
+    back_mesh = SessionStore.restore(ck, mesh=mesh)
+    back_1dev = SessionStore.restore(ck)
+    for name, back in (("mesh", back_mesh), ("1dev", back_1dev)):
+        for lane, want in saved.items():
+            np.testing.assert_array_equal(
+                np.asarray(getattr(back.pool, lane)), want,
+                err_msg=f"{name}/{lane}")
+        assert back._ids == dist._ids
+        assert back.now == dist.now
+    assert back_mesh.stats()["devices"] == 8
+    print("ok elastic restore", flush=True)
+
+    # resume: same traffic into original and mesh-restored twin
+    tr = session_tick_stream(24, d, seed=99)
+    r = next(tr)
+    live = [s for s in r["sids"] if s in dist]
+    keep = [i for i, s in enumerate(r["sids"]) if s in dist]
+    chunks = np.split(r["ticks"], np.cumsum(r["counts"])[:-1])
+    ticks = (np.concatenate([chunks[i] for i in keep]) if keep
+             else np.zeros((0, d), np.float32))
+    for stst in (dist, back_mesh):
+        if live:
+            stst.ingest_many(live, r["counts"][keep], ticks)
+            stst.flush()
+    for sid in dist._ids:
+        np.testing.assert_array_equal(np.asarray(dist.features(sid)),
+                                      np.asarray(back_mesh.features(sid)),
+                                      err_msg=sid)
+    print("SESSOK mesh", flush=True)
+""")
+
+
+def test_session_store_sharded_subprocess():
+    env = dict(os.environ, PYTHONPATH="src")
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", _MESH_SCRIPT],
+                       capture_output=True, text=True, env=env,
+                       cwd=os.path.dirname(os.path.dirname(__file__)),
+                       timeout=420)
+    assert r.returncode == 0, (r.stdout[-2000:], r.stderr[-3000:])
+    assert "SESSOK mesh" in r.stdout
