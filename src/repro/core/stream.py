@@ -239,10 +239,12 @@ def stream_extend(carry: StreamCarry, increments: jax.Array, *,
     R = carry.capacity
     if R:
         rows = jnp.arange(N)[:, None]
-        idx = (carry.end[:, None] + jnp.arange(m)) % R          # (N, m)
-        cur = carry.ring[rows, idx]
-        ring = carry.ring.at[rows, idx].set(
-            jnp.where(mask[..., None], inc, cur))
+        # Masked positions scatter to index R (out of range, mode="drop")
+        # instead of writing back the stale current value: when m > R the
+        # wrapped indices collide, and a stale write-back for a masked
+        # position would clobber a freshly written increment.
+        idx = jnp.where(mask, (carry.end[:, None] + jnp.arange(m)) % R, R)
+        ring = carry.ring.at[rows, idx].set(inc, mode="drop")
         end = (carry.end + counts) % R
     else:
         ring, end = carry.ring, carry.end

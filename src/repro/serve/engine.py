@@ -99,6 +99,17 @@ def _engine_block(engine, store: SessionStore | None) -> SessionStore:
             raise ValueError(
                 f"shared store rings hold {store.ring_capacity} increments; "
                 f"the engine's hopping window needs >= {engine.window}")
+        if jnp.dtype(store.dtype) != jnp.dtype(engine.dtype):
+            raise ValueError(
+                f"shared store holds {jnp.dtype(store.dtype)} pool state but "
+                f"the engine asked for dtype={jnp.dtype(engine.dtype)}; pool "
+                f"updates always run in the store's dtype")
+        if engine.backend not in ("auto", store.backend):
+            raise ValueError(
+                f"shared store dispatches pool updates on "
+                f"backend={store.backend!r} but the engine asked for "
+                f"backend={engine.backend!r}; pass backend='auto' (or the "
+                f"store's backend) to join a shared pool")
     engine._handles = store.create_block(
         engine.batch, prefix=f"{type(engine).__name__.lower()}/")
     return store

@@ -168,6 +168,7 @@ class SessionStore:
         self.updates = 0                    # ticks applied to the pool
         self.flushes = 0
         self.evictions = {"explicit": 0, "ttl": 0, "lru": 0}
+        self.dropped_ticks = 0              # queued ticks lost to eviction
 
     # -- mesh placement ----------------------------------------------------
 
@@ -264,14 +265,25 @@ class SessionStore:
             if sid in out_sids:
                 raise ValueError(f"duplicate sid {sid!r} in create_many")
             out_sids.append(sid)
-        slots = [self._take_slot(now) for _ in out_sids]
+        if self.max_sessions is not None and not self.lru_evict and \
+                len(self._ids) + len(out_sids) > self.max_sessions:
+            raise RuntimeError(
+                f"session pool full: admitting {len(out_sids)} sessions "
+                f"would hold {len(self._ids) + len(out_sids)} > "
+                f"max_sessions={self.max_sessions} and lru_evict is off")
+        # admission is interleaved: each sid registers as its slot is taken,
+        # so _take_slot's max_sessions check sees the in-flight creations
+        # (bulk creates respect the strict bound, LRU-evicting per slot)
+        slots = []
         handles = []
-        for sid, slot in zip(out_sids, slots):
+        for sid in out_sids:
+            slot = self._take_slot(now)
             self._ids[sid] = slot
             self._valid[slot] = True
             self._length[slot] = 0
             self._end[slot] = 0
             self._last_seen[slot] = now
+            slots.append(slot)
             handles.append(SessionHandle(sid, slot,
                                          int(self._generation[slot])))
         self.created += len(handles)
@@ -287,7 +299,12 @@ class SessionStore:
         if self.max_sessions is not None and \
                 len(self._ids) >= self.max_sessions:
             if self.lru_evict and self._ids:
-                victim = min(self._ids,
+                # prefer victims without queued ticks: ingest() already
+                # acknowledged that data, so drop it only when every live
+                # session is pending (the drop is counted in stats)
+                idle = [s for s in self._ids
+                        if self._ids[s] not in self._pending]
+                victim = min(idle or self._ids,
                              key=lambda s: self._last_seen[self._ids[s]])
                 self._evict_sids([victim], reason="lru")
             else:
@@ -326,7 +343,9 @@ class SessionStore:
             slot = self._ids.pop(sid)
             self._valid[slot] = False
             self._generation[slot] += 1
-            self._pending.pop(slot, None)
+            dropped = self._pending.pop(slot, None)
+            if dropped is not None:
+                self.dropped_ticks += dropped.ticks
             self._free.append(slot)
             slots.append(slot)
         self.evictions[reason] = self.evictions.get(reason, 0) + len(sids)
@@ -677,6 +696,7 @@ class SessionStore:
             "pool_sizes": list(self._pool_sizes),
             "created": self.created,
             "evictions": dict(self.evictions),
+            "dropped_ticks": self.dropped_ticks,
             "updates": self.updates,
             "flushes": self.flushes,
             "pending_sessions": self.pending_sessions,
@@ -716,6 +736,7 @@ class SessionStore:
             "created": self.created, "updates": self.updates,
             "flushes": self.flushes,
             "evictions": dict(self.evictions),
+            "dropped_ticks": self.dropped_ticks,
             "pool_sizes": list(self._pool_sizes),
             "flush_shapes": sorted(self._flush_shapes),
         }
@@ -771,6 +792,7 @@ class SessionStore:
         store.updates = int(extra["updates"])
         store.flushes = int(extra["flushes"])
         store.evictions = dict(extra["evictions"])
+        store.dropped_ticks = int(extra.get("dropped_ticks", 0))
         store._pool_sizes = list(extra["pool_sizes"])
         store._flush_shapes = {tuple(s) for s in extra["flush_shapes"]}
         return store

@@ -169,6 +169,76 @@ def test_session_ttl_and_lru_eviction(rng):
         strict.create("c")
 
 
+def test_session_flush_rung_wider_than_ring_stays_exact(rng):
+    """Non-power-of-two ring + a tick count padded to a wider rung: the
+    flush's padded extend used to zero wrapped ring slots, so the next
+    rolling_drop silently corrupted the window signature."""
+    d, depth, R = 2, 3, 5
+    store = SessionStore(d, depth, ring_capacity=R, initial_sessions=2)
+    h = store.create("u")
+    inc = rng.normal(size=(R, d)).astype(np.float32)
+    store.ingest(h, inc)
+    store.flush()                            # 5 ticks pad to rung 8 > R
+    store.drop_block([h], 2)
+    ref = np.asarray(signature_from_increments(
+        jnp.asarray(inc[2:])[None], depth)[0])
+    np.testing.assert_allclose(np.asarray(store.features(h)), ref,
+                               rtol=1e-5, atol=1e-6)
+    assert store.length(h) == R - 2
+
+
+def test_create_many_respects_max_sessions(rng):
+    # bulk admission sees its own in-flight creations: the strict bound
+    # holds, LRU-evicting the earliest-admitted sessions per extra slot
+    store = SessionStore(2, 2, initial_sessions=4, max_sessions=4)
+    store.create_many([f"u{i}" for i in range(6)])
+    assert len(store) == 4
+    assert store.evictions["lru"] == 2
+    assert "u0" not in store and "u1" not in store
+    assert all(f"u{i}" in store for i in range(2, 6))
+
+    strict = SessionStore(2, 2, initial_sessions=4, max_sessions=4,
+                          lru_evict=False)
+    strict.create_many(["a", "b"])
+    with pytest.raises(RuntimeError, match="pool full"):
+        strict.create_many(["c", "d", "e"])
+    assert len(strict) == 2                  # atomic: no partial admission
+
+
+def test_lru_eviction_prefers_sessions_without_pending_ticks(rng):
+    store = SessionStore(2, 2, initial_sessions=2, max_sessions=2)
+    store.create("a", now=0.0)
+    store.create("b", now=1.0)
+    # "a" is least-recently seen but has acknowledged (queued) ticks, so
+    # the idle "b" is the LRU victim instead
+    store.ingest("a", rng.normal(size=(3, 2)).astype(np.float32), now=0.5)
+    store.create("c", now=2.0)
+    assert "a" in store and "b" not in store and "c" in store
+    assert store.stats()["dropped_ticks"] == 0
+    store.flush()
+
+    # every live session pending: fall back to true LRU, accounting the drop
+    allp = SessionStore(2, 2, initial_sessions=2, max_sessions=2)
+    allp.create("p", now=0.0)
+    allp.create("q", now=1.0)
+    allp.ingest("p", rng.normal(size=(4, 2)).astype(np.float32), now=0.0)
+    allp.ingest("q", rng.normal(size=(2, 2)).astype(np.float32), now=1.0)
+    allp.create("r", now=2.0)
+    assert "p" not in allp
+    assert allp.stats()["dropped_ticks"] == 4
+
+
+def test_engine_validates_shared_store_backend_and_dtype():
+    store = SessionStore(2, 2, ring_capacity=8, initial_sessions=4)
+    with pytest.raises(ValueError, match="dtype"):
+        SigStreamEngine(d=2, depth=2, batch=2, window=4, store=store,
+                        dtype=jnp.float16)
+    with pytest.raises(ValueError, match="backend"):
+        SigStreamEngine(d=2, depth=2, batch=2, window=4, store=store,
+                        backend="pallas_interpret")
+    assert len(store) == 0                   # failed joins leave no slots
+
+
 def test_session_slot_reuse_bumps_generation(rng):
     store = SessionStore(2, 2, initial_sessions=2, max_sessions=2)
     h_old = store.create("old")

@@ -280,6 +280,27 @@ def test_stream_state_ring_wraparound():
     assert st.length == 30 - pos
 
 
+def test_stream_extend_padded_chunk_wider_than_ring():
+    """A zero-padded chunk with m > capacity used to corrupt the ring: the
+    wrapped scatter indices collide, and the stale write-backs for masked
+    positions clobbered freshly written increments (so the next
+    rolling_drop applied exp(-0) instead of the true inverse)."""
+    from repro.core.stream import (stream_extend, stream_init,
+                                   stream_rolling_drop)
+    R = 5
+    x = _incs(42, 1, R, 2)
+    carry = stream_init(1, 2, 3, capacity=R, valid=True)
+    padded = jnp.concatenate([x, jnp.zeros((1, 3, 2))], axis=1)  # rung 8 > R
+    carry = stream_extend(carry, padded, counts=jnp.asarray([R]))
+    # every real increment landed in the ring exactly once
+    np.testing.assert_allclose(np.asarray(carry.ring[0]), np.asarray(x[0]),
+                               rtol=1e-6, atol=1e-7)
+    # and the subsequent exact-inverse drop sees the true oldest increments
+    carry = stream_rolling_drop(carry, 2, max_drop=2)
+    ref = signature_from_increments(x[:, 2:], 3)
+    np.testing.assert_allclose(carry.sig, ref, rtol=1e-5, atol=1e-6)
+
+
 def test_stream_state_return_stream_features():
     x = _incs(13, 2, 12, 3)
     st = signature_stream_init(2, 3, 3).extend(x[:, :5])
