@@ -75,11 +75,11 @@ def _bench_config(B, M, d, N, wlen, stride, iters, *, per_window=True,
            "d": d, "depth": N, "backend": BACKEND,
            "auto_route": select_route("auto", windows, M)}
 
-    t_fold = time_fn(_route_fn(windows, N, "fold"), path, warmup=1,
+    t_fold = time_fn(_route_fn(windows, N, "fold"), path, warmup=2,
                      iters=iters)
-    t_chen = time_fn(_route_fn(windows, N, "chen"), path, warmup=1,
+    t_chen = time_fn(_route_fn(windows, N, "chen"), path, warmup=2,
                      iters=iters)
-    t_auto = time_fn(_route_fn(windows, N, "auto"), path, warmup=1,
+    t_auto = time_fn(_route_fn(windows, N, "auto"), path, warmup=2,
                      iters=iters)
     rec.update(fold_ms=t_fold * 1e3, chen_ms=t_chen * 1e3,
                auto_ms=t_auto * 1e3, chen_speedup_vs_fold=t_fold / t_chen)
@@ -91,7 +91,7 @@ def _bench_config(B, M, d, N, wlen, stride, iters, *, per_window=True,
 
     if per_window:
         pw = _make_per_window(N)
-        t_p = time_fn(lambda p: pw(p, windows), path, warmup=1,
+        t_p = time_fn(lambda p: pw(p, windows), path, warmup=2,
                       iters=max(1, iters - 1))
         rec["per_window_ms"] = t_p * 1e3
         row("fig3/per_window", f"{t_p*1e3:.3f}", "ms", tag)

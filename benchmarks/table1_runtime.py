@@ -21,6 +21,7 @@ parallelise the time axis) but holds; training (fwd+bwd) gap persists.
 """
 from __future__ import annotations
 
+import json
 import os
 
 import jax
@@ -31,6 +32,7 @@ from repro.kernels import ops
 from .common import header, make_paths, row, time_fn
 
 BACKEND = os.environ.get("PATHSIG_BACKEND", "auto")
+JSON_PATH = os.environ.get("PATHSIG_BENCH_JSON", "BENCH_table1.json")
 
 ENGINES = {
     "pathsig": lambda incs, depth: ops.signature(
@@ -84,5 +86,159 @@ def run(quick: bool = True) -> None:
                     f"B={B};M={M};d={d};N={N}")
 
 
+# ---------------------------------------------------------------------------
+# Optimisation-lever before/after blocks (-> BENCH_table1.json)
+# ---------------------------------------------------------------------------
+#
+# Each block times ONE optimisation lever of the dispatch layer on a paper-
+# grid cell, before vs after, on this host:
+#
+# - fused_transform: transform="time_augment+lead_lag" materialised up front
+#   (the (B, M', 2d+1) intermediate + plain sweep) vs fused into the sweep.
+# - autotune: dispatch defaults (batch_tile=128) vs the per-cell winner of
+#   ``repro.kernels.autotune`` (interpret mode pays real work for batch
+#   padding, so tile = bucket(B) is a pure win at small B).
+# - bf16: precision="fp32" vs "bf16_fp32" — records the per-level relative
+#   error against the fp32 oracle alongside the times (the lever's claim is
+#   the memory halving + bounded error; wall-clock parity is acceptable).
+# - combined: all three levers off vs all three on, same cell.
+
+_LEVER_CELL_JAX = dict(B=32, M=100, d=6, N=2)       # overhead-dominated
+_LEVER_CELL_PALLAS = dict(B=32, M=100, d=3, N=3)    # padding-dominated
+
+
+def _level_relerr(got, ref, d: int, depth: int):
+    """Per-level ||got - ref|| / ||ref|| of flat (B, D_sig) signatures."""
+    errs, off = [], 0
+    for n in range(1, depth + 1):
+        w = d ** n
+        g, r = got[:, off:off + w], ref[:, off:off + w]
+        errs.append(float(jnp.linalg.norm(g - r) /
+                          jnp.maximum(jnp.linalg.norm(r), 1e-30)))
+        off += w
+    return errs
+
+
+def _time_pair(before_fn, after_fn, incs, iters):
+    t0 = time_fn(jax.jit(before_fn), incs, warmup=2, iters=iters)
+    t1 = time_fn(jax.jit(after_fn), incs, warmup=2, iters=iters)
+    return t0 * 1e3, t1 * 1e3
+
+
+def run_levers(quick: bool = True) -> list[dict]:
+    from repro.core.transforms import (as_transform, augment_increments,
+                                       transform_dim)
+    from repro.kernels import autotune
+    header("table1-levers: fused transform / autotune / bf16 before-after")
+    iters = 3 if quick else 10
+    records = []
+    tname = "time_augment+lead_lag"
+    spec = as_transform(tname)
+
+    # -- lever 1: fused transform (jax engine, overhead-dominated cell) ----
+    B, M, d, N = (_LEVER_CELL_JAX[k] for k in "BMdN")
+    incs = tops.path_increments(make_paths(B, M, d))
+
+    def mat(x):
+        e = augment_increments(x, spec)
+        return ops.signature(e, N, backend="jax")
+
+    def fused(x):
+        return ops.signature(x, N, backend="jax", transform=spec)
+
+    b_ms, a_ms = _time_pair(mat, fused, incs, iters)
+    rec = dict(name="fused_transform", backend="jax", transform=tname,
+               B=B, M=M, d=d, N=N, before_ms=b_ms, after_ms=a_ms,
+               speedup=b_ms / a_ms)
+    records.append(rec)
+    row("table1/lever/fused_transform", f"{rec['speedup']:.2f}", "x",
+        f"B={B};M={M};d={d};N={N};backend=jax")
+
+    # -- lever 2: autotuned tiles (interpret mode, padding-dominated) ------
+    B, M, d, N = (_LEVER_CELL_PALLAS[k] for k in "BMdN")
+    incs = tops.path_increments(make_paths(B, M, d))
+    tuned = autotune.sweep_cell("sig_trunc", dict(
+        engine="pallas_interpret", d=d, depth=N, M=M, B=B, precision="fp32"),
+        repeats=iters)
+    tile, split = tuned.get("batch_tile", 128), tuned.get("split")
+
+    def default_tiles(x):
+        return ops.signature(x, N, backend="pallas_interpret", batch_tile=128)
+
+    def tuned_tiles(x):
+        return ops.signature(x, N, backend="pallas_interpret",
+                             batch_tile=tile, split=split)
+
+    b_ms, a_ms = _time_pair(default_tiles, tuned_tiles, incs, iters)
+    rec = dict(name="autotune", backend="pallas_interpret", B=B, M=M, d=d,
+               N=N, batch_tile=tile, split=split, before_ms=b_ms,
+               after_ms=a_ms, speedup=b_ms / a_ms)
+    records.append(rec)
+    row("table1/lever/autotune", f"{rec['speedup']:.2f}", "x",
+        f"B={B};M={M};d={d};N={N};tile={tile};split={split}")
+
+    # -- lever 3: bf16 storage (same cell, error bound recorded) -----------
+    ref = jax.jit(lambda x: ops.signature(
+        x, N, backend="pallas_interpret", batch_tile=tile, split=split))(incs)
+    bf = jax.jit(lambda x: ops.signature(
+        x, N, backend="pallas_interpret", batch_tile=tile, split=split,
+        precision="bf16_fp32"))(incs)
+    relerr = _level_relerr(bf, ref, d, N)
+    b_ms, a_ms = _time_pair(
+        lambda x: ops.signature(x, N, backend="pallas_interpret",
+                                batch_tile=tile, split=split),
+        lambda x: ops.signature(x, N, backend="pallas_interpret",
+                                batch_tile=tile, split=split,
+                                precision="bf16_fp32"),
+        incs, iters)
+    rec = dict(name="bf16", backend="pallas_interpret", B=B, M=M, d=d, N=N,
+               before_ms=b_ms, after_ms=a_ms, speedup=b_ms / a_ms,
+               level_relerr=relerr,
+               relerr_bound=[n * 2.0 ** -8 for n in range(1, N + 1)])
+    records.append(rec)
+    row("table1/lever/bf16_max_relerr", f"{max(relerr):.2e}", "rel",
+        f"B={B};M={M};d={d};N={N}")
+
+    # -- combined: all levers off vs all on (fused + tuned + bf16) ---------
+    def before_all(x):
+        e = augment_increments(x, spec)
+        return ops.signature(e, N, backend="pallas_interpret", batch_tile=128)
+
+    d_eff = transform_dim(spec, d)
+    tuned_c = autotune.sweep_cell("sig_trunc", dict(
+        engine="pallas_interpret", d=d_eff, depth=N, M=2 * M, B=B,
+        precision="bf16_fp32"), repeats=iters)
+    tile_c, split_c = tuned_c.get("batch_tile", 128), tuned_c.get("split")
+
+    def after_all(x):
+        return ops.signature(x, N, backend="pallas_interpret",
+                             transform=spec, batch_tile=tile_c,
+                             split=split_c, precision="bf16_fp32")
+
+    b_ms, a_ms = _time_pair(before_all, after_all, incs, iters)
+    rec = dict(name="combined", backend="pallas_interpret", transform=tname,
+               B=B, M=M, d=d, N=N, batch_tile=tile_c, split=split_c,
+               precision="bf16_fp32", before_ms=b_ms, after_ms=a_ms,
+               speedup=b_ms / a_ms)
+    records.append(rec)
+    row("table1/lever/combined", f"{rec['speedup']:.2f}", "x",
+        f"B={B};M={M};d={d};N={N};backend=pallas_interpret")
+
+    with open(JSON_PATH, "w") as f:
+        json.dump({"levers": records}, f, indent=2)
+    row("table1/json", JSON_PATH, "path", "")
+    return records
+
+
 if __name__ == "__main__":
-    run()
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--levers-only", action="store_true",
+                    help="only the before/after lever blocks + JSON")
+    ap.add_argument("--skip-levers", action="store_true")
+    args = ap.parse_args()
+    if not args.levers_only:
+        run(quick=args.quick)
+    if not args.skip_levers:
+        run_levers(quick=args.quick)

@@ -264,7 +264,9 @@ def projected_signature_from_increments(increments: jax.Array,
                                         stream_stride: int = 1,
                                         backward: str = "inverse",
                                         backend: str = "jax",
-                                        lengths=None) -> jax.Array:
+                                        lengths=None, transform=None,
+                                        x0=None,
+                                        precision: str = "fp32") -> jax.Array:
     """π_I(S_{0,T}(X)) for the plan's word set I.  (B, M, d) -> (B, |I|).
 
     ``backend`` other than ``"jax"`` routes through the engine dispatch in
@@ -272,13 +274,22 @@ def projected_signature_from_increments(increments: jax.Array,
     ``stream_stride``-th per-step projection as (B, M_out, |I|).
     ``lengths`` (B,) makes the batch ragged (zero-masked padded tails,
     exact terminals, masked post-end emissions, zero grads past the end).
+    ``transform`` fuses path transforms into the sweep (the plan must be
+    over the AUGMENTED alphabet; ``x0=`` is the path start, needed iff the
+    transform has a basepoint); ``precision`` is ``"fp32"`` | ``"bf16_fp32"``
+    — both route through :func:`repro.kernels.ops.projected`.
     """
+    from .transforms import as_transform
+    from .signature import canon_precision
     increments, squeeze = _as_batched(increments)
-    if backend != "jax":
+    spec = as_transform(transform)
+    precision = canon_precision(precision)
+    if backend != "jax" or spec is not None or precision != "fp32":
         from repro.kernels import ops  # deferred: ops imports this module
         out = ops.projected(increments, plan, backend=backend,
                             backward=backward, stream=stream,
-                            stream_stride=stream_stride, lengths=lengths)
+                            stream_stride=stream_stride, lengths=lengths,
+                            transform=spec, x0=x0, precision=precision)
         return out[0] if squeeze else out
     if lengths is not None:
         lengths = as_lengths(lengths, increments.shape[0])
@@ -312,28 +323,38 @@ def projected_signature_from_increments(increments: jax.Array,
 def projected_signature(path: jax.Array, words, d: int | None = None, *,
                         plan: WordPlan | None = None, stream: bool = False,
                         stream_stride: int = 1, backward: str = "inverse",
-                        backend: str = "jax", lengths=None) -> jax.Array:
+                        backend: str = "jax", lengths=None, transform=None,
+                        precision: str = "fp32") -> jax.Array:
     """Signature coefficients of an arbitrary word set (paper §7.1).
 
     ``words`` is an iterable of letter tuples (0-based) or a prebuilt plan.
     ``lengths`` (B,) makes the batch ragged; a
     :class:`repro.ragged.RaggedPaths` may be passed directly as ``path``.
+    ``transform`` fuses path transforms into the sweep; the words (and any
+    prebuilt ``plan``) must be over the AUGMENTED alphabet — when ``d`` is
+    omitted it defaults to the augmented channel count.  The basepoint start
+    ``x0`` is taken from the path automatically.  ``precision`` is
+    ``"fp32"`` | ``"bf16_fp32"``.
     """
     from .signature import _unpack_ragged
+    from .transforms import as_transform, transform_dim
     values, rl = _unpack_ragged(path)
     if rl is not None and lengths is None:
         lengths = rl
     path, squeeze = _as_batched(values)
+    spec = as_transform(transform)
     if plan is None:
         if d is None:
-            d = path.shape[-1]
+            d = transform_dim(spec, path.shape[-1])
         plan = make_plan(tuple(tuple(w) for w in words), d)
     incs = tops.path_increments(path)
+    x0 = path[:, 0] if spec is not None and spec.basepoint else None
     out = projected_signature_from_increments(incs, plan, stream=stream,
                                               stream_stride=stream_stride,
                                               backward=backward,
                                               backend=backend,
-                                              lengths=lengths)
+                                              lengths=lengths, transform=spec,
+                                              x0=x0, precision=precision)
     return out[0] if squeeze else out
 
 

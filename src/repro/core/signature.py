@@ -162,6 +162,146 @@ def _scan_forward(increments: jax.Array, depth: int,
 
 
 # ---------------------------------------------------------------------------
+# precision: "fp32" | "bf16_fp32" (bf16-quantised increments, fp32
+# accumulation).  The quantisation IS the semantics: every engine computes
+# fp32 Horner updates on bf16-rounded increments, so engines agree to float
+# tolerance and the error vs the fp32 oracle is bounded per level (~ n·2^-8
+# at level n; see tests/test_precision.py).
+# ---------------------------------------------------------------------------
+
+PRECISIONS = ("fp32", "bf16_fp32")
+
+
+def canon_precision(precision: str) -> str:
+    p = {"bf16": "bf16_fp32"}.get(precision, precision)
+    if p not in PRECISIONS:
+        raise ValueError(f"unknown precision {precision!r}: expected one of "
+                         f"{PRECISIONS}")
+    return p
+
+
+def quantise_increments(x: jax.Array, precision: str) -> jax.Array:
+    """Round increments to the storage dtype of ``precision`` (returned in
+    the original dtype so downstream fp32 accumulation is unchanged)."""
+    if canon_precision(precision) == "bf16_fp32":
+        return jax.lax.stop_gradient(
+            x.astype(jnp.bfloat16)).astype(x.dtype) + (x - jax.lax.stop_gradient(x))
+    return x
+
+
+# ---------------------------------------------------------------------------
+# fused-transform forward: the augmented increment is built in registers per
+# Horner sub-step, so the (B, M_aug, d_aug) intermediate never exists and the
+# scan runs M (not M_aug) iterations.  ``increments`` must already include
+# the basepoint increment (dispatch prepends x0); ``taux`` is
+# transforms.transform_time_aux output (pass zeros when spec.time is False).
+# ---------------------------------------------------------------------------
+
+def _fused_build_increment(dx: jax.Array, taux: jax.Array, spec, phase: int,
+                           ja) -> jax.Array:
+    """One augmented increment (B, d_aug) from a raw increment (B, d)."""
+    parts = []
+    if spec.time:
+        dt, n_valid = taux[:, :1], taux[:, 1:]
+        parts.append(dt * (ja < n_valid).astype(dx.dtype))
+    if spec.lead_lag:
+        z = jnp.zeros_like(dx)
+        parts += [z, dx] if phase == 0 else [dx, z]   # [lag, lead] channels
+    else:
+        parts.append(dx)
+    return jnp.concatenate(parts, axis=-1)
+
+
+def _fused_scan_forward(increments: jax.Array, taux: jax.Array, spec,
+                        depth: int, stream: bool) -> jax.Array:
+    """Fused levelwise-Horner Chen scan: ``spec.sub_steps`` Horner sub-steps
+    per scan iteration.  increments: (B, M, d) raw; output over the
+    *augmented* axis when streamed: (B, M_aug, D_sig)."""
+    from .transforms import transform_dim
+    B, M, d = increments.shape
+    sub = spec.sub_steps
+    d_aug = transform_dim(dataclasses_replace_nobp(spec), d)
+
+    def step(levels, xs):
+        dx, j = xs
+        ys = []
+        for p in range(sub):
+            e = _fused_build_increment(dx, taux, spec, p,
+                                       (sub * j + p).astype(taux.dtype))
+            levels = tops.horner_step(levels, e)
+            if stream:
+                ys.append(tops.levels_to_flat(levels))
+        return levels, (jnp.stack(ys, 0) if stream else None)
+
+    init = tops.zero_levels((B,), d_aug, depth, increments.dtype)
+    idx = jnp.arange(M, dtype=jnp.int32)
+    final, ys = jax.lax.scan(step, init, (jnp.moveaxis(increments, 1, 0), idx))
+    if stream:  # ys: (M, sub, B, D) -> (B, M_aug, D)
+        return jnp.moveaxis(ys.reshape(M * sub, B, -1), 0, 1)
+    return tops.levels_to_flat(final)
+
+
+def dataclasses_replace_nobp(spec):
+    """The kernel-level view of a transform spec: basepoint is an increment
+    prepend handled by dispatch, so the scan/kernels only see lead_lag/time."""
+    import dataclasses
+    if spec.basepoint:
+        return dataclasses.replace(spec, basepoint=False)
+    return spec
+
+
+@lru_cache(maxsize=None)
+def _make_fused_inverse_vjp(depth: int, spec):
+    """Fused forward + §4.2 reverse sweep.  The backward transiently
+    materialises the augmented increments (reusing :func:`inverse_bwd_scan`
+    unchanged), then pulls the cotangent back through the transform's linear
+    adjoint (:func:`repro.core.transforms.fused_adjoint`)."""
+    @jax.custom_vjp
+    def sig(increments, taux):
+        return _fused_scan_forward(increments, taux, spec, depth, False)
+
+    def fwd(increments, taux):
+        out = sig(increments, taux)
+        return out, (increments, taux, out)
+
+    def bwd(res, g_flat):
+        from .transforms import fused_augment, fused_adjoint
+        increments, taux, out_flat = res
+        e = fused_augment(increments, taux, spec)
+        g_e = inverse_bwd_scan(e, out_flat, g_flat, depth)
+        g_incs = fused_adjoint(g_e, spec, increments.shape[-1])
+        return g_incs, jnp.zeros_like(taux)
+
+    sig.defvjp(fwd, bwd)
+    return sig
+
+
+@lru_cache(maxsize=None)
+def _make_fused_stream_inverse_vjp(depth: int, spec, stride: int):
+    """Streamed fused forward (emissions strided over the AUGMENTED step
+    axis) + the generalised §4.2 reverse sweep."""
+    @jax.custom_vjp
+    def sig(increments, taux):
+        out = _fused_scan_forward(increments, taux, spec, depth, True)
+        return _subsample_stream(out, out.shape[1], stride)
+
+    def fwd(increments, taux):
+        out = sig(increments, taux)
+        return out, (increments, taux, out[:, -1])
+
+    def bwd(res, g_steps):
+        from .transforms import fused_augment, fused_adjoint
+        increments, taux, terminal = res
+        e = fused_augment(increments, taux, spec)
+        g_e = stream_inverse_bwd_scan(e, terminal, g_steps, depth, stride)
+        g_incs = fused_adjoint(g_e, spec, increments.shape[-1])
+        return g_incs, jnp.zeros_like(taux)
+
+    sig.defvjp(fwd, bwd)
+    return sig
+
+
+# ---------------------------------------------------------------------------
 # custom VJP: inverse reconstruction (paper §4.2)
 # ---------------------------------------------------------------------------
 
@@ -368,11 +508,72 @@ def unsupported_stream_backward(backward: str) -> NotImplementedError:
         "live memory) or backward='autodiff'")
 
 
+def _fused_jax_signature(increments: jax.Array, depth: int, spec, *, x0,
+                         stream: bool, stream_stride: int, backward: str,
+                         lengths, precision: str) -> jax.Array:
+    """Fused-transform route of the pure-JAX engine: basepoint is an
+    increment prepend, lead_lag/time are built per sub-step inside the scan.
+    Streaming, lengths masking, and emissions are over the AUGMENTED axis."""
+    from .transforms import (fused_augment, transform_dim, transform_lengths,
+                             transform_time_aux)
+    B, M, d = increments.shape
+    increments = quantise_increments(increments, precision)
+    if lengths is not None:
+        lengths = as_lengths(lengths, B)
+        increments = mask_increments(increments, lengths)
+    if spec.basepoint:
+        if x0 is None:
+            raise ValueError("transform with basepoint needs x0= (the path "
+                             "start point, shape (B, d)); repro.core."
+                             "signature.signature passes it automatically")
+        x0 = quantise_increments(jnp.asarray(x0).astype(increments.dtype),
+                                 precision)
+        increments = jnp.concatenate([x0[:, None, :], increments], axis=1)
+    kspec = dataclasses_replace_nobp(spec)
+    M_bp = increments.shape[1]
+    lengths_bp = None if lengths is None else lengths + int(spec.basepoint)
+    taux = transform_time_aux(kspec, B, M_bp, lengths_bp)
+    M_aug = M_bp * kspec.sub_steps
+    aug_lengths = transform_lengths(spec, lengths)
+    if stream:
+        if M_aug == 0:  # no steps -> no emissions
+            out = jnp.zeros((B, 0, sig_dim(transform_dim(kspec, d), depth)),
+                            increments.dtype)
+        elif backward == "inverse":
+            out = _make_fused_stream_inverse_vjp(depth, kspec, stream_stride)(
+                increments, taux)
+        elif backward == "autodiff":
+            out = _subsample_stream(
+                _fused_scan_forward(increments, taux, kspec, depth, True),
+                M_aug, stream_stride)
+        elif backward == "checkpoint":
+            raise unsupported_stream_backward(backward)
+        else:
+            raise ValueError(f"unknown backward mode {backward!r}")
+        if lengths is not None and M_aug:
+            out = out * stream_emit_mask(M_aug, stream_stride,
+                                         aug_lengths)[..., None].astype(out.dtype)
+    elif backward == "inverse":
+        out = _make_fused_inverse_vjp(depth, kspec)(increments, taux)
+    elif backward == "autodiff":
+        out = _fused_scan_forward(increments, taux, kspec, depth, False)
+    elif backward == "checkpoint":
+        # materialise-then-sweep fallback (documented in the ops support
+        # matrix): the augment is linear, so autodiff through it IS the
+        # transform adjoint, and the √M-checkpoint VJP is reused unchanged.
+        e = fused_augment(increments, taux, kspec)
+        out = _make_checkpoint_vjp(depth, default_chunk(M_aug))(e)
+    else:
+        raise ValueError(f"unknown backward mode {backward!r}")
+    return out
+
+
 def signature_from_increments(increments: jax.Array, depth: int, *,
                               stream: bool = False, stream_stride: int = 1,
                               backward: str = "inverse",
                               backend: str = "jax",
-                              lengths=None) -> jax.Array:
+                              lengths=None, transform=None, x0=None,
+                              precision: str = "fp32") -> jax.Array:
     """Truncated signature from increments (B, M, d) -> (B, D_sig).
 
     ``backend`` other than ``"jax"`` routes through the engine dispatch in
@@ -386,16 +587,36 @@ def signature_from_increments(increments: jax.Array, depth: int, *,
     so the terminal output is the per-example unpadded signature, gradients
     past the true end are exactly zero, and streamed emissions are masked
     after each example's true-terminal slot (:func:`stream_emit_slots`).
+
+    ``transform`` (see :func:`repro.core.transforms.as_transform`) fuses
+    ``basepoint`` / ``lead_lag`` / ``time_augment`` into the sweep: each
+    augmented increment is built in registers per Horner sub-step, the
+    (B, M_aug, d_aug) intermediate never exists, and streamed emissions /
+    lengths are over the AUGMENTED step axis.  ``x0`` (B, d) is the path
+    start, required iff the transform includes ``basepoint``.  ``precision``
+    is ``"fp32"`` | ``"bf16_fp32"`` (bf16-quantised increments, fp32
+    accumulation).
     """
     increments, squeeze = _as_batched(increments)
     if depth < 1:
         raise ValueError("depth must be >= 1")
+    precision = canon_precision(precision)
     if backend != "jax":
         from repro.kernels import ops  # deferred: ops imports this module
         out = ops.signature(increments, depth, backend=backend,
                             backward=backward, stream=stream,
-                            stream_stride=stream_stride, lengths=lengths)
+                            stream_stride=stream_stride, lengths=lengths,
+                            transform=transform, x0=x0, precision=precision)
         return out[0] if squeeze else out
+    from .transforms import as_transform
+    spec = as_transform(transform)
+    if spec is not None:
+        out = _fused_jax_signature(increments, depth, spec, x0=x0,
+                                   stream=stream, stream_stride=stream_stride,
+                                   backward=backward, lengths=lengths,
+                                   precision=precision)
+        return out[0] if squeeze else out
+    increments = quantise_increments(increments, precision)
     if lengths is not None:
         lengths = as_lengths(lengths, increments.shape[0])
         increments = mask_increments(increments, lengths)
@@ -432,7 +653,8 @@ def signature_from_increments(increments: jax.Array, depth: int, *,
 def signature(path: jax.Array, depth: int, *, stream: bool = False,
               stream_stride: int = 1, basepoint: bool = False,
               backward: str = "inverse", backend: str = "jax",
-              lengths=None) -> jax.Array:
+              lengths=None, transform=None,
+              precision: str = "fp32") -> jax.Array:
     """Truncated signature of a piecewise-linear path (B, M+1, d).
 
     ``basepoint=True`` prepends X_0 = 0 (so translation information is kept).
@@ -444,6 +666,13 @@ def signature(path: jax.Array, depth: int, *, stream: bool = False,
     is zero-masked — exact; ``basepoint=True`` adds one increment, which is
     accounted for here).  A :class:`repro.ragged.RaggedPaths` may be passed
     directly as ``path`` (its lengths are used unless overridden).
+
+    ``transform`` (``"time_augment"`` / ``"lead_lag"`` / ``"basepoint"``,
+    composable — see :func:`repro.core.transforms.as_transform`) applies the
+    path transforms FUSED into the sweep; the basepoint start ``x0`` is taken
+    from the path automatically.  ``precision`` is ``"fp32"`` |
+    ``"bf16_fp32"``.  ``basepoint=True`` is the legacy point-prepend; prefer
+    ``transform="basepoint"``.
     """
     values, rl = _unpack_ragged(path)
     if rl is not None and lengths is None:
@@ -456,10 +685,14 @@ def signature(path: jax.Array, depth: int, *, stream: bool = False,
         if lengths is not None:
             lengths = lengths + 1
     incs = tops.path_increments(path)
+    from .transforms import as_transform
+    spec = as_transform(transform)
+    x0 = path[:, 0] if spec is not None and spec.basepoint else None
     out = signature_from_increments(incs, depth, stream=stream,
                                     stream_stride=stream_stride,
                                     backward=backward, backend=backend,
-                                    lengths=lengths)
+                                    lengths=lengths, transform=spec, x0=x0,
+                                    precision=precision)
     return out[0] if squeeze else out
 
 

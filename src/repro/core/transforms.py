@@ -11,11 +11,13 @@ them, ``basepoint_augment`` adds one increment).
 """
 from __future__ import annotations
 
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .signature import as_lengths
+from .signature import as_lengths, mask_increments
 
 
 def freeze_tail(path: jax.Array, lengths) -> jax.Array:
@@ -105,6 +107,242 @@ def basepoint_augment(path: jax.Array, lengths=None):
     if lengths is not None:
         return out, lengths + 1
     return out
+
+
+# ---------------------------------------------------------------------------
+# Transform spec: the composable description the fused kernels understand.
+#
+# The engines in repro.kernels build each *augmented increment* on the fly
+# inside the time loop (registers / VMEM), so the (B, M_aug, d_aug)
+# intermediate of the path-level functions above never exists.  The functions
+# above stay as the materialising oracle; everything below is the shared
+# bookkeeping both sides agree on.
+#
+# Canonical composition order (matching the oracle):
+#   basepoint  ->  lead_lag  ->  time_augment
+# so the final channel layout is [t, lag_1..lag_d, lead_1..lead_d] (or the
+# obvious subsets).  At increment level:
+#   * basepoint prepends one increment equal to X_0 (the path start);
+#   * lead_lag maps raw increment g_j to two sub-increments:
+#       phase 0: (lag = 0,   lead = g_j)      # lead moves first
+#       phase 1: (lag = g_j, lead = 0)
+#   * time_augment prepends a constant-dt channel, dt = (t1-t0)/M_aug
+#     (per-example dt = (t1-t0)/len_aug for ragged batches, zero past the
+#     true end — exactly the oracle's frozen-tail time column).
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Transform:
+    """Composable path-transform spec (hashable: usable as a static/jit arg).
+
+    ``basepoint`` prepends X = 0; ``lead_lag`` doubles channels and steps;
+    ``time`` prepends a monotone t0 -> t1 channel.  Parse user input with
+    :func:`as_transform`.
+    """
+    basepoint: bool = False
+    lead_lag: bool = False
+    time: bool = False
+    t0: float = 0.0
+    t1: float = 1.0
+
+    def __bool__(self) -> bool:
+        return self.basepoint or self.lead_lag or self.time
+
+    @property
+    def sub_steps(self) -> int:
+        """Augmented increments produced per raw increment."""
+        return 2 if self.lead_lag else 1
+
+
+_TRANSFORM_NAMES = {
+    "basepoint": "basepoint",
+    "basepoint_augment": "basepoint",
+    "lead_lag": "lead_lag",
+    "leadlag": "lead_lag",
+    "time": "time",
+    "time_augment": "time",
+}
+
+
+def as_transform(spec) -> Transform | None:
+    """Normalise a ``transform=`` argument.
+
+    Accepts ``None``, a :class:`Transform`, a name (``"time_augment"`` |
+    ``"lead_lag"`` | ``"basepoint"``), a ``"+"``-joined combination
+    (``"time_augment+lead_lag"``), or an iterable of names.  Returns ``None``
+    for the identity transform.
+    """
+    if spec is None:
+        return None
+    if isinstance(spec, Transform):
+        return spec if spec else None
+    if isinstance(spec, str):
+        spec = [p for p in spec.replace(",", "+").split("+") if p]
+    flags: dict[str, bool] = {}
+    for name in spec:
+        key = _TRANSFORM_NAMES.get(str(name).strip().lower())
+        if key is None:
+            raise ValueError(
+                f"unknown transform {name!r}: expected one of "
+                f"{sorted(set(_TRANSFORM_NAMES))}")
+        flags[key] = True
+    return Transform(**flags) if flags else None
+
+
+def transform_dim(spec, d: int) -> int:
+    """Augmented channel count d_aug for raw channel count d."""
+    spec = as_transform(spec)
+    if spec is None:
+        return d
+    return (2 * d if spec.lead_lag else d) + (1 if spec.time else 0)
+
+
+def transform_steps(spec, M: int) -> int:
+    """Augmented increment count M_aug for raw increment count M."""
+    spec = as_transform(spec)
+    if spec is None:
+        return M
+    return (M + int(spec.basepoint)) * spec.sub_steps
+
+
+def transform_lengths(spec, lengths):
+    """Per-example augmented increment counts for raw ``lengths`` (B,)."""
+    spec = as_transform(spec)
+    if spec is None or lengths is None:
+        return lengths
+    return (lengths + int(spec.basepoint)) * spec.sub_steps
+
+
+def apply_transform(path: jax.Array, spec, lengths=None):
+    """Path-level (materialising) application of ``spec`` — the oracle the
+    fused engines are tested against.  Returns ``path`` or
+    ``(path, new_lengths)`` when ``lengths`` is given."""
+    spec = as_transform(spec)
+    if spec is None:
+        return path if lengths is None else (path, lengths)
+    if spec.basepoint:
+        out = basepoint_augment(path, lengths)
+        path, lengths = out if lengths is not None else (out, None)
+    if spec.lead_lag:
+        out = lead_lag(path, lengths)
+        path, lengths = out if lengths is not None else (out, None)
+    if spec.time:
+        out = time_augment(path, spec.t0, spec.t1, lengths)
+        path, lengths = out if lengths is not None else (out, None)
+    return path if lengths is None else (path, lengths)
+
+
+def transform_time_aux(spec, B: int, n_steps: int, lengths=None,
+                       dtype=jnp.float32) -> jax.Array:
+    """(B, 2) per-example ``[dt, n_valid_aug]`` aux the fused engines read.
+
+    ``n_steps`` counts increments AFTER any basepoint prepend (so does
+    ``lengths`` when given).  Step ``ja`` of the augmented path gets time
+    increment ``dt * (ja < n_valid_aug)``, which reproduces the oracle's
+    frozen-tail time column exactly.
+    """
+    spec = as_transform(spec)
+    sub = spec.sub_steps if spec is not None else 1
+    if lengths is None:
+        n_valid = jnp.full((B,), sub * n_steps, dtype)
+    else:
+        n_valid = (sub * as_lengths(lengths, B)).astype(dtype)
+    t0, t1 = (spec.t0, spec.t1) if spec is not None else (0.0, 1.0)
+    dt = (t1 - t0) / jnp.maximum(n_valid, 1.0)
+    return jnp.stack([dt, n_valid], axis=-1).astype(dtype)
+
+
+def fused_augment(increments: jax.Array, taux, spec) -> jax.Array:
+    """Increment-level materialisation of the lead_lag/time part of ``spec``
+    (basepoint must already be prepended): (B, M, d) -> (B, M_aug, d_aug).
+
+    This is what the fused engines compute step-by-step without ever
+    building; the custom-VJP backwards materialise it transiently to reuse
+    the §4.2 reverse sweeps, then pull the cotangent back through
+    :func:`fused_adjoint`.  ``taux`` is :func:`transform_time_aux` output
+    (ignored unless ``spec.time``).
+    """
+    spec = as_transform(spec)
+    g = increments
+    if spec is None:
+        return g
+    B, M, d = g.shape
+    if spec.lead_lag:
+        z = jnp.zeros_like(g)
+        lead = jnp.concatenate([z, g], axis=-1)   # phase 0: lead moves
+        lag = jnp.concatenate([g, z], axis=-1)    # phase 1: lag moves
+        g = jnp.stack([lead, lag], axis=2).reshape(B, 2 * M, 2 * d)
+    if spec.time:
+        M_aug = g.shape[1]
+        dt, n_valid = taux[:, 0], taux[:, 1]
+        valid = jnp.arange(M_aug, dtype=n_valid.dtype)[None, :] < n_valid[:, None]
+        tcol = (dt[:, None] * valid.astype(g.dtype))[..., None]
+        g = jnp.concatenate([tcol.astype(g.dtype), g], axis=-1)
+    return g
+
+
+def fused_adjoint(g_aug: jax.Array, spec, d: int) -> jax.Array:
+    """Adjoint of :func:`fused_augment` in the raw increments: (B, M_aug,
+    d_aug) cotangent -> (B, M, d).  The augment is linear, so this is exact:
+    the time channel is dropped (dt is data-independent) and each raw step
+    collects its lead-phase lead rows plus its lag-phase lag rows."""
+    spec = as_transform(spec)
+    g = g_aug
+    if spec is None:
+        return g
+    if spec.time:
+        g = g[..., 1:]
+    if spec.lead_lag:
+        B, M2, d2 = g.shape
+        r = g.reshape(B, M2 // 2, 2, d2)
+        g = r[:, :, 0, d:] + r[:, :, 1, :d]
+    return g
+
+
+def augment_increments(increments: jax.Array, spec, x0=None, lengths=None):
+    """Full increment-level materialisation of ``spec`` including basepoint:
+    (B, M, d) -> (B, M_aug, d_aug), equal (to float tolerance) to
+    ``path_increments(apply_transform(path, spec, ...))``.
+
+    ``x0`` (B, d) is the path start, required iff ``spec.basepoint`` (the
+    basepoint increment is 0 -> X_0 = x0).  ``lengths`` are RAW increment
+    counts; the padded tail is zero-masked first.  Returns
+    ``(aug, aug_lengths)`` when ``lengths`` is given.
+    """
+    spec = as_transform(spec)
+    B = increments.shape[0]
+    if spec is None:
+        if lengths is not None:
+            return mask_increments(increments, lengths), as_lengths(lengths, B)
+        return increments
+    if lengths is not None:
+        lengths = as_lengths(lengths, B)
+        increments = mask_increments(increments, lengths)
+    g = increments
+    if spec.basepoint:
+        if x0 is None:
+            raise ValueError("transform with basepoint needs x0= (the path "
+                             "start point, shape (B, d))")
+        g = jnp.concatenate([x0[:, None, :].astype(g.dtype), g], axis=1)
+    lengths_bp = None if lengths is None else lengths + int(spec.basepoint)
+    taux = transform_time_aux(spec, B, g.shape[1], lengths_bp, g.dtype) \
+        if spec.time else None
+    aug = fused_augment(g, taux, spec)
+    if lengths is None:
+        return aug
+    return aug, transform_lengths(spec, lengths)
+
+
+def augment_adjoint(g_aug: jax.Array, spec, d: int):
+    """Adjoint of :func:`augment_increments` in ``(increments, x0)``:
+    returns ``(g_increments, g_x0)`` (``g_x0`` is None without basepoint)."""
+    spec = as_transform(spec)
+    if spec is None:
+        return g_aug, None
+    g = fused_adjoint(g_aug, spec, d)
+    if spec.basepoint:
+        return g[:, 1:], g[:, 0]
+    return g, None
 
 
 def sparse_leadlag_generators(d: int) -> list[tuple[int, ...]]:

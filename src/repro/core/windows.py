@@ -35,11 +35,20 @@ from .words import WordPlan, flat_index, sig_dim
 
 ROUTES = ("auto", "fold", "chen")
 
-# cost-model constants: a window's inverse + Chen combine costs about as much
-# as a few Horner scan steps, and the chen route must win by a clear margin
-# before we accept its numerics (S^{-1} ⊗ S cancellation on long prefixes).
+# cost-model constants, calibrated against the measured BENCH_fig3.json grid
+# (tests/test_windows.py::test_auto_route_within_15pct_of_best re-checks the
+# calibration against the committed measurements):
+#   * a streamed chen-route step costs ~_CHEN_STEP_COST fold-route scan steps
+#     (the streamed pass emits + stores a prefix signature per stride, the
+#     fold pass only accumulates) — implied unit costs from the fig3 records
+#     are 1.45/2.17/2.33/3.22, median ~2.4;
+#   * a window's inverse + Chen combine costs ~_CHEN_COMBINE_STEPS steps;
+#   * the chen route must still win by _CHEN_ADVANTAGE before we accept its
+#     numerics (S^{-1} ⊗ S cancellation on long prefixes) — a margin, not a
+#     cost, now that _CHEN_STEP_COST carries the physics.
 _CHEN_COMBINE_STEPS = 4
-_CHEN_ADVANTAGE = 2.0
+_CHEN_STEP_COST = 2.5
+_CHEN_ADVANTAGE = 1.5
 
 
 def _check_windows(windows, M: int) -> np.ndarray:
@@ -60,9 +69,11 @@ def select_route(route: str, windows_np: np.ndarray, M: int,
                  chen_cost_scale: float = 1.0,
                  backward: str = "inverse") -> str:
     """Host-side cost model: fold work = K · L_max padded scan steps, chen
-    work = one length-M streamed pass + ~_CHEN_COMBINE_STEPS steps per window
-    (scaled by ``chen_cost_scale`` when the streamed pass runs over a larger
-    basis than the fold route, e.g. full truncation vs a small closure).
+    work = one length-M streamed pass + ~_CHEN_COMBINE_STEPS steps per
+    window, with each chen step costing _CHEN_STEP_COST fold steps
+    (calibrated against BENCH_fig3.json measurements; scaled by
+    ``chen_cost_scale`` when the streamed pass runs over a larger basis than
+    the fold route, e.g. full truncation vs a small closure).
 
     ``backward="checkpoint"`` pins ``"auto"`` to the fold route: the chen
     route rides the streamed forward, which has no checkpoint backward (the
@@ -76,7 +87,8 @@ def select_route(route: str, windows_np: np.ndarray, M: int,
     lengths = windows_np[:, 1] - windows_np[:, 0]
     K, L_max = len(lengths), int(lengths.max())
     fold_work = K * max(L_max, 1)
-    chen_work = (M + _CHEN_COMBINE_STEPS * K) * chen_cost_scale
+    chen_work = _CHEN_STEP_COST * (M + _CHEN_COMBINE_STEPS * K) \
+        * chen_cost_scale
     return "chen" if fold_work > _CHEN_ADVANTAGE * chen_work else "fold"
 
 

@@ -1,0 +1,350 @@
+"""Persistent per-cell autotuner for the Pallas dispatch layer.
+
+The kernels' tile shapes (``batch_tile``, the level ``split`` of the cone
+kernel, the Gram block shapes) are workload-dependent: interpret mode pays
+~4x wasted compute when B=32 is padded to the default ``batch_tile=128``,
+while a compiled TPU run wants the full 128-lane tile.  This module keeps a
+small JSON cache of measured winners keyed by dispatch *cell* — (kind, d,
+depth, pow2-bucketed M and B, engine, precision) — which
+:mod:`repro.kernels.ops` consults whenever the caller does not pass an
+explicit tile.
+
+Environment control (read per call, so tests can monkeypatch):
+
+``PATHSIG_AUTOTUNE``
+    ``off``   — never consult or write the cache: library defaults.
+    ``load``  — (default) consult the cache, never measure.
+    ``sweep`` — consult the cache; on a miss, measure the candidate grid for
+    that cell once, persist the winner, and use it from then on.
+
+``PATHSIG_AUTOTUNE_CACHE``
+    Cache file path (default ``.pathsig_autotune.json`` in the CWD).
+
+Safety rails:
+
+* the library default configuration is ALWAYS a sweep candidate, and a
+  non-default winner is only recorded when it beats the default by >= 10%
+  (hysteresis) — so an autotuned cell can never lose to the default by more
+  than timing noise;
+* a corrupt / unreadable / wrong-version cache file degrades to the empty
+  cache with a one-time warning — never an exception on the hot path;
+* lookups with non-concrete (traced) cell values return the defaults.
+
+CLI: ``python -m repro.kernels.autotune --quick`` sweeps a small paper-grid
+set of cells and writes the cache (used by the CI benchmark job).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+import warnings
+from pathlib import Path
+
+__all__ = ["lookup", "cell_key", "load_cache", "save_cache", "sweep_cell",
+           "clear", "cache_path", "mode", "main"]
+
+_VERSION = 1
+_DEFAULT_CACHE = ".pathsig_autotune.json"
+
+# in-memory cache: {path: cells-dict}; invalidated via clear()
+_caches: dict[str, dict] = {}
+_warned: set[str] = set()
+_sweeping = False  # reentrancy guard: sweeps call back into the dispatch
+
+
+def mode() -> str:
+    m = os.environ.get("PATHSIG_AUTOTUNE", "load").strip().lower()
+    if m not in ("off", "load", "sweep"):
+        _warn_once(f"PATHSIG_AUTOTUNE={m!r} is not off|load|sweep; "
+                   "treating as 'off'")
+        return "off"
+    return m
+
+
+def cache_path() -> Path:
+    return Path(os.environ.get("PATHSIG_AUTOTUNE_CACHE", _DEFAULT_CACHE))
+
+
+def _warn_once(msg: str) -> None:
+    if msg not in _warned:
+        _warned.add(msg)
+        warnings.warn(msg, stacklevel=3)
+
+
+def clear() -> None:
+    """Drop the in-memory cache + warning dedup (tests / env changes)."""
+    _caches.clear()
+    _warned.clear()
+
+
+def _bucket(n: int) -> int:
+    """Pow2 ceiling — cells generalise across nearby sizes."""
+    n = max(1, int(n))
+    return 1 << (n - 1).bit_length()
+
+
+_BUCKETED = ("M", "B", "Bx", "By", "D")
+
+
+def cell_key(kind: str, **cell) -> str:
+    """Canonical cache key.  Size-like axes (M, B, Bx, By, D) are bucketed
+    to the next power of two; structural axes (d, depth, engine, precision)
+    are exact."""
+    parts = [kind]
+    for k in sorted(cell):
+        v = cell[k]
+        if k in _BUCKETED:
+            v = _bucket(v)
+        parts.append(f"{k}={v}")
+    return "|".join(parts)
+
+
+def load_cache(path: Path | None = None) -> dict:
+    """-> the cells dict for ``path`` (never raises; corrupt -> {})."""
+    path = cache_path() if path is None else Path(path)
+    key = str(path)
+    if key in _caches:
+        return _caches[key]
+    cells: dict = {}
+    if path.exists():
+        try:
+            raw = json.loads(path.read_text())
+            if not isinstance(raw, dict) or raw.get("version") != _VERSION \
+                    or not isinstance(raw.get("cells"), dict):
+                raise ValueError(f"bad schema (want version={_VERSION} with "
+                                 "a 'cells' dict)")
+            cells = {k: v for k, v in raw["cells"].items()
+                     if isinstance(v, dict)}
+        except Exception as e:  # corrupt cache must never break dispatch
+            _warn_once(f"ignoring corrupt autotune cache {path}: {e}")
+            cells = {}
+    _caches[key] = cells
+    return cells
+
+
+def save_cache(cells: dict, path: Path | None = None) -> None:
+    path = cache_path() if path is None else Path(path)
+    try:
+        path.write_text(json.dumps({"version": _VERSION, "cells": cells},
+                                   indent=1, sort_keys=True) + "\n")
+        _caches[str(path)] = cells
+    except OSError as e:
+        _warn_once(f"cannot write autotune cache {path}: {e}")
+
+
+def _concrete(cell: dict) -> dict | None:
+    """Cell with int-able sizes, or None if anything is traced/abstract."""
+    out = {}
+    for k, v in cell.items():
+        if isinstance(v, str):
+            out[k] = v
+            continue
+        try:
+            out[k] = int(v)
+        except TypeError:
+            return None
+    return out
+
+
+def lookup(kind: str, **cell) -> dict:
+    """The cached record for a dispatch cell ({} on miss / off / traced).
+
+    In ``sweep`` mode a miss triggers a one-off candidate sweep for the cell
+    (measured with synthetic data of the cell's shape), whose winner is
+    persisted and returned."""
+    m = mode()
+    if m == "off" or _sweeping:
+        return {}
+    cell = _concrete(cell)
+    if cell is None:
+        return {}
+    if cell.get("engine") == "jax":
+        return {}  # tile shapes are a Pallas concern
+    key = cell_key(kind, **cell)
+    cells = load_cache()
+    hit = cells.get(key)
+    if hit is not None:
+        return hit
+    if m != "sweep":
+        return {}
+    rec = sweep_cell(kind, cell)
+    if rec:
+        cells[key] = rec
+        save_cache(cells)
+    return rec
+
+
+# ---------------------------------------------------------------------------
+# sweeps
+# ---------------------------------------------------------------------------
+
+def _median_time(fn, repeats: int = 3) -> float:
+    fn()  # compile + warm caches
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def _backend_name(engine: str) -> str:
+    return "pallas_interpret" if engine == "pallas" else engine
+
+
+def _pick(timed: list[tuple[float, dict]], default: dict,
+          hysteresis: float = 0.9) -> dict:
+    """Winner with default-bias: the default config is always present, and a
+    non-default candidate must beat it by >= (1 - hysteresis) to be chosen."""
+    t_default = next(t for t, rec in timed if rec == default)
+    t_best, best = min(timed, key=lambda p: p[0])
+    if best != default and t_best < hysteresis * t_default:
+        return best
+    return default
+
+
+def _sig_candidates(depth: int, B: int) -> list[dict]:
+    tiles = sorted({bt for bt in (8, 32, 128) if bt >= 8} |
+                   {min(128, max(8, _bucket(B)))})
+    splits = sorted({s for s in (None, 2, depth - 1) if s is None
+                     or 1 <= s < depth}, key=lambda s: -1 if s is None else s)
+    return [{"batch_tile": bt, "split": sp} for bt in tiles for sp in splits]
+
+
+def sweep_cell(kind: str, cell: dict, repeats: int = 3) -> dict:
+    """Measure the candidate grid for one dispatch cell on synthetic data of
+    the cell's shape; -> the winning record ({} when the cell has nothing to
+    tune).  Never raises: a failing candidate is skipped, a failing sweep
+    returns {}."""
+    global _sweeping
+    import jax
+    import numpy as np
+    from repro.kernels import ops
+
+    engine = cell.get("engine", "pallas")
+    if engine == "jax":
+        return {}
+    backend = _backend_name(engine)
+    precision = cell.get("precision", "fp32")
+    rng = np.random.default_rng(0)
+    _sweeping = True
+    try:
+        timed: list[tuple[float, dict]] = []
+        if kind in ("sig_trunc", "sig_words"):
+            B, M, d, depth = (cell["B"], cell["M"], cell["d"], cell["depth"])
+            x = jax.numpy.asarray(
+                rng.standard_normal((B, M, d), np.float32) * 0.1)
+            if kind == "sig_trunc":
+                cands = _sig_candidates(depth, B)
+                default = {"batch_tile": 128, "split": None}
+
+                def run(rec):
+                    return ops.signature(
+                        x, depth, backend=backend, precision=precision,
+                        batch_tile=rec["batch_tile"], split=rec["split"])
+            else:
+                from repro.core.words import all_words
+                words = tuple(all_words(d, depth))
+                cands = [{"batch_tile": bt}
+                         for bt in sorted({8, 32, 128} |
+                                          {min(128, max(8, _bucket(B)))})]
+                default = {"batch_tile": 128}
+
+                def run(rec):
+                    return ops.projected(
+                        x, words, backend=backend, precision=precision,
+                        batch_tile=rec["batch_tile"])
+        elif kind == "gram":
+            D, Bx, By = cell["D"], cell["Bx"], cell["By"]
+            Sx = jax.numpy.asarray(
+                rng.standard_normal((Bx, D), np.float32) * 0.1)
+            Sy = jax.numpy.asarray(
+                rng.standard_normal((By, D), np.float32) * 0.1)
+            w = jax.numpy.asarray(rng.random(D, dtype=np.float32))
+            cands = [{"block_words": bw, "bx_tile": bx, "by_tile": by}
+                     for bw in (128, 512)
+                     for bx in sorted({128, min(128, max(8, _bucket(Bx)))})
+                     for by in sorted({128, min(128, max(8, _bucket(By)))})]
+            default = {"block_words": 512, "bx_tile": 128, "by_tile": 128}
+
+            def run(rec):
+                return ops.gram(Sx, Sy, w, backend=backend,
+                                precision=precision, **rec)
+        else:
+            return {}
+        if default not in cands:
+            cands.append(default)
+        for rec in cands:
+            try:
+                t = _median_time(
+                    lambda: jax.block_until_ready(run(rec)), repeats)
+            except Exception:
+                continue  # infeasible candidate (e.g. invalid split)
+            timed.append((t, rec))
+        if not any(rec == default for _, rec in timed):
+            return {}  # even the default failed: leave the cell untuned
+        win = _pick(timed, default)
+        win = dict(win)
+        win["ms"] = round(min(t for t, r in timed if r == win) * 1e3, 4)
+        win["default_ms"] = round(
+            min(t for t, r in timed if r == default) * 1e3, 4)
+        return win
+    except Exception as e:
+        _warn_once(f"autotune sweep failed for {kind} cell {cell}: {e}")
+        return {}
+    finally:
+        _sweeping = False
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+_QUICK_GRID = [
+    # (kind, cell) — paper-grid cells the benchmarks exercise
+    ("sig_trunc", dict(engine="pallas", d=6, depth=2, M=100, B=32,
+                       precision="fp32")),
+    ("sig_trunc", dict(engine="pallas", d=3, depth=3, M=200, B=32,
+                       precision="fp32")),
+    ("sig_trunc", dict(engine="pallas", d=6, depth=2, M=100, B=32,
+                       precision="bf16_fp32")),
+    ("sig_words", dict(engine="pallas", d=2, depth=3, M=100, B=32,
+                       precision="fp32")),
+    ("gram", dict(engine="pallas", D=364, Bx=64, By=64, precision="fp32")),
+]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--quick", action="store_true",
+                    help="sweep the small built-in paper-grid cell set")
+    ap.add_argument("--out", default=None,
+                    help="cache file (default: PATHSIG_AUTOTUNE_CACHE or "
+                         f"{_DEFAULT_CACHE})")
+    ap.add_argument("--repeats", type=int, default=3)
+    args = ap.parse_args(argv)
+    if args.out:
+        os.environ["PATHSIG_AUTOTUNE_CACHE"] = args.out
+        clear()
+    grid = _QUICK_GRID  # --quick is the only shipped grid so far
+    if not args.quick:
+        print("note: only the --quick grid is defined; sweeping it")
+    cells = load_cache()
+    for kind, cell in grid:
+        rec = sweep_cell(kind, cell, repeats=args.repeats)
+        key = cell_key(kind, **cell)
+        if rec:
+            cells[key] = rec
+            print(f"{key:70s} -> {rec}")
+        else:
+            print(f"{key:70s} -> (no winner; defaults)")
+    save_cache(cells)
+    print(f"wrote {cache_path()} ({len(cells)} cells)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

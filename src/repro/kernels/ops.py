@@ -80,6 +80,43 @@ masked after the true-terminal slot (gather it back with
 ragged batches enter it through the signature legs
 (``repro.sigkernel.sig_gram(..., x_lengths=, y_lengths=)``).
 
+``transform`` column: every cell above additionally accepts ``transform=``
+(a :class:`repro.core.transforms.Transform` or spec string such as
+``"time_augment+lead_lag"``) applied to the path before signing, with the
+``(B, M', 2d+1)``-sized augmented increment tensor **never materialised** on
+the fast rows.  How each cell gets there:
+
+- ``pallas`` × ``inverse`` (truncated and projected, streamed or not): FUSED.
+  The raw ``(B, M, d_raw)`` increments enter the kernel and each augmented
+  increment ([t?, lag, lead] channels) is built in VMEM per time sub-step
+  (``sig_trunc`` / ``sig_words`` ``transform=`` path).  The §4.2 backward
+  reconstructs the augmented increments transiently level-by-step and
+  :func:`repro.core.transforms.fused_adjoint` pulls the cotangent back to
+  the raw channels — still O(B·D_sig) live memory.
+- ``jax`` engines: the augment is fused into the scan step
+  (``core.signature._fused_jax_signature``) — XLA fuses the per-step
+  concat into the Horner update, no (M, 2d+1) intermediate in HBM.
+- ``checkpoint`` / ``time_chunks>1`` / ``mesh`` / ``hybrid``: materialise
+  fallback — ``augment_increments`` builds the augmented tensor once, then
+  the plain cell runs (the augment is linear, ordinary AD transposes it).
+- ``basepoint``: resolved at dispatch by prepending the ``x0=`` increment
+  (lengths shift by one); a basepoint-only transform recurses into the
+  plain cell, exactly.
+
+``precision`` column: every cell above (and :func:`gram`) accepts
+``precision="fp32"`` (default) or ``"bf16_fp32"``.  Mixed precision is
+quantise-once-at-dispatch: increments are rounded to bf16 with a
+straight-through-estimator cast *before* any engine runs, so every
+backend × backward combination sees identical inputs and agrees
+bit-for-bit; the Pallas kernels then *store* their increment blocks in
+bf16 (halving VMEM state/block footprint — see
+``sig_trunc.state_footprint(..., itemsize=2)``) while all Horner/Chen
+accumulation stays fp32.  Gradients flow at fp32 through the STE.  The
+per-level forward error against the fp32 oracle is bounded by
+``level · 2^-8`` relative (bf16 has 8 mantissa bits; products of ``n``
+rounded increments compound n rounding errors — ``tests/test_precision.py``
+checks the measured bound at depth ≤ 6).
+
 ``mesh`` column: EVERY cell above (and :func:`gram`) is additionally
 SPMD-capable — orthogonal to backend × backward × stream × lengths because
 it is resolved OUTSIDE the engine.  Installing
@@ -129,11 +166,19 @@ from jax.sharding import PartitionSpec
 from repro.core import tensor_ops as tops
 from repro.distributed.ctx import current_mesh, logical_axes
 from repro.distributed.ctx import shard as shard_constraint
-from repro.core.signature import (as_lengths, checkpoint_bwd_scan,
-                                  default_chunk, inverse_bwd_scan,
-                                  mask_increments, signature_from_increments,
+from repro.core.signature import (as_lengths, canon_precision,
+                                  checkpoint_bwd_scan,
+                                  dataclasses_replace_nobp, default_chunk,
+                                  inverse_bwd_scan, mask_increments,
+                                  quantise_increments,
+                                  signature_from_increments,
                                   stream_emit_mask, stream_inverse_bwd_scan,
                                   unsupported_stream_backward)
+from repro.core.transforms import (as_transform, augment_increments,
+                                   fused_adjoint, fused_augment,
+                                   transform_dim, transform_steps,
+                                   transform_time_aux)
+from repro.kernels import autotune
 from repro.core.projection import (projected_inverse_bwd_scan,
                                    projected_signature_from_increments,
                                    projected_stream_inverse_bwd_scan)
@@ -294,11 +339,16 @@ def _check_backward(backward: str) -> None:
 
 @plan_cache
 def _pallas_sig_inverse(depth: int, batch_tile: int, split: int | None,
-                        interpret: bool):
-    """Kernel forward + inverse-reconstruction backward (paper §4.2)."""
+                        interpret: bool, precision: str = "fp32"):
+    """Kernel forward + inverse-reconstruction backward (paper §4.2).
+
+    ``precision`` only selects the kernel's storage dtype: the dispatch layer
+    quantises the increments BEFORE they reach any custom VJP, so forward and
+    backward sweeps see identical (already-rounded) values."""
     def kernel(increments):
         return sig_trunc(increments, depth, batch_tile=batch_tile,
-                         split=split, interpret=interpret)
+                         split=split, interpret=interpret,
+                         precision=precision)
 
     @jax.custom_vjp
     def sig(increments):
@@ -318,7 +368,8 @@ def _pallas_sig_inverse(depth: int, batch_tile: int, split: int | None,
 
 @plan_cache
 def _pallas_sig_checkpoint(depth: int, chunk: int, batch_tile: int,
-                           split: int | None, interpret: bool):
+                           split: int | None, interpret: bool,
+                           precision: str = "fp32"):
     """Kernel chunk forward + √M-checkpoint backward.
 
     Forward: fold √M-length time chunks into the batch axis, run the Pallas
@@ -328,7 +379,8 @@ def _pallas_sig_checkpoint(depth: int, chunk: int, batch_tile: int,
     """
     def kernel(increments):
         return sig_trunc(increments, depth, batch_tile=batch_tile,
-                         split=split, interpret=interpret)
+                         split=split, interpret=interpret,
+                         precision=precision)
 
     @jax.custom_vjp
     def sig(increments):
@@ -371,13 +423,14 @@ def _pallas_sig_checkpoint(depth: int, chunk: int, batch_tile: int,
 
 @plan_cache
 def _pallas_sig_stream(depth: int, stride: int, batch_tile: int,
-                       split: int | None, interpret: bool):
+                       split: int | None, interpret: bool,
+                       precision: str = "fp32"):
     """Streamed kernel forward + generalised §4.2 backward: cotangents arrive
     at every emitted step, one reverse scan, O(B·D_sig) live memory."""
     def kernel(increments):
         return sig_trunc(increments, depth, batch_tile=batch_tile,
                          split=split, interpret=interpret, stream=True,
-                         stream_stride=stride)
+                         stream_stride=stride, precision=precision)
 
     @jax.custom_vjp
     def sig(increments):
@@ -391,6 +444,80 @@ def _pallas_sig_stream(depth: int, stride: int, batch_tile: int,
         increments, terminal = res
         return (stream_inverse_bwd_scan(increments, terminal, g_steps, depth,
                                         stride),)
+
+    sig.defvjp(fwd, bwd)
+    return sig
+
+
+# ---------------------------------------------------------------------------
+# fused-transform cells: raw increments + time-aux in, augmented signature
+# out.  The transform never materialises on the forward — the kernel builds
+# each augmented increment in VMEM per Horner sub-step.  The backward
+# transiently materialises the augmented increments ONCE (O(B·M_aug·d_aug),
+# freed after the sweep), reuses the standard §4.2 reconstruction over them,
+# then pulls the cotangent back through the transform's linear adjoint.
+# ``taux`` ((B, 2) = [dt, n_valid_aug]) is data-independent: its cotangent
+# is identically zero.
+# ---------------------------------------------------------------------------
+
+@plan_cache
+def _pallas_sig_fused_inverse(depth: int, batch_tile: int, split: int | None,
+                              interpret: bool, kspec, precision: str):
+    """Fused-transform kernel forward + §4.2 backward through the transform
+    adjoint.  ``kspec`` is a basepoint-free Transform (basepoint is handled
+    as an increment prepend in the dispatch, outside the custom VJP, so x0
+    gradients ride the concat's transpose)."""
+    def kernel(increments, taux):
+        return sig_trunc(increments, depth, batch_tile=batch_tile,
+                         split=split, interpret=interpret, transform=kspec,
+                         taux=taux, precision=precision)
+
+    @jax.custom_vjp
+    def sig(increments, taux):
+        return kernel(increments, taux)
+
+    def fwd(increments, taux):
+        out = kernel(increments, taux)
+        return out, (increments, taux, out)
+
+    def bwd(res, g_flat):
+        increments, taux, out_flat = res
+        e = fused_augment(increments, taux, kspec)
+        g_e = inverse_bwd_scan(e, out_flat, g_flat, depth)
+        return (fused_adjoint(g_e, kspec, increments.shape[-1]),
+                jnp.zeros_like(taux))
+
+    sig.defvjp(fwd, bwd)
+    return sig
+
+
+@plan_cache
+def _pallas_sig_fused_stream(depth: int, stride: int, batch_tile: int,
+                             split: int | None, interpret: bool, kspec,
+                             precision: str):
+    """Fused-transform streamed forward + streamed §4.2 backward through the
+    transform adjoint (strides and emissions are over the AUGMENTED step
+    axis, matching the kernel's in-VMEM sub-steps)."""
+    def kernel(increments, taux):
+        return sig_trunc(increments, depth, batch_tile=batch_tile,
+                         split=split, interpret=interpret, stream=True,
+                         stream_stride=stride, transform=kspec, taux=taux,
+                         precision=precision)
+
+    @jax.custom_vjp
+    def sig(increments, taux):
+        return kernel(increments, taux)
+
+    def fwd(increments, taux):
+        out = kernel(increments, taux)
+        return out, (increments, taux, out[:, -1])
+
+    def bwd(res, g_steps):
+        increments, taux, terminal = res
+        e = fused_augment(increments, taux, kspec)
+        g_e = stream_inverse_bwd_scan(e, terminal, g_steps, depth, stride)
+        return (fused_adjoint(g_e, kspec, increments.shape[-1]),
+                jnp.zeros_like(taux))
 
     sig.defvjp(fwd, bwd)
     return sig
@@ -443,7 +570,7 @@ def _normalise_plans(plan, d: int) -> tuple[WordPlan, TiledPlan | None]:
 
 @plan_cache
 def _pallas_proj_inverse(words: tuple, d: int, batch_tile: int, max_rows: int,
-                         interpret: bool):
+                         interpret: bool, precision: str = "fp32"):
     """Word-kernel forward over the prefix closure + §4.2 backward.
     Content-keyed: (words, d) identify the plan, not object identity."""
     wplan = _plan_for_words(words, d)
@@ -452,7 +579,8 @@ def _pallas_proj_inverse(words: tuple, d: int, batch_tile: int, max_rows: int,
 
     def closure_state(increments):
         cw = sig_words(increments, closure_tplan, batch_tile=batch_tile,
-                       interpret=interpret)               # (B, W), closure order
+                       interpret=interpret,
+                       precision=precision)               # (B, W), closure order
         ones = jnp.ones((cw.shape[0], 1), cw.dtype)
         return jnp.concatenate([ones, cw], axis=1)        # (B, 1 + W)
 
@@ -474,7 +602,8 @@ def _pallas_proj_inverse(words: tuple, d: int, batch_tile: int, max_rows: int,
 
 @plan_cache
 def _pallas_proj_stream(words: tuple, d: int, stride: int, batch_tile: int,
-                        max_rows: int, interpret: bool):
+                        max_rows: int, interpret: bool,
+                        precision: str = "fp32"):
     """Streamed word-kernel forward over the prefix closure + streamed §4.2
     backward (cotangents at every emitted step, one reverse scan)."""
     wplan = _plan_for_words(words, d)
@@ -484,7 +613,8 @@ def _pallas_proj_stream(words: tuple, d: int, stride: int, batch_tile: int,
     def closure_stream(increments):
         cw = sig_words(increments, closure_tplan, batch_tile=batch_tile,
                        interpret=interpret, stream=True,
-                       stream_stride=stride)         # (B, M_out, W)
+                       stream_stride=stride,
+                       precision=precision)          # (B, M_out, W)
         ones = jnp.ones((*cw.shape[:2], 1), cw.dtype)
         return jnp.concatenate([ones, cw], axis=-1)  # (B, M_out, 1 + W)
 
@@ -501,6 +631,82 @@ def _pallas_proj_stream(words: tuple, d: int, stride: int, batch_tile: int,
         increments, S_T = res
         return (projected_stream_inverse_bwd_scan(increments, S_T, g_steps,
                                                   wplan, stride),)
+
+    proj.defvjp(fwd, bwd)
+    return proj
+
+
+@plan_cache
+def _pallas_proj_fused_inverse(words: tuple, d: int, batch_tile: int,
+                               max_rows: int, interpret: bool, kspec,
+                               precision: str):
+    """Fused-transform word-kernel forward + §4.2 backward through the
+    transform adjoint.  ``words``/``d`` describe the plan over the AUGMENTED
+    alphabet (d == transform_dim(kspec, d_raw)); the backward materialises
+    the augmented increments once, runs the standard projected sweep, then
+    applies the transform's linear adjoint."""
+    wplan = _plan_for_words(words, d)
+    closure_tplan = _closure_tiled_plan(words, d, max_rows)
+    out_rows = np.asarray(wplan.out_rows)
+
+    def closure_state(increments, taux):
+        cw = sig_words(increments, closure_tplan, batch_tile=batch_tile,
+                       interpret=interpret, transform=kspec, taux=taux,
+                       precision=precision)
+        ones = jnp.ones((cw.shape[0], 1), cw.dtype)
+        return jnp.concatenate([ones, cw], axis=1)
+
+    @jax.custom_vjp
+    def proj(increments, taux):
+        return jnp.take(closure_state(increments, taux), out_rows, axis=1)
+
+    def fwd(increments, taux):
+        S_T = closure_state(increments, taux)
+        return jnp.take(S_T, out_rows, axis=1), (increments, taux, S_T)
+
+    def bwd(res, g_out):
+        increments, taux, S_T = res
+        e = fused_augment(increments, taux, kspec)
+        g_e = projected_inverse_bwd_scan(e, S_T, g_out, wplan)
+        return (fused_adjoint(g_e, kspec, increments.shape[-1]),
+                jnp.zeros_like(taux))
+
+    proj.defvjp(fwd, bwd)
+    return proj
+
+
+@plan_cache
+def _pallas_proj_fused_stream(words: tuple, d: int, stride: int,
+                              batch_tile: int, max_rows: int, interpret: bool,
+                              kspec, precision: str):
+    """Fused-transform streamed word-kernel forward + streamed §4.2 backward
+    through the transform adjoint (emissions stride the augmented axis)."""
+    wplan = _plan_for_words(words, d)
+    closure_tplan = _closure_tiled_plan(words, d, max_rows)
+    out_rows = np.asarray(wplan.out_rows)
+
+    def closure_stream(increments, taux):
+        cw = sig_words(increments, closure_tplan, batch_tile=batch_tile,
+                       interpret=interpret, stream=True, stream_stride=stride,
+                       transform=kspec, taux=taux, precision=precision)
+        ones = jnp.ones((*cw.shape[:2], 1), cw.dtype)
+        return jnp.concatenate([ones, cw], axis=-1)
+
+    @jax.custom_vjp
+    def proj(increments, taux):
+        return jnp.take(closure_stream(increments, taux), out_rows, axis=-1)
+
+    def fwd(increments, taux):
+        S = closure_stream(increments, taux)
+        return jnp.take(S, out_rows, axis=-1), (increments, taux, S[:, -1])
+
+    def bwd(res, g_steps):
+        increments, taux, S_T = res
+        e = fused_augment(increments, taux, kspec)
+        g_e = projected_stream_inverse_bwd_scan(e, S_T, g_steps, wplan,
+                                                stride)
+        return (fused_adjoint(g_e, kspec, increments.shape[-1]),
+                jnp.zeros_like(taux))
 
     proj.defvjp(fwd, bwd)
     return proj
@@ -624,36 +830,40 @@ def _shard_wrap(mesh, names: tuple, with_lengths: bool, local_fn):
 def _sharded_sig(mesh, names: tuple, with_lengths: bool, depth: int,
                  engine: str, interpret: bool, backward: str, batch_tile: int,
                  split: int | None, time_chunks: int, stream: bool,
-                 stream_stride: int):
-    """shard_map wrapper around the truncated-signature cell."""
+                 stream_stride: int, precision: str = "fp32"):
+    """shard_map wrapper around the truncated-signature cell.  Transforms
+    are materialised BEFORE the mesh branch (support matrix), so the shard
+    body only needs the precision knob."""
     return _shard_wrap(mesh, names, with_lengths, partial(
         _signature_local, depth=depth, engine=engine, interpret=interpret,
         backward=backward, batch_tile=batch_tile, split=split,
         time_chunks=time_chunks, stream=stream,
-        stream_stride=stream_stride))
+        stream_stride=stream_stride, precision=precision))
 
 
 @plan_cache
 def _sharded_proj(mesh, names: tuple, with_lengths: bool, words: tuple,
                   d: int, engine: str, interpret: bool, backward: str,
                   batch_tile: int, max_rows: int, stream: bool,
-                  stream_stride: int):
+                  stream_stride: int, precision: str = "fp32"):
     """shard_map wrapper around the projected-signature cell (incl. the
-    hybrid engine)."""
+    hybrid engine).  Transforms are materialised before the mesh branch."""
     return _shard_wrap(mesh, names, with_lengths, partial(
         _projected_local, words=words, d=d, engine=engine,
         interpret=interpret, backward=backward, batch_tile=batch_tile,
-        max_rows=max_rows, stream=stream, stream_stride=stream_stride))
+        max_rows=max_rows, stream=stream, stream_stride=stream_stride,
+        precision=precision))
 
 
 @plan_cache
 def _sharded_proj_fwd(mesh, names: tuple, with_lengths: bool, words: tuple,
                       d: int, engine: str, interpret: bool, batch_tile: int,
-                      max_rows: int):
+                      max_rows: int, precision: str = "fp32"):
     """shard_map wrapper around :func:`projected_forward_only`'s body."""
     return _shard_wrap(mesh, names, with_lengths, partial(
         _projected_fwd_local, words=words, d=d, engine=engine,
-        interpret=interpret, batch_tile=batch_tile, max_rows=max_rows))
+        interpret=interpret, batch_tile=batch_tile, max_rows=max_rows,
+        precision=precision))
 
 
 # ---------------------------------------------------------------------------
@@ -759,8 +969,9 @@ def _gram_ring(mesh, names: tuple, size: int, engine: str, interpret: bool,
 
 
 def gram(Sx: jax.Array, Sy: jax.Array, weights: jax.Array, *,
-         backend: str = "auto", block_words: int = 512, bx_tile: int = 128,
-         by_tile: int = 128) -> jax.Array:
+         backend: str = "auto", block_words: int | None = None,
+         bx_tile: int | None = None, by_tile: int | None = None,
+         precision: str = "fp32") -> jax.Array:
     """Weighted signature Gram product (B_x, D), (B_y, D), (D,) -> (B_x, B_y).
 
     The tiled route of the signature kernel k_ω(x, y) = S_x diag(ω) S_yᵀ:
@@ -778,15 +989,29 @@ def gram(Sx: jax.Array, Sy: jax.Array, weights: jax.Array, *,
     (exact: zero rows / columns are sliced back off).
     """
     engine, interpret = resolve_backend(backend)
+    precision = canon_precision(precision)
     if engine == "hybrid":  # the gram product has no dense/word split
         engine, interpret = "jax", False
-    if block_words < 1:
-        raise ValueError(f"block_words must be >= 1, got {block_words}")
     if Sx.ndim != 2 or Sy.ndim != 2 or Sy.shape[1] != Sx.shape[1] \
             or weights.shape != (Sx.shape[1],):
         raise ValueError(
             f"gram needs Sx (B_x, D), Sy (B_y, D), weights (D,); got "
             f"{Sx.shape}, {Sy.shape}, {weights.shape}")
+    if block_words is None or bx_tile is None or by_tile is None:
+        hit = autotune.lookup("gram", engine=engine, D=Sx.shape[1],
+                              Bx=Sx.shape[0], By=Sy.shape[0],
+                              precision=precision)
+        block_words = hit.get("block_words", 512) if block_words is None \
+            else block_words
+        bx_tile = hit.get("bx_tile", 128) if bx_tile is None else bx_tile
+        by_tile = hit.get("by_tile", 128) if by_tile is None else by_tile
+    if block_words < 1:
+        raise ValueError(f"block_words must be >= 1, got {block_words}")
+    # precision: rounding the signature operands IS the semantics (both
+    # engines then accumulate the same values in fp32); the STE quantiser
+    # keeps exact fp32 cotangents for the rounded forward.
+    Sx = quantise_increments(Sx, precision)
+    Sy = quantise_increments(Sy, precision)
     mb = _mesh_batch()
     if mb is not None:
         mesh, names, size = mb
@@ -818,50 +1043,117 @@ def _mask_stream_out(out: jax.Array, M: int, stride: int,
 def _signature_local(increments: jax.Array, lengths, *, depth: int,
                      engine: str, interpret: bool, backward: str,
                      batch_tile: int, split: int | None, time_chunks: int,
-                     stream: bool, stream_stride: int) -> jax.Array:
+                     stream: bool, stream_stride: int, transform=None,
+                     x0=None, precision: str = "fp32") -> jax.Array:
     """Single-device truncated-signature dispatch — the body of
     :func:`signature` after validation and mesh routing.  Under a mesh this
     runs per shard inside :func:`_sharded_sig` (never consults the context
-    again, so shard_map bodies cannot recurse into the mesh branch)."""
+    again, so shard_map bodies cannot recurse into the mesh branch).
+
+    Precision discipline: the increments are quantised HERE, once, before any
+    engine or custom VJP sees them — rounding is the semantics (every engine
+    agrees bit-for-bit on what it accumulates), while the kernels' storage
+    dtype handles the bandwidth side.  The STE-style quantiser keeps fp32
+    cotangents, so gradients are exact for the rounded forward.
+    """
+    spec = transform
+    if spec is None:
+        if lengths is not None:
+            lengths = as_lengths(lengths, increments.shape[0])
+            increments = mask_increments(increments, lengths)
+        increments = quantise_increments(increments, precision)
+        if stream:
+            if engine == "jax" or backward == "autodiff" \
+                    or increments.shape[1] == 0:  # M=0: no emissions
+                out = signature_from_increments(
+                    increments, depth, stream=True,
+                    stream_stride=stream_stride, backward=backward,
+                    backend="jax")
+            else:
+                out = _pallas_sig_stream(depth, stream_stride, batch_tile,
+                                         split, interpret,
+                                         precision)(increments)
+            return _mask_stream_out(out, increments.shape[1], stream_stride,
+                                    lengths)
+        if engine == "jax" or backward == "autodiff":
+            # autodiff has no Pallas rule: route to the jax engine entirely so
+            # the forward actually produces the residuals the scan AD consumes.
+            return signature_from_increments(increments, depth,
+                                             backward=backward, backend="jax")
+        if time_chunks > 1:
+            return _time_parallel_combine(
+                lambda x: _signature_local(x, None, depth=depth, engine=engine,
+                                           interpret=interpret,
+                                           backward=backward,
+                                           batch_tile=batch_tile, split=split,
+                                           time_chunks=1, stream=False,
+                                           stream_stride=1,
+                                           precision=precision),
+                increments, depth, time_chunks)
+        if backward == "checkpoint":
+            chunk = default_chunk(increments.shape[1])
+            return _pallas_sig_checkpoint(depth, chunk, batch_tile, split,
+                                          interpret, precision)(increments)
+        return _pallas_sig_inverse(depth, batch_tile, split, interpret,
+                                   precision)(increments)
+    # ---- fused-transform cell -------------------------------------------
+    if engine == "jax" or backward == "autodiff" or increments.shape[1] == 0:
+        # the pure-JAX fused scan owns masking/basepoint/taux bookkeeping
+        return signature_from_increments(
+            increments, depth, stream=stream, stream_stride=stream_stride,
+            backward=backward, backend="jax", lengths=lengths, transform=spec,
+            x0=x0, precision=precision)
     if lengths is not None:
         lengths = as_lengths(lengths, increments.shape[0])
         increments = mask_increments(increments, lengths)
+    if spec.basepoint:
+        if x0 is None:
+            raise ValueError("transform with basepoint needs x0= (the path "
+                             "start point, shape (B, d)); repro.core."
+                             "signature.signature passes it automatically")
+        x0 = jnp.asarray(x0).astype(increments.dtype)
+        increments = jnp.concatenate([x0[:, None, :], increments], axis=1)
+        lengths = None if lengths is None else lengths + 1
+    increments = quantise_increments(increments, precision)
+    kspec = dataclasses_replace_nobp(spec)
+    if not kspec:
+        # basepoint-only: just one prepended increment — plain engines
+        # (lengths already shifted; re-masking the prepended batch is exact)
+        return _signature_local(increments, lengths, depth=depth,
+                                engine=engine, interpret=interpret,
+                                backward=backward, batch_tile=batch_tile,
+                                split=split, time_chunks=time_chunks,
+                                stream=stream, stream_stride=stream_stride,
+                                precision=precision)
+    B, M_bp, _ = increments.shape
+    taux = transform_time_aux(kspec, B, M_bp, lengths)
+    M_aug = M_bp * kspec.sub_steps
+    aug_lengths = None if lengths is None else lengths * kspec.sub_steps
     if stream:
-        if engine == "jax" or backward == "autodiff" \
-                or increments.shape[1] == 0:  # M=0: no emissions, any engine
-            out = signature_from_increments(
-                increments, depth, stream=True, stream_stride=stream_stride,
-                backward=backward, backend="jax")
-        else:
-            out = _pallas_sig_stream(depth, stream_stride, batch_tile, split,
-                                     interpret)(increments)
-        return _mask_stream_out(out, increments.shape[1], stream_stride,
-                                lengths)
-    if engine == "jax" or backward == "autodiff":
-        # autodiff has no Pallas rule: route to the jax engine entirely so
-        # the forward actually produces the residuals the scan AD consumes.
-        return signature_from_increments(increments, depth, backward=backward,
-                                         backend="jax")
-    if time_chunks > 1:
-        return _time_parallel_combine(
-            lambda x: _signature_local(x, None, depth=depth, engine=engine,
-                                       interpret=interpret, backward=backward,
-                                       batch_tile=batch_tile, split=split,
-                                       time_chunks=1, stream=False,
-                                       stream_stride=1),
-            increments, depth, time_chunks)
-    if backward == "checkpoint":
-        chunk = default_chunk(increments.shape[1])
-        return _pallas_sig_checkpoint(depth, chunk, batch_tile, split,
-                                      interpret)(increments)
-    return _pallas_sig_inverse(depth, batch_tile, split, interpret)(increments)
+        out = _pallas_sig_fused_stream(depth, stream_stride, batch_tile,
+                                       split, interpret, kspec,
+                                       precision)(increments, taux)
+        return _mask_stream_out(out, M_aug, stream_stride, aug_lengths)
+    if time_chunks > 1 or backward == "checkpoint":
+        # materialise-then-sweep fallback (support matrix): the augment is
+        # linear jnp, so autodiff through it IS the transform adjoint and the
+        # chunked cells run unchanged over the augmented increments.
+        e = fused_augment(increments, taux, kspec)
+        return _signature_local(e, None, depth=depth, engine=engine,
+                                interpret=interpret, backward=backward,
+                                batch_tile=batch_tile, split=split,
+                                time_chunks=time_chunks, stream=False,
+                                stream_stride=1, precision=precision)
+    return _pallas_sig_fused_inverse(depth, batch_tile, split, interpret,
+                                     kspec, precision)(increments, taux)
 
 
 def signature(increments: jax.Array, depth: int, *, backend: str = "auto",
-              backward: str = "inverse", batch_tile: int = 128,
+              backward: str = "inverse", batch_tile: int | None = None,
               split: int | None = None, time_chunks: int = 1,
               stream: bool = False, stream_stride: int = 1,
-              lengths=None) -> jax.Array:
+              lengths=None, transform=None, x0=None,
+              precision: str = "fp32") -> jax.Array:
     """Truncated signature (B, M, d) -> (B, D_sig), differentiable on every
     backend (see the support matrix in the module docstring).
 
@@ -876,6 +1168,22 @@ def signature(increments: jax.Array, depth: int, *, backend: str = "auto",
     additionally masked after each example's true-terminal slot
     (:func:`repro.core.signature.stream_emit_slots` gathers it).
 
+    ``transform`` (``"time_augment"``, ``"lead_lag"``, ``"basepoint"``, or a
+    ``+``-joined composition — :func:`repro.core.transforms.as_transform`)
+    applies the path transform FUSED into the engine sweep: the augmented
+    increment is built in VMEM/registers per Horner sub-step and the
+    (B, M_aug, d_aug) intermediate never materialises (forward, streamed,
+    and both custom-VJP backwards; streamed strides/lengths count AUGMENTED
+    steps).  ``x0`` (B, d) is the path start, required iff the transform
+    includes basepoint.  ``precision="bf16_fp32"`` rounds increments to bf16
+    (storage + traffic) while accumulating in fp32 — see the module
+    docstring for the error model.
+
+    ``batch_tile=None`` (the default) consults the persistent autotuner
+    (:mod:`repro.kernels.autotune`) for this dispatch cell and falls back to
+    128; an explicit value always wins.  A cached autotune entry may also
+    supply ``split`` when it is not passed.
+
     Under an installed ``sharding_ctx(mesh)`` whose rules shard the "batch"
     logical axis, the call is SPMD: the batch is split over the mesh with
     ``shard_map`` and each shard runs this same cell (see the mesh note in
@@ -884,6 +1192,8 @@ def signature(increments: jax.Array, depth: int, *, backend: str = "auto",
     """
     engine, interpret = resolve_backend(backend)
     _check_backward(backward)
+    precision = canon_precision(precision)
+    spec = as_transform(transform)
     if engine == "hybrid":
         raise ValueError(
             "backend='hybrid' only applies to projected word sets (the "
@@ -898,19 +1208,40 @@ def signature(increments: jax.Array, depth: int, *, backend: str = "auto",
             raise NotImplementedError(
                 "stream=True is incompatible with time_chunks > 1: chunked "
                 "signatures only reconstruct the terminal state")
+    d_eff = transform_dim(spec, increments.shape[-1]) if spec \
+        else increments.shape[-1]
+    M_eff = transform_steps(spec, increments.shape[1]) if spec \
+        else increments.shape[1]
+    if batch_tile is None:
+        hit = autotune.lookup("sig_trunc", engine=engine, d=d_eff,
+                              depth=depth, M=M_eff, B=increments.shape[0],
+                              precision=precision)
+        batch_tile = hit.get("batch_tile", 128)
+        if split is None:
+            split = hit.get("split")
     kw = dict(depth=depth, engine=engine, interpret=interpret,
               backward=backward, batch_tile=batch_tile, split=split,
               time_chunks=time_chunks, stream=stream,
               stream_stride=stream_stride)
     mb = _mesh_batch()
     if mb is None:
-        return _signature_local(increments, lengths, **kw)
+        return _signature_local(increments, lengths, **kw, transform=spec,
+                                x0=x0, precision=precision)
     mesh, names, size = mb
     if lengths is not None:
         lengths = as_lengths(lengths, increments.shape[0])
+    if spec:
+        # mesh × transform: increment-level materialise (support matrix) —
+        # the augment is linear jnp, so its adjoint rides ordinary AD and the
+        # per-shard custom VJPs run unchanged over augmented increments.
+        if lengths is not None:
+            increments, lengths = augment_increments(increments, spec, x0=x0,
+                                                     lengths=lengths)
+        else:
+            increments = augment_increments(increments, spec, x0=x0)
     fn = _sharded_sig(mesh, names, lengths is not None, depth, engine,
                       interpret, backward, batch_tile, split, time_chunks,
-                      stream, stream_stride)
+                      stream, stream_stride, precision)
     out = _apply_sharded(fn, size, increments, lengths)
     if stream:
         return shard_constraint(out, "batch", "path_time", "sig_words")
@@ -920,14 +1251,57 @@ def signature(increments: jax.Array, depth: int, *, backend: str = "auto",
 def _projected_local(increments: jax.Array, lengths, *, words: tuple, d: int,
                      engine: str, interpret: bool, backward: str,
                      batch_tile: int, max_rows: int, stream: bool,
-                     stream_stride: int) -> jax.Array:
+                     stream_stride: int, transform=None, x0=None,
+                     precision: str = "fp32") -> jax.Array:
     """Single-device projected-signature dispatch — the body of
     :func:`projected` after validation and mesh routing (``max_rows`` is
-    already resolved from any caller-supplied TiledPlan)."""
+    already resolved from any caller-supplied TiledPlan).  Same precision
+    discipline as :func:`_signature_local`: quantise once at dispatch, every
+    engine sees the rounded values."""
     wplan = _plan_for_words(words, d)
+    spec = transform
+    if spec is not None:
+        # fused-transform cell: the word kernel fuses lead_lag/time; every
+        # other engine × backward cell runs the documented materialise-then-
+        # sweep fallback over augmented increments.
+        if lengths is not None:
+            lengths = as_lengths(lengths, increments.shape[0])
+            increments = mask_increments(increments, lengths)
+        if spec.basepoint:
+            if x0 is None:
+                raise ValueError("transform with basepoint needs x0= (the "
+                                 "path start point, shape (B, d))")
+            x0 = jnp.asarray(x0).astype(increments.dtype)
+            increments = jnp.concatenate([x0[:, None, :], increments], axis=1)
+            lengths = None if lengths is None else lengths + 1
+        increments = quantise_increments(increments, precision)
+        kspec = dataclasses_replace_nobp(spec)
+        kw = dict(words=words, d=d, engine=engine, interpret=interpret,
+                  backward=backward, batch_tile=batch_tile, max_rows=max_rows,
+                  stream=stream, stream_stride=stream_stride,
+                  precision=precision)
+        if not kspec:  # basepoint-only: one prepended increment
+            return _projected_local(increments, lengths, **kw)
+        B, M_bp, _ = increments.shape
+        taux = transform_time_aux(kspec, B, M_bp, lengths)
+        M_aug = M_bp * kspec.sub_steps
+        aug_lengths = None if lengths is None else lengths * kspec.sub_steps
+        if engine in ("jax", "hybrid") or backward == "autodiff" \
+                or M_aug == 0 or (not stream and backward != "inverse"):
+            e = fused_augment(increments, taux, kspec)
+            return _projected_local(e, aug_lengths, **kw)
+        if stream:
+            out = _pallas_proj_fused_stream(
+                wplan.words, wplan.d, stream_stride, batch_tile, max_rows,
+                interpret, kspec, precision)(increments, taux)
+            return _mask_stream_out(out, M_aug, stream_stride, aug_lengths)
+        return _pallas_proj_fused_inverse(
+            wplan.words, wplan.d, batch_tile, max_rows, interpret, kspec,
+            precision)(increments, taux)
     if lengths is not None:
         lengths = as_lengths(lengths, increments.shape[0])
         increments = mask_increments(increments, lengths)
+    increments = quantise_increments(increments, precision)
     if engine == "hybrid":
         if backward == "checkpoint":
             # no chunk-boundary buffer in the hybrid engine: run on jax
@@ -942,8 +1316,8 @@ def _projected_local(increments: jax.Array, lengths, *, words: tuple, d: int,
                 backward=backward, backend="jax")
         else:
             out = _pallas_proj_stream(wplan.words, wplan.d, stream_stride,
-                                      batch_tile, max_rows,
-                                      interpret)(increments)
+                                      batch_tile, max_rows, interpret,
+                                      precision)(increments)
         return _mask_stream_out(out, increments.shape[1], stream_stride,
                                 lengths)
     if engine == "jax" or backward != "inverse":
@@ -952,13 +1326,14 @@ def _projected_local(increments: jax.Array, lengths, *, words: tuple, d: int,
         return projected_signature_from_increments(
             increments, wplan, backward=backward, backend="jax")
     return _pallas_proj_inverse(wplan.words, wplan.d, batch_tile, max_rows,
-                                interpret)(increments)
+                                interpret, precision)(increments)
 
 
 def projected(increments: jax.Array, plan, *, backend: str = "auto",
-              backward: str = "inverse", batch_tile: int = 128,
+              backward: str = "inverse", batch_tile: int | None = None,
               max_rows: int = 256, stream: bool = False,
-              stream_stride: int = 1, lengths=None) -> jax.Array:
+              stream_stride: int = 1, lengths=None, transform=None,
+              x0=None, precision: str = "fp32") -> jax.Array:
     """Projected signature over a word set / plan (B, M, d) -> (B, |I|),
     differentiable on every backend.  ``plan`` may be a WordPlan, a
     TiledPlan, or an iterable of letter tuples.
@@ -968,10 +1343,26 @@ def projected(increments: jax.Array, plan, *, backend: str = "auto",
     exactness guarantees as :func:`signature`.  An installed
     ``sharding_ctx(mesh)`` sharding the "batch" logical axis makes the call
     SPMD exactly like :func:`signature`.
+
+    ``transform`` / ``x0`` / ``precision`` mirror :func:`signature`: the
+    word set is over the AUGMENTED alphabet (letters index the transformed
+    channels, ``wplan.d == transform_dim(transform, d_raw)``), the pallas
+    inverse/stream cells fuse the transform into the kernel time loop, and
+    every other cell materialises augmented increments once then sweeps
+    (support matrix).  ``batch_tile=None`` consults the autotuner.
     """
     engine, interpret = resolve_backend(backend)
     _check_backward(backward)
-    wplan, tplan = _normalise_plans(plan, increments.shape[-1])
+    precision = canon_precision(precision)
+    spec = as_transform(transform)
+    d_in = increments.shape[-1]
+    d_eff = transform_dim(spec, d_in) if spec else d_in
+    wplan, tplan = _normalise_plans(plan, d_eff)
+    if spec and wplan.d != d_eff:
+        raise ValueError(
+            f"projected word plan is over d={wplan.d} letters, but transform "
+            f"{spec} maps d={d_in} input channels to {d_eff} augmented "
+            f"channels — build the plan over the augmented alphabet")
     if engine == "hybrid" and stream:
         raise NotImplementedError(
             "backend='hybrid' has no streamed forward; use "
@@ -984,18 +1375,33 @@ def projected(increments: jax.Array, plan, *, backend: str = "auto",
             raise unsupported_stream_backward(backward)
     if tplan is not None:  # keep the caller's tile granularity
         max_rows = max(p.closure_size for p in tplan.tiles)
+    if batch_tile is None:
+        hit = autotune.lookup(
+            "sig_words", engine=engine, d=wplan.d, depth=wplan.depth,
+            M=transform_steps(spec, increments.shape[1]) if spec
+            else increments.shape[1],
+            B=increments.shape[0], precision=precision)
+        batch_tile = hit.get("batch_tile", 128)
     kw = dict(words=wplan.words, d=wplan.d, engine=engine,
               interpret=interpret, backward=backward, batch_tile=batch_tile,
               max_rows=max_rows, stream=stream, stream_stride=stream_stride)
     mb = _mesh_batch()
     if mb is None:
-        return _projected_local(increments, lengths, **kw)
+        return _projected_local(increments, lengths, **kw, transform=spec,
+                                x0=x0, precision=precision)
     mesh, names, size = mb
     if lengths is not None:
         lengths = as_lengths(lengths, increments.shape[0])
+    if spec:
+        # mesh × transform: increment-level materialise (support matrix)
+        if lengths is not None:
+            increments, lengths = augment_increments(increments, spec, x0=x0,
+                                                     lengths=lengths)
+        else:
+            increments = augment_increments(increments, spec, x0=x0)
     fn = _sharded_proj(mesh, names, lengths is not None, wplan.words,
                        wplan.d, engine, interpret, backward, batch_tile,
-                       max_rows, stream, stream_stride)
+                       max_rows, stream, stream_stride, precision)
     out = _apply_sharded(fn, size, increments, lengths)
     if stream:
         return shard_constraint(out, "batch", "path_time", "sig_words")
@@ -1004,12 +1410,34 @@ def projected(increments: jax.Array, plan, *, backend: str = "auto",
 
 def _projected_fwd_local(increments: jax.Array, lengths, *, words: tuple,
                          d: int, engine: str, interpret: bool,
-                         batch_tile: int, max_rows: int) -> jax.Array:
+                         batch_tile: int, max_rows: int, transform=None,
+                         x0=None, precision: str = "fp32") -> jax.Array:
     """Single-device body of :func:`projected_forward_only`."""
     wplan = _plan_for_words(words, d)
     if lengths is not None:
-        increments = mask_increments(
-            increments, as_lengths(lengths, increments.shape[0]))
+        lengths = as_lengths(lengths, increments.shape[0])
+        increments = mask_increments(increments, lengths)
+    spec = transform
+    taux = None
+    kspec = None
+    if spec is not None:
+        if spec.basepoint:
+            if x0 is None:
+                raise ValueError("transform with basepoint needs x0= (the "
+                                 "path start point, shape (B, d))")
+            increments = jnp.concatenate(
+                [jnp.asarray(x0).astype(increments.dtype)[:, None, :],
+                 increments], axis=1)
+            lengths = None if lengths is None else lengths + 1
+        kspec = dataclasses_replace_nobp(spec) or None
+    increments = quantise_increments(increments, precision)
+    if kspec is not None:
+        taux = transform_time_aux(kspec, increments.shape[0],
+                                  increments.shape[1], lengths)
+        if engine in ("jax", "hybrid"):
+            # materialise-then-sweep fallback (support matrix)
+            increments = fused_augment(increments, taux, kspec)
+            kspec = taux = None
     if engine == "hybrid":
         return _hybrid_projected(increments, wplan, "inverse")
     if engine == "jax":
@@ -1017,30 +1445,59 @@ def _projected_fwd_local(increments: jax.Array, lengths, *, words: tuple,
                                                    backend="jax")
     tplan = _tiled_for_words(wplan.words, wplan.d, max_rows)
     return sig_words(increments, tplan, batch_tile=batch_tile,
-                     interpret=interpret)
+                     interpret=interpret, transform=kspec, taux=taux,
+                     precision=precision)
 
 
 def projected_forward_only(increments: jax.Array, plan, *,
-                           backend: str = "auto", batch_tile: int = 128,
-                           max_rows: int = 256, lengths=None) -> jax.Array:
+                           backend: str = "auto", batch_tile: int | None = None,
+                           max_rows: int = 256, lengths=None, transform=None,
+                           x0=None, precision: str = "fp32") -> jax.Array:
     """Inference-only projected signature: skips the closure readout (the
     kernel gathers just the requested rows).  Not differentiable on the
     pallas engines — use :func:`projected` for training.  Mesh-aware like
-    :func:`projected` (per-shard kernels under a batch-sharding context)."""
+    :func:`projected` (per-shard kernels under a batch-sharding context);
+    ``transform`` / ``x0`` / ``precision`` / autotuned ``batch_tile`` mirror
+    :func:`projected`."""
     engine, interpret = resolve_backend(backend)
-    wplan, tplan = _normalise_plans(plan, increments.shape[-1])
+    precision = canon_precision(precision)
+    spec = as_transform(transform)
+    d_in = increments.shape[-1]
+    d_eff = transform_dim(spec, d_in) if spec else d_in
+    wplan, tplan = _normalise_plans(plan, d_eff)
+    if spec and wplan.d != d_eff:
+        raise ValueError(
+            f"projected word plan is over d={wplan.d} letters, but transform "
+            f"{spec} maps d={d_in} input channels to {d_eff} augmented "
+            f"channels — build the plan over the augmented alphabet")
     if tplan is not None:  # keep the caller's tile granularity
         max_rows = max(p.closure_size for p in tplan.tiles)
+    if batch_tile is None:
+        hit = autotune.lookup(
+            "sig_words", engine=engine, d=wplan.d, depth=wplan.depth,
+            M=transform_steps(spec, increments.shape[1]) if spec
+            else increments.shape[1],
+            B=increments.shape[0], precision=precision)
+        batch_tile = hit.get("batch_tile", 128)
     kw = dict(words=wplan.words, d=wplan.d, engine=engine,
               interpret=interpret, batch_tile=batch_tile, max_rows=max_rows)
     mb = _mesh_batch()
     if mb is None:
-        return _projected_fwd_local(increments, lengths, **kw)
+        return _projected_fwd_local(increments, lengths, **kw, transform=spec,
+                                    x0=x0, precision=precision)
     mesh, names, size = mb
     if lengths is not None:
         lengths = as_lengths(lengths, increments.shape[0])
+    if spec:
+        # mesh × transform: increment-level materialise (support matrix)
+        if lengths is not None:
+            increments, lengths = augment_increments(increments, spec, x0=x0,
+                                                     lengths=lengths)
+        else:
+            increments = augment_increments(increments, spec, x0=x0)
     fn = _sharded_proj_fwd(mesh, names, lengths is not None, wplan.words,
-                           wplan.d, engine, interpret, batch_tile, max_rows)
+                           wplan.d, engine, interpret, batch_tile, max_rows,
+                           precision)
     out = _apply_sharded(fn, size, increments, lengths)
     return shard_constraint(out, "batch", "sig_words")
 
@@ -1075,8 +1532,10 @@ def _time_parallel_combine(sig_flat_fn, increments: jax.Array, depth: int,
 
 def signature_time_parallel(increments: jax.Array, depth: int,
                             time_chunks: int, *, backend: str = "auto",
-                            backward: str = "inverse", batch_tile: int = 128,
-                            split: int | None = None) -> jax.Array:
+                            backward: str = "inverse",
+                            batch_tile: int | None = None,
+                            split: int | None = None,
+                            precision: str = "fp32") -> jax.Array:
     """Chunked-time signature: fold chunks into batch, tree-Chen-combine.
 
     Differentiable end to end: the per-chunk signatures carry the dispatch
@@ -1085,5 +1544,5 @@ def signature_time_parallel(increments: jax.Array, depth: int,
     return _time_parallel_combine(
         lambda x: signature(x, depth, backend=backend, backward=backward,
                             batch_tile=batch_tile, split=split,
-                            time_chunks=1),
+                            time_chunks=1, precision=precision),
         increments, depth, time_chunks)

@@ -52,28 +52,51 @@ def cone_rows(d: int, depth: int, s: int) -> int:
     return int(cone_offsets(d, depth, s)[-1])
 
 
+def state_footprint(d: int, depth: int, s: int, batch_tile: int,
+                    itemsize: int = 4) -> int:
+    """Per-cell VMEM bytes at split ``s``: the resident state block plus the
+    chain temporaries (which roughly double the top cone level).  ``itemsize``
+    is the element byte width of the state dtype — 4 for fp32, 2 for bf16 —
+    so VMEM budgeting stays correct under mixed precision."""
+    rows = max(0, s - 1) + cone_rows(d, depth, s)
+    return (rows + d ** (depth - s)) * batch_tile * itemsize
+
+
 def choose_split(d: int, depth: int, batch_tile: int,
-                 vmem_budget: int = 6 * 2**20) -> int:
+                 vmem_budget: int = 6 * 2**20, itemsize: int = 4) -> int:
     """Smallest split level s whose per-cell state fits the VMEM budget."""
     for s in range(0, depth):
-        state = (max(0, s - 1) + cone_rows(d, depth, s)) * batch_tile * 4
-        # chain temporaries roughly double the top cone level
-        state += d ** (depth - s) * batch_tile * 4
-        if state <= vmem_budget:
+        if state_footprint(d, depth, s, batch_tile, itemsize) <= vmem_budget:
             return s
     return depth - 1
 
 
-def _kernel(incs_ref, out_ref, *scratch, d: int, depth: int, s: int, M: int,
-            stream_stride: int = 0):
+def _kernel(incs_ref, *refs, d: int, depth: int, s: int, M: int,
+            stream_stride: int = 0, fuse_ll: bool = False,
+            fuse_time: bool = False):
     """Cone update loop.  Non-streamed: ``out_ref`` IS the running state.
     Streamed (``stream_stride >= 1``): the state lives in the trailing VMEM
-    scratch ref and strided snapshots are stored into ``out_ref``."""
+    scratch ref and strided snapshots are stored into ``out_ref``.
+
+    Fused transforms (``fuse_ll`` / ``fuse_time``): the input block holds RAW
+    increments (M, d_raw, B) and each augmented increment — channel layout
+    [t?, lag, lead] matching ``core.transforms`` — is built in VMEM right
+    here, ``sub = 2 if fuse_ll else 1`` Horner sub-steps per raw step.  The
+    (M_aug, d_aug, B) block never exists; ``d`` is the AUGMENTED channel
+    count and streamed emission is strided over the augmented step axis.
+    ``fuse_time`` reads a (2, B) aux ref ``[dt; n_valid_aug]`` (zero time
+    increments past each example's true augmented end)."""
+    refs = list(refs)
+    taux_ref = refs.pop(0) if fuse_time else None
+    out_ref = refs.pop(0)
+    scratch = refs
     stream = bool(scratch)
     state_ref = scratch[0] if stream else out_ref
     n_path = max(0, s - 1)
     base = cone_base_level(s)
     co = cone_offsets(d, depth, s)
+    sub = 2 if fuse_ll else 1
+    M_aug = M * sub
 
     def cone_slice(n):  # rows of global level n (n >= base)
         k = n - base
@@ -85,8 +108,8 @@ def _kernel(incs_ref, out_ref, *scratch, d: int, depth: int, s: int, M: int,
 
     state_ref[...] = jnp.zeros(state_ref.shape, state_ref.dtype)
 
-    def body(j, _):
-        dx = incs_ref[pl.ds(j, 1), :, :][0]  # (d, B)
+    def update(dx):
+        """One augmented-increment Horner update.  dx: (d, B) in state dtype."""
         B = dx.shape[-1]
         # per-path-step increment components ΔX^{(u_k)}  -> (1, B)
         dxl = [jax.lax.dynamic_slice(dx, (letters[k], 0), (1, B))
@@ -123,15 +146,31 @@ def _kernel(incs_ref, out_ref, *scratch, d: int, depth: int, s: int, M: int,
             for jj in range(2, n + 1):
                 acc = (path_val(jj - 1) + acc) * dxl[jj - 1] * (1.0 / (n - jj + 1))
             state_ref[n - 1:n, :] = state_ref[n - 1:n, :] + acc
-        if stream:
-            # strided per-step emission: slot q holds S_{0,t_{j+1}}; the
-            # terminal step is always emitted so out[-1] is the full signature
-            q = j // stream_stride
 
-            @pl.when((((j + 1) % stream_stride) == 0) | (j == M - 1))
-            def _emit():
-                pl.store(out_ref, (pl.ds(q, 1), slice(None), slice(None)),
-                         state_ref[...][None])
+    def body(j, _):
+        g = incs_ref[pl.ds(j, 1), :, :][0].astype(state_ref.dtype)  # (d_raw, B)
+        for p in range(sub):
+            ja = sub * j + p  # augmented step index
+            if fuse_ll or fuse_time:
+                parts = ([jnp.zeros_like(g), g] if p == 0 else
+                         [g, jnp.zeros_like(g)]) if fuse_ll else [g]
+                if fuse_time:
+                    trow = taux_ref[0:1, :] * (
+                        ja < taux_ref[1:2, :]).astype(state_ref.dtype)
+                    parts = [trow] + parts
+                e = jnp.concatenate(parts, axis=0)  # (d_aug, B) in VMEM
+            else:
+                e = g
+            update(e)
+            if stream:
+                # strided per-step emission over the augmented axis: slot q
+                # holds S_{0,t_{ja+1}}; the terminal step is always emitted
+                q = ja // stream_stride
+
+                @pl.when((((ja + 1) % stream_stride) == 0) | (ja == M_aug - 1))
+                def _emit():
+                    pl.store(out_ref, (pl.ds(q, 1), slice(None), slice(None)),
+                             state_ref[...][None])
         return 0
 
     jax.lax.fori_loop(0, M, body, 0)
@@ -174,24 +213,61 @@ def _reassemble_stream(out, d, depth, s, B):
     return jnp.moveaxis(flat[:, :, :B], -1, 0)  # (B, T, D_sig)
 
 
+def _fuse_flags(transform):
+    """Validate a kernel-level transform spec -> (fuse_ll, fuse_time)."""
+    if transform is None:
+        return False, False
+    if transform.basepoint:
+        raise ValueError("kernel-level transform must not include basepoint "
+                         "(dispatch prepends the x0 increment first)")
+    return transform.lead_lag, transform.time
+
+
+def _storage_dtype(precision: str):
+    """Increments-block storage dtype: bf16 halves the VMEM/HBM traffic of
+    the input block while accumulation stays fp32 in the state block."""
+    if precision == "bf16_fp32":
+        return jnp.bfloat16
+    if precision == "fp32":
+        return jnp.float32
+    raise ValueError(f"unknown precision {precision!r}")
+
+
 @functools.partial(jax.jit, static_argnames=("depth", "batch_tile", "split",
                                              "interpret", "vmem_budget",
-                                             "stream", "stream_stride"))
+                                             "stream", "stream_stride",
+                                             "transform", "precision"))
 def sig_trunc(increments: jax.Array, depth: int, *, batch_tile: int = 128,
               split: int | None = None, interpret: bool = True,
               vmem_budget: int = 6 * 2**20, stream: bool = False,
-              stream_stride: int = 1) -> jax.Array:
+              stream_stride: int = 1, transform=None, taux=None,
+              precision: str = "fp32") -> jax.Array:
     """Truncated signature via the Pallas cone kernel.  (B, M, d) -> (B, D_sig).
 
     ``stream=True`` emits every ``stream_stride``-th prefix signature (the
     terminal step always included): (B, M, d) -> (B, M_out, D_sig) with
-    M_out = ceil(M / stream_stride).
+    M_out = ceil(M_aug / stream_stride).
+
+    ``transform`` (a :class:`repro.core.transforms.Transform` WITHOUT
+    basepoint — dispatch prepends the x0 increment) fuses lead_lag /
+    time_augment into the time loop: ``increments`` stay raw (B, M, d_raw)
+    and the augmented increment is built in VMEM per sub-step.  ``taux`` is
+    the (B, 2) ``transform_time_aux`` array, required iff the transform has
+    a time channel.  ``precision="bf16_fp32"`` stores the increments block
+    in bf16 (halved VMEM/HBM traffic) with fp32 accumulators.
     """
-    B, M, d = increments.shape
+    B, M, d_raw = increments.shape
     if depth < 1:
         raise ValueError("depth must be >= 1")
     if stream_stride < 1:
         raise ValueError(f"stream_stride must be >= 1, got {stream_stride}")
+    fuse_ll, fuse_time = _fuse_flags(transform)
+    if fuse_time and taux is None:
+        raise ValueError("transform with a time channel needs taux= "
+                         "(see repro.core.transforms.transform_time_aux)")
+    sub = 2 if fuse_ll else 1
+    d = (2 * d_raw if fuse_ll else d_raw) + (1 if fuse_time else 0)
+    M_aug = M * sub
     s = choose_split(d, depth, batch_tile, vmem_budget) if split is None else split
     if not 0 <= s < depth:
         raise ValueError(f"split {s} outside [0, {depth})")
@@ -200,35 +276,44 @@ def sig_trunc(increments: jax.Array, depth: int, *, batch_tile: int = 128,
     rows = n_path + cone_rows(d, depth, s)
 
     B_pad = -(-B // batch_tile) * batch_tile
-    x = jnp.moveaxis(increments, 0, -1)  # (M, d, B)
-    x = jnp.pad(x, ((0, 0), (0, 0), (0, B_pad - B))).astype(jnp.float32)
+    x = jnp.moveaxis(increments, 0, -1)  # (M, d_raw, B)
+    x = jnp.pad(x, ((0, 0), (0, 0), (0, B_pad - B))).astype(
+        _storage_dtype(precision))
+    kern = functools.partial(_kernel, d=d, depth=depth, s=s, M=M,
+                             fuse_ll=fuse_ll, fuse_time=fuse_time)
+    inputs = [x]
+    in_specs = [pl.BlockSpec((M, d_raw, batch_tile),
+                             lambda bi, c: (0, 0, bi))]
+    if fuse_time:
+        ta = jnp.pad(jnp.asarray(taux, jnp.float32).T,
+                     ((0, 0), (0, B_pad - B)))  # (2, B_pad)
+        inputs.append(ta)
+        in_specs.append(pl.BlockSpec((2, batch_tile), lambda bi, c: (0, bi)))
 
     if not stream:
         out = pl.pallas_call(
-            functools.partial(_kernel, d=d, depth=depth, s=s, M=M),
+            kern,
             grid=(B_pad // batch_tile, n_cells),
-            in_specs=[pl.BlockSpec((M, d, batch_tile),
-                                   lambda bi, c: (0, 0, bi))],
+            in_specs=in_specs,
             out_specs=pl.BlockSpec((rows, batch_tile), lambda bi, c: (c, bi)),
             out_shape=jax.ShapeDtypeStruct((n_cells * rows, B_pad),
                                            jnp.float32),
             interpret=interpret,
-        )(x)
+        )(*inputs)
         out = out.reshape(n_cells, rows, B_pad)
         return _reassemble(out, d, depth, s, B).astype(increments.dtype)
 
-    M_out = -(-M // stream_stride)
+    M_out = -(-M_aug // stream_stride)
     out = pl.pallas_call(
-        functools.partial(_kernel, d=d, depth=depth, s=s, M=M,
-                          stream_stride=stream_stride),
+        functools.partial(kern, stream_stride=stream_stride),
         grid=(B_pad // batch_tile, n_cells),
-        in_specs=[pl.BlockSpec((M, d, batch_tile), lambda bi, c: (0, 0, bi))],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((M_out, rows, batch_tile),
                                lambda bi, c: (0, c, bi)),
         out_shape=jax.ShapeDtypeStruct((M_out, n_cells * rows, B_pad),
                                        jnp.float32),
         scratch_shapes=[pltpu.VMEM((rows, batch_tile), jnp.float32)],
         interpret=interpret,
-    )(x)
+    )(*inputs)
     out = out.reshape(M_out, n_cells, rows, B_pad)
     return _reassemble_stream(out, d, depth, s, B).astype(increments.dtype)

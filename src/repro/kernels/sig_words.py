@@ -42,56 +42,111 @@ def _tile_tables(plan: WordPlan, W_pad: int, depth_pad: int):
     return P, L, inv, emit
 
 
-def _kernel(incs_ref, p_ref, l_ref, inv_ref, emit_ref, out_ref, *scratch,
-            M: int, depth: int, stream_stride: int = 0):
+def tile_footprint(W_pad: int, depth: int, d: int, batch_tile: int,
+                   itemsize: int = 4) -> int:
+    """Per-tile VMEM bytes: the (1+W, B) closure state plus the one-hot
+    tables.  ``itemsize`` is the element byte width of the state dtype (4
+    for fp32, 2 for bf16) — the table bytes follow the same width so mixed-
+    precision budgeting stays correct (mirrors sig_trunc.state_footprint)."""
+    state = (1 + W_pad) * batch_tile * itemsize
+    tables = depth * W_pad * (1 + W_pad + d + 2) * itemsize
+    return state + tables
+
+
+def _kernel(incs_ref, p_ref, l_ref, inv_ref, emit_ref, *refs,
+            M: int, depth: int, stream_stride: int = 0,
+            fuse_ll: bool = False, fuse_time: bool = False):
     """Tile update loop.  Non-streamed: ``out_ref`` IS the running closure
     buffer.  Streamed (``stream_stride >= 1``): the buffer lives in the
     trailing VMEM scratch ref and strided snapshots are stored into
-    ``out_ref`` (one (1+W, B) slab per emitted step)."""
+    ``out_ref`` (one (1+W, B) slab per emitted step).
+
+    Fused transforms (``fuse_ll`` / ``fuse_time``): the input block holds
+    RAW increments (M, d_raw, B); each augmented increment ([t?, lag, lead]
+    channels, matching ``core.transforms``) is built in VMEM per sub-step —
+    the tables are over the AUGMENTED alphabet and emission is strided over
+    the augmented step axis.  ``fuse_time`` reads a (2, B) aux ref
+    ``[dt; n_valid_aug]``."""
+    refs = list(refs)
+    taux_ref = refs.pop(0) if fuse_time else None
+    out_ref = refs.pop(0)
+    scratch = refs
     stream = bool(scratch)
     state_ref = scratch[0] if stream else out_ref
     W1 = state_ref.shape[0]  # 1 + W_pad
     B = state_ref.shape[1]
+    sub = 2 if fuse_ll else 1
+    M_aug = M * sub
     init = jnp.zeros((W1, B), state_ref.dtype).at[0, :].set(1.0)  # S[eps] = 1
     state_ref[...] = init
 
     def body(j, _):
-        dx = incs_ref[pl.ds(j, 1), :, :][0]        # (d, B)
-        S = state_ref[...]                          # (1+W, B), old values
-        acc = jnp.zeros((W1 - 1, B), S.dtype)
-        h = acc
-        for jj in range(depth):                     # Horner steps (Alg. 1)
-            pfx = jnp.dot(p_ref[0, jj], S,          # one-hot gather on MXU
-                          preferred_element_type=S.dtype)
-            dxl = jnp.dot(l_ref[0, jj], dx, preferred_element_type=S.dtype)
-            acc = (pfx + acc) * dxl * inv_ref[0, jj][:, None]
-            h = h + acc * emit_ref[0, jj][:, None]
-        state_ref[1:, :] = S[1:, :] + h
-        if stream:
-            q = j // stream_stride
+        g = incs_ref[pl.ds(j, 1), :, :][0].astype(state_ref.dtype)  # (d_raw, B)
+        for p in range(sub):
+            ja = sub * j + p  # augmented step index
+            if fuse_ll or fuse_time:
+                parts = ([jnp.zeros_like(g), g] if p == 0 else
+                         [g, jnp.zeros_like(g)]) if fuse_ll else [g]
+                if fuse_time:
+                    trow = taux_ref[0:1, :] * (
+                        ja < taux_ref[1:2, :]).astype(state_ref.dtype)
+                    parts = [trow] + parts
+                dx = jnp.concatenate(parts, axis=0)  # (d_aug, B) in VMEM
+            else:
+                dx = g
+            S = state_ref[...]                      # (1+W, B), old values
+            acc = jnp.zeros((W1 - 1, B), S.dtype)
+            h = acc
+            for jj in range(depth):                 # Horner steps (Alg. 1)
+                pfx = jnp.dot(p_ref[0, jj], S,      # one-hot gather on MXU
+                              preferred_element_type=S.dtype)
+                dxl = jnp.dot(l_ref[0, jj], dx, preferred_element_type=S.dtype)
+                acc = (pfx + acc) * dxl * inv_ref[0, jj][:, None]
+                h = h + acc * emit_ref[0, jj][:, None]
+            state_ref[1:, :] = S[1:, :] + h
+            if stream:
+                q = ja // stream_stride
 
-            @pl.when((((j + 1) % stream_stride) == 0) | (j == M - 1))
-            def _emit():
-                pl.store(out_ref, (pl.ds(q, 1), slice(None), slice(None)),
-                         state_ref[...][None])
+                @pl.when((((ja + 1) % stream_stride) == 0) | (ja == M_aug - 1))
+                def _emit():
+                    pl.store(out_ref, (pl.ds(q, 1), slice(None), slice(None)),
+                             state_ref[...][None])
         return 0
 
     jax.lax.fori_loop(0, M, body, 0)
 
 
 @functools.partial(jax.jit, static_argnames=("tplan", "batch_tile", "interpret",
-                                             "stream", "stream_stride"))
+                                             "stream", "stream_stride",
+                                             "transform", "precision"))
 def sig_words(increments: jax.Array, tplan: TiledPlan, *,
               batch_tile: int = 128, interpret: bool = True,
-              stream: bool = False, stream_stride: int = 1) -> jax.Array:
+              stream: bool = False, stream_stride: int = 1, transform=None,
+              taux=None, precision: str = "fp32") -> jax.Array:
     """Projected signature via the Pallas tile kernel.
 
     increments: (B, M, d)  ->  (B, |I|) coefficients in tplan.words order.
     ``stream=True`` emits every ``stream_stride``-th prefix state (terminal
     step always included): (B, M, d) -> (B, M_out, |I|).
+
+    ``transform`` (a basepoint-free :class:`repro.core.transforms.Transform`)
+    fuses lead_lag / time_augment into the time loop: ``increments`` stay raw
+    (B, M, d_raw) while ``tplan`` is over the AUGMENTED alphabet
+    (``tplan.d == transform_dim(transform, d_raw)``); ``taux`` is the (B, 2)
+    ``transform_time_aux`` array, required iff the transform has a time
+    channel.  ``precision="bf16_fp32"`` stores the increments block in bf16
+    with fp32 accumulation.
     """
-    B, M, d = increments.shape
-    assert d == tplan.d
+    from repro.kernels.sig_trunc import _fuse_flags, _storage_dtype
+    B, M, d_raw = increments.shape
+    fuse_ll, fuse_time = _fuse_flags(transform)
+    if fuse_time and taux is None:
+        raise ValueError("transform with a time channel needs taux= "
+                         "(see repro.core.transforms.transform_time_aux)")
+    sub = 2 if fuse_ll else 1
+    d = (2 * d_raw if fuse_ll else d_raw) + (1 if fuse_time else 0)
+    M_aug = M * sub
+    assert d == tplan.d, (d, tplan.d)
     if stream_stride < 1:
         raise ValueError(f"stream_stride must be >= 1, got {stream_stride}")
     tiles = tplan.tiles
@@ -110,22 +165,31 @@ def sig_words(increments: jax.Array, tplan: TiledPlan, *,
 
     B_pad = -(-B // batch_tile) * batch_tile
     x = jnp.moveaxis(increments, 0, -1)
-    x = jnp.pad(x, ((0, 0), (0, 0), (0, B_pad - B))).astype(jnp.float32)
+    x = jnp.pad(x, ((0, 0), (0, 0), (0, B_pad - B))).astype(
+        _storage_dtype(precision))
 
     in_specs = [
-        pl.BlockSpec((M, d, batch_tile), lambda bi, t: (0, 0, bi)),
+        pl.BlockSpec((M, d_raw, batch_tile), lambda bi, t: (0, 0, bi)),
         pl.BlockSpec((1, depth, W_pad, 1 + W_pad), lambda bi, t: (t, 0, 0, 0)),
         pl.BlockSpec((1, depth, W_pad, d), lambda bi, t: (t, 0, 0, 0)),
         pl.BlockSpec((1, depth, W_pad), lambda bi, t: (t, 0, 0)),
         pl.BlockSpec((1, depth, W_pad), lambda bi, t: (t, 0, 0)),
     ]
+    inputs = [x, Pt, Lt, invt, emitt]
+    if fuse_time:
+        ta = jnp.pad(jnp.asarray(taux, jnp.float32).T,
+                     ((0, 0), (0, B_pad - B)))  # (2, B_pad)
+        inputs.append(ta)
+        in_specs.append(pl.BlockSpec((2, batch_tile), lambda bi, t: (0, bi)))
+    kern = functools.partial(_kernel, M=M, depth=depth,
+                             fuse_ll=fuse_ll, fuse_time=fuse_time)
     tile_idx = jnp.asarray([t for t, _ in tplan.gather], dtype=jnp.int32)
     row_idx = jnp.asarray(
         [tiles[t].out_rows[k] for t, k in tplan.gather], dtype=jnp.int32)
 
     if not stream:
         out = pl.pallas_call(
-            functools.partial(_kernel, M=M, depth=depth),
+            kern,
             grid=(B_pad // batch_tile, T),
             in_specs=in_specs,
             out_specs=pl.BlockSpec((1 + W_pad, batch_tile),
@@ -133,15 +197,14 @@ def sig_words(increments: jax.Array, tplan: TiledPlan, *,
             out_shape=jax.ShapeDtypeStruct((T * (1 + W_pad), B_pad),
                                            jnp.float32),
             interpret=interpret,
-        )(x, Pt, Lt, invt, emitt)
+        )(*inputs)
         out = out.reshape(T, 1 + W_pad, B_pad)
         vals = out[tile_idx, row_idx, :B]   # (n_words, B)
         return vals.T.astype(increments.dtype)
 
-    M_out = -(-M // stream_stride)
+    M_out = -(-M_aug // stream_stride)
     out = pl.pallas_call(
-        functools.partial(_kernel, M=M, depth=depth,
-                          stream_stride=stream_stride),
+        functools.partial(kern, stream_stride=stream_stride),
         grid=(B_pad // batch_tile, T),
         in_specs=in_specs,
         out_specs=pl.BlockSpec((M_out, 1 + W_pad, batch_tile),
@@ -150,7 +213,7 @@ def sig_words(increments: jax.Array, tplan: TiledPlan, *,
                                        jnp.float32),
         scratch_shapes=[pltpu.VMEM((1 + W_pad, batch_tile), jnp.float32)],
         interpret=interpret,
-    )(x, Pt, Lt, invt, emitt)
+    )(*inputs)
     out = out.reshape(M_out, T, 1 + W_pad, B_pad)
     vals = out[:, tile_idx, row_idx, :B]    # (M_out, n_words, B)
     return jnp.moveaxis(vals, -1, 0).astype(increments.dtype)

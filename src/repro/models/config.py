@@ -15,6 +15,12 @@ class SigHeadConfig:
     backend: str = "auto"      # engine dispatch (repro.kernels.ops)
     backward: str = "inverse"  # inverse | checkpoint | autodiff
     stream_stride: int = 1     # per-step feature emission stride (sig_stream_features)
+    # path transform fused into the signature sweep ("time_augment" /
+    # "lead_lag" / "basepoint", "+"-composable; None = sign the raw learned
+    # path).  Projected plans must then be over the AUGMENTED alphabet
+    # (transform_dim(transform, channels) letters).
+    transform: Optional[str] = None
+    precision: str = "fp32"    # "fp32" | "bf16_fp32" mixed-precision sweep
     # --- kernel-feature head (repro.sigkernel) ---
     kernel_landmarks: int = 0      # > 0: features are k_ω(path, landmark_j)
     landmark_steps: int = 8        # increments per learned landmark path

@@ -33,7 +33,19 @@ from .config import ModelConfig, SigHeadConfig
 from .layers import _init
 
 
+def _sig_channels(sc: SigHeadConfig) -> int:
+    """Channel count the signature actually runs over: the learned-path
+    channels after the configured fused transform (the displacement feature
+    stays over the RAW channels)."""
+    from repro.core.transforms import as_transform, transform_dim
+    return transform_dim(as_transform(sc.transform), sc.channels)
+
+
 def feature_dim(sc: SigHeadConfig) -> int:
+    if sc.use_logsig and sc.transform is not None:
+        raise NotImplementedError(
+            "use_logsig=True has no fused-transform route; set transform="
+            "None (or apply repro.core.transforms.apply_transform yourself)")
     if sc.kernel_landmarks > 0:
         if sc.use_logsig:
             raise NotImplementedError(
@@ -42,7 +54,7 @@ def feature_dim(sc: SigHeadConfig) -> int:
         return sc.kernel_landmarks + sc.channels
     if sc.use_logsig:
         return logsig_dim(sc.channels, sc.depth) + sc.channels
-    return sig_dim(sc.channels, sc.depth) + sc.channels
+    return sig_dim(_sig_channels(sc), sc.depth) + sc.channels
 
 
 def init_sig_head(key, cfg: ModelConfig, n_out: int) -> dict:
@@ -111,6 +123,7 @@ def sig_stream_features(p, hidden: jax.Array, cfg: ModelConfig,
     the trajectory ragged: emissions past each example's true end are
     zeroed (signature AND displacement columns).
     """
+    from repro.core.transforms import as_transform
     sc = cfg.sig_head
     if sc.use_logsig:
         raise NotImplementedError(
@@ -121,22 +134,33 @@ def sig_stream_features(p, hidden: jax.Array, cfg: ModelConfig,
             "the kernel-feature head has no streamed variant; use "
             "kernel_landmarks=0 for sig_stream_features (or pool with "
             "sig_pool)")
+    spec = as_transform(sc.transform)
+    if spec is not None and (spec.lead_lag or spec.basepoint):
+        # lead_lag doubles / basepoint shifts the emission step axis, so the
+        # emitted rows no longer align 1:1 with the strided raw positions the
+        # displacement column (and the consuming block) index by
+        raise NotImplementedError(
+            "sig_stream_features supports transform=None or 'time_augment' "
+            "only (lead_lag / basepoint change the streamed step axis); "
+            "pool with sig_pool for the full transform set")
     if mask is None:
         path = _learned_path(p, hidden, sc)
         lengths = None
     else:
         path, lengths = _learned_path(p, hidden, sc, mask)
     if plan is not None:
-        feats = projected_signature(path, plan.words, sc.channels, plan=plan,
+        feats = projected_signature(path, plan.words, plan.d, plan=plan,
                                     stream=True,
                                     stream_stride=sc.stream_stride,
                                     backend=sc.backend, backward=sc.backward,
-                                    lengths=lengths)
+                                    lengths=lengths, transform=spec,
+                                    precision=sc.precision)
     else:
         feats = signature(path, sc.depth, stream=True,
                           stream_stride=sc.stream_stride,
                           backend=sc.backend, backward=sc.backward,
-                          lengths=lengths)
+                          lengths=lengths, transform=spec,
+                          precision=sc.precision)
     # per-step displacement rides along, mirroring the pooled feature layout
     M = path.shape[1] - 1
     steps = jnp.asarray(stream_emit_steps(M, sc.stream_stride))
@@ -189,13 +213,17 @@ def sig_kernel_pool(p, hidden: jax.Array, cfg: ModelConfig,
     else:
         path, lengths = _learned_path(p, hidden, sc, mask)
         disp = _ragged_disp(path, lengths)
+    # the transform applies to query AND landmark paths (same RKHS on both
+    # gram legs); the weight table runs over the augmented alphabet
     S = signature(path, sc.depth, backend=sc.backend, backward=sc.backward,
-                  lengths=lengths)
+                  lengths=lengths, transform=sc.transform,
+                  precision=sc.precision)
     lm = p["landmarks"].astype(jnp.float32)
-    S_l = signature(lm, sc.depth, backend=sc.backend, backward=sc.backward)
-    w = jnp.asarray(_kernel_weights(sc.channels, sc.depth,
+    S_l = signature(lm, sc.depth, backend=sc.backend, backward=sc.backward,
+                    transform=sc.transform, precision=sc.precision)
+    w = jnp.asarray(_kernel_weights(_sig_channels(sc), sc.depth,
                                     sc.kernel_level_decay))
-    K = kops.gram(S, S_l, w, backend=sc.backend)
+    K = kops.gram(S, S_l, w, backend=sc.backend, precision=sc.precision)
     if sc.kernel_normalize:
         # +1 is the empty-word coordinate: keeps near-constant paths finite
         qn = jnp.sqrt(gram_diag(S, w) + 1.0)
@@ -233,10 +261,15 @@ def sig_pool(p, hidden: jax.Array, cfg: ModelConfig,
     # the configured backend's kernel forward + O(1)-in-length backward is
     # exactly the path jax.grad differentiates during training.
     if plan is not None:
-        feats = projected_signature(path, plan.words, sc.channels, plan=plan,
+        feats = projected_signature(path, plan.words, plan.d, plan=plan,
                                     backend=sc.backend, backward=sc.backward,
-                                    lengths=lengths)
+                                    lengths=lengths, transform=sc.transform,
+                                    precision=sc.precision)
     elif sc.use_logsig:
+        if sc.transform is not None:
+            raise NotImplementedError(
+                "use_logsig=True has no fused-transform route; set "
+                "transform=None")
         if lengths is not None:
             raise NotImplementedError(
                 "use_logsig=True has no ragged (mask=) route yet; use "
@@ -245,7 +278,8 @@ def sig_pool(p, hidden: jax.Array, cfg: ModelConfig,
                              backward=sc.backward)
     else:
         feats = signature(path, sc.depth, backend=sc.backend,
-                          backward=sc.backward, lengths=lengths)
+                          backward=sc.backward, lengths=lengths,
+                          transform=sc.transform, precision=sc.precision)
     feats = jnp.concatenate([feats, disp], axis=-1)
     return jnp.einsum("bf,fo->bo", feats.astype(hidden.dtype),
                       p["out"].astype(hidden.dtype))

@@ -213,17 +213,26 @@ class DynamicBatcher:
 
     @classmethod
     def signature_service(cls, d: int, depth: int, *, max_len: int,
-                          backend: str = "auto", **kw) -> "DynamicBatcher":
+                          backend: str = "auto", transform=None,
+                          precision: str = "fp32", **kw) -> "DynamicBatcher":
         """Batcher computing each request's terminal signature features —
         the batched analogue of draining a :class:`SigStreamEngine` slot
-        (same (D_sig,) feature vector its ``features`` property holds)."""
+        (same (D_sig,) feature vector its ``features`` property holds).
+        ``transform`` fuses path transforms into the sweep (no augmented
+        intermediate per batch); ``precision="bf16_fp32"`` serves the
+        mixed-precision sweep."""
         from repro.kernels import ops
         from repro.core import tensor_ops as tops
+        from repro.core.transforms import as_transform
+        spec = as_transform(transform)
 
         def compute(rp: RaggedPaths) -> jax.Array:
             incs = tops.path_increments(rp.values)
+            x0 = (rp.values[:, 0] if spec is not None and spec.basepoint
+                  else None)
             return ops.signature(incs, depth, backend=backend,
-                                 lengths=rp.lengths)
+                                 lengths=rp.lengths, transform=spec, x0=x0,
+                                 precision=precision)
 
         return cls(compute, d, max_len, **kw)
 
@@ -247,10 +256,12 @@ class DynamicBatcher:
         def compute(rp: RaggedPaths) -> jax.Array:
             incs = tops.path_increments(rp.values)
             S = ops.signature(incs, engine.depth, backend=engine.backend,
-                              lengths=rp.lengths)
+                              lengths=rp.lengths,
+                              precision=getattr(engine, "precision", "fp32"))
             K = ops.gram(S, engine.ref_sigs, engine.weights,
                          backend=engine.backend,
-                         block_words=engine.block_words)
+                         block_words=engine.block_words,
+                         precision=getattr(engine, "precision", "fp32"))
             if mode == "predict":
                 return krr_predict(K, engine.alpha)
             if engine.normalize:

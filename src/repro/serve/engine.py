@@ -208,6 +208,7 @@ class SigScoreEngine:
     reg: float = 1e-3
     normalize: bool = True
     block_words: int = 512
+    precision: str = "fp32"                  # "fp32" | "bf16_fp32"
     dtype: jnp.dtype = jnp.float32
     store: Optional[SessionStore] = None     # join a shared pool
 
@@ -222,10 +223,12 @@ class SigScoreEngine:
             self.d, self.depth, level_weights=self.level_weights,
             gamma=self.gamma))
         self.ref_sigs = ops.signature(tops.path_increments(refs), self.depth,
-                                      backend=self.backend)
+                                      backend=self.backend,
+                                      precision=self.precision)
         self.ref_gram = ops.gram(self.ref_sigs, self.ref_sigs, self.weights,
                                  backend=self.backend,
-                                 block_words=self.block_words)
+                                 block_words=self.block_words,
+                                 precision=self.precision)
         self.alpha = None if self.targets is None else krr_fit(
             self.ref_gram, jnp.asarray(self.targets), self.reg)
         self.store = _engine_block(self, self.store)
@@ -270,7 +273,8 @@ class SigScoreEngine:
             from repro.kernels import ops
             self._cross = ops.gram(self._terminal_sigs(), self.ref_sigs,
                                    self.weights, backend=self.backend,
-                                   block_words=self.block_words)
+                                   block_words=self.block_words,
+                                   precision=self.precision)
         return self._cross
 
     def scores(self) -> jax.Array:

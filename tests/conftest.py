@@ -47,6 +47,17 @@ def pytest_collection_modifyitems(config, items):
             item.add_marker(skip_tpu)
 
 
+@pytest.fixture(autouse=True, scope="module")
+def _drop_jit_caches_between_modules():
+    # The suite is ~470 jit-heavy tests in one process; XLA's CPU JIT keeps
+    # every compiled executable alive until the cache entry dies, and past
+    # ~400 tests the accumulated code memory segfaults later compiles.
+    # Modules don't share shapes enough for cross-module cache hits to
+    # matter, so drop the caches at each module boundary.
+    yield
+    jax.clear_caches()
+
+
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)

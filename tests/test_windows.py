@@ -141,3 +141,33 @@ def test_single_point_window_is_identity_signature(rng):
     out = windowed_signature(path, windows, 2)
     seg = C.signature(path[:, 4:6], 2)
     np.testing.assert_allclose(out[:, 0], seg, rtol=1e-5, atol=1e-6)
+
+
+def test_auto_route_within_15pct_of_best_on_fig3_grid():
+    """Cost-model calibration regression (satellite of the perf PR): on every
+    committed BENCH_fig3.json measurement, the route ``select_route("auto")``
+    picks must be within 15% of the measured-best fixed route.  Catches
+    constant drift: if someone retunes _CHEN_STEP_COST / _CHEN_ADVANTAGE into
+    a regime the measured grid contradicts, this fails without ever running
+    a benchmark."""
+    import json
+    import pathlib
+
+    from repro.core.windows import select_route
+
+    bench = pathlib.Path(__file__).resolve().parent.parent / "BENCH_fig3.json"
+    if not bench.exists():
+        pytest.skip("no committed BENCH_fig3.json")
+    records = json.loads(bench.read_text())["records"]
+    assert records, "BENCH_fig3.json has no records"
+    for rec in records:
+        windows = sliding_windows(rec["M"], rec["wlen"], rec["stride"])
+        assert windows.shape[0] == rec["K"], (
+            f"window grid drifted: rebuilt K={windows.shape[0]} != "
+            f"recorded K={rec['K']}")
+        route = select_route("auto", windows, rec["M"])
+        measured = {"fold": rec["fold_ms"], "chen": rec["chen_ms"]}
+        best = min(measured.values())
+        assert measured[route] <= 1.15 * best, (
+            f"auto picked {route} ({measured[route]:.2f} ms) but best fixed "
+            f"route costs {best:.2f} ms on {rec}")
