@@ -4,6 +4,12 @@ Usage:
     PYTHONPATH=src python -m benchmarks.run            # quick (CI) sizes
     PYTHONPATH=src python -m benchmarks.run --full     # paper-scale sweeps
     PYTHONPATH=src python -m benchmarks.run --only table1,table2
+    PYTHONPATH=src python -m benchmarks.run --emit-metrics
+
+``--emit-metrics`` enables the :mod:`repro.obs` registry for the run and
+writes one metrics snapshot per suite (``BENCH_<suite>_obs.json``, next to
+that suite's ``BENCH_*.json``) — so perf numbers always land with their
+compile/retrace, plan-cache, and autotune counters attached.
 
 The roofline harness (EXPERIMENTS.md §Roofline, needs 512 placeholder
 devices) is separate: ``python -m benchmarks.roofline``.
@@ -23,6 +29,10 @@ def main(argv=None) -> None:
                     help="paper-scale sweeps (slow on CPU)")
     ap.add_argument("--only", default="",
                     help=f"comma list from {SUITES}")
+    ap.add_argument("--emit-metrics", action="store_true",
+                    help="enable repro.obs and write BENCH_<suite>_obs.json "
+                         "snapshots (per-suite deltas: the registry resets "
+                         "between suites)")
     args = ap.parse_args(argv)
     only = [s.strip() for s in args.only.split(",") if s.strip()] or SUITES
 
@@ -34,9 +44,17 @@ def main(argv=None) -> None:
             "proj": proj_sparse, "gram": gram_scaling,
             "ragged": ragged_throughput, "sessions": session_throughput,
             "shard": shard_scaling}
+    if args.emit_metrics:
+        from repro import obs
+        obs.enable()
     t0 = time.time()
     for name in only:
+        if args.emit_metrics:
+            obs.reset()   # per-suite deltas, not run-cumulative soup
         mods[name].run(quick=not args.full)
+        if args.emit_metrics:
+            path = obs.write_snapshot(f"BENCH_{name}_obs.json")
+            print(f"# {name}: metrics snapshot -> {path}", flush=True)
     print(f"\n# benchmarks done in {time.time() - t0:.0f}s", flush=True)
 
 

@@ -1,0 +1,222 @@
+"""End-to-end observability walkthrough: trace + meter every layer.
+
+One run exercises all four instrumented layers of the stack and leaves two
+artefacts behind:
+
+- a Chrome-trace JSON (open in ``chrome://tracing`` / ui.perfetto.dev)
+  containing spans from **kernel dispatch** (``kernels.signature``),
+  the **gram ring** under an 8-device mesh (``kernels.gram_ring``),
+  a **serve flush** (``serve.batcher.flush``, ``serve.sessions.flush``),
+  and **train steps** (``train.step``);
+- a metrics snapshot (JSON) with nonzero jit compile/retrace counts,
+  plan-cache accounting, and autotune hit/miss/sweep outcomes.
+
+Run:  PYTHONPATH=src python examples/observability.py
+      PATHSIG_TRACE=trace.json PYTHONPATH=src python examples/observability.py
+      PYTHONPATH=src python examples/observability.py --check   # CI smoke
+
+Defaults land under ``runs/`` (gitignored); ``PATHSIG_TRACE`` /
+``PATHSIG_METRICS`` override the artefact paths.  ``--check`` asserts the
+acceptance conditions (spans from all four layers, nonzero compile /
+plan-cache / autotune counters, retrace counts within bound) and exits
+nonzero on violation.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import tempfile
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+# a throwaway autotune cache so the walkthrough shows sweep -> hit without
+# touching (or depending on) the repo-level .pathsig_autotune.json
+os.environ["PATHSIG_AUTOTUNE_CACHE"] = os.path.join(
+    tempfile.mkdtemp(prefix="pathsig_obs_"), "autotune.json")
+os.environ["PATHSIG_AUTOTUNE"] = "sweep"
+
+import jax                                                    # noqa: E402
+import jax.numpy as jnp                                       # noqa: E402
+import numpy as np                                            # noqa: E402
+
+from repro import obs                                         # noqa: E402
+from repro.distributed import sharding_ctx                    # noqa: E402
+from repro.distributed.hlo import collective_stats            # noqa: E402
+from repro.kernels import ops                                 # noqa: E402
+from repro.launch.mesh import make_sig_mesh                   # noqa: E402
+
+TRACE_PATH = os.environ.get("PATHSIG_TRACE", "runs/observability_trace.json")
+SNAP_PATH = os.environ.get("PATHSIG_METRICS", "")
+if SNAP_PATH.lower() in ("", "0", "1", "on", "off", "true", "false", "yes",
+                         "no"):
+    SNAP_PATH = "runs/observability_metrics.json"
+
+
+def kernel_layer(rng) -> None:
+    """Dispatch cells + autotune + compile accounting."""
+    print("== kernel dispatch ==")
+    x = jnp.asarray(rng.normal(size=(8, 12, 2)).astype(np.float32) * 0.1)
+    # 1st call in sweep mode: autotune measures the cell (outcome="sweep"),
+    # 2nd call: outcome="hit"; the kernel itself compiles exactly once.
+    for _ in range(2):
+        ops.signature(x, 3, backend="pallas_interpret").block_until_ready()
+    # a second shape — a genuine retrace, labelled with its shape key
+    ops.signature(x[:, :7], 3, backend="pallas_interpret").block_until_ready()
+    cost = obs.record_cost(
+        "signature", lambda a: ops.signature(a, 3, backend="pallas_interpret"),
+        x)
+    print(f"  lowered cost: {cost['flops']:.0f} flops, "
+          f"{cost['bytes']:.0f} bytes")
+
+
+def ring_layer(rng, mesh) -> None:
+    """The gram ppermute ring under the mesh + HLO collective accounting."""
+    print("== gram ring (8-device mesh) ==")
+    Sx = jnp.asarray(rng.normal(size=(16, 15)).astype(np.float32))
+    w = jnp.ones(15, np.float32)
+    with sharding_ctx(mesh):
+        G = ops.gram(Sx, Sx, w, backend="jax")
+        G.block_until_ready()
+        compiled = jax.jit(
+            lambda a, b, ww: ops.gram(a, b, ww, backend="jax")
+        ).lower(Sx, Sx, w).compile()
+    stats = collective_stats(compiled.as_text(),
+                             default_group=len(mesh.devices.flat))
+    obs.record_collectives("gram_ring", stats)
+    print(f"  ring G shape {G.shape}; HLO collectives: "
+          f"{ {k: v[0] for k, v in stats.by_kind.items()} }")
+
+
+def serve_layer(rng) -> None:
+    """A batcher flush and a session-pool flush."""
+    print("== serve ==")
+    from repro.serve import DynamicBatcher
+    from repro.serve.sessions import SessionStore
+    db = DynamicBatcher.signature_service(2, 3, max_len=32, backend="jax",
+                                          min_bucket=8)
+    for L in (3, 9, 17, 5, 30):
+        db.submit(np.cumsum(rng.normal(size=(L + 1, 2)).astype(np.float32),
+                            axis=0))
+    res = db.flush()
+    st = db.stats()
+    print(f"  batcher: {len(res)} requests, {st['compiled_shapes']} shapes, "
+          f"occupancy {st['occupancy']:.0%}")
+
+    store = SessionStore(2, 3, initial_sessions=8, backend="jax")
+    handles = [store.create() for _ in range(5)]
+    for h in handles:
+        store.ingest(h, rng.normal(size=(4, 2)).astype(np.float32))
+    store.flush()
+    store.evict(handles[0])
+    ss = store.stats()
+    print(f"  sessions: {ss['sessions']} live, "
+          f"p50 staleness {ss['p50_staleness_s'] * 1e3:.2f} ms, "
+          f"evictions {ss['evictions']}")
+
+
+def train_layer() -> None:
+    """A traced mini train loop (sig-MMD loss through the dispatch)."""
+    print("== train ==")
+    import dataclasses
+    import repro.models as M
+    from repro.configs import get_config, reduce_config
+    from repro.models.sig_head import SigHeadConfig
+    from repro.optim import adamw
+    from repro.train import TrainLoopConfig, train_loop
+
+    cfg = reduce_config(get_config("qwen3-4b"))
+    cfg = dataclasses.replace(cfg, sig_head=SigHeadConfig(
+        depth=3, channels=2, backend="jax"))
+    loop = TrainLoopConfig(steps=3, log_every=1, loss="sig_mmd",
+                           run_name="observability",
+                           straggler_deadline_s=60.0)
+
+    def make_iter(seed=0):
+        rng = np.random.default_rng(seed)
+        while True:
+            yield {"tokens": jnp.asarray(rng.integers(
+                       1, cfg.vocab_size, (8, 16)), jnp.int32),
+                   "paths": jnp.asarray(np.cumsum(rng.normal(
+                       size=(8, 17, 2)).astype(np.float32), 1) * 0.3)}
+
+    params = M.init_params(jax.random.PRNGKey(0), cfg, jnp.float32)
+    _, _, hist = train_loop(cfg, params, adamw(lr=1e-3), make_iter(), loop)
+    print(f"  {len(hist)} logged steps; loss {hist[-1]['loss']:.4f}; "
+          f"run log under runs/observability.jsonl")
+
+
+LAYER_SPANS = {
+    "kernel dispatch": ("kernels.signature",),
+    "gram ring": ("kernels.gram_ring",),
+    "serve flush": ("serve.batcher.flush", "serve.sessions.flush"),
+    "train step": ("train.step",),
+}
+
+
+def check(trace_path: str, snap_path: str) -> int:
+    """CI smoke assertions over the two artefacts; returns an exit code."""
+    doc = json.load(open(trace_path))
+    names = {e["name"] for e in doc["traceEvents"]}
+    failures = []
+    for layer, spans in LAYER_SPANS.items():
+        if not any(s in names for s in spans):
+            failures.append(f"no {layer} span ({spans}) in {trace_path}")
+    for ev in doc["traceEvents"]:
+        if ev["ph"] == "X" and not ({"name", "ts", "dur", "pid", "tid"}
+                                    <= set(ev)):
+            failures.append(f"malformed trace event {ev}")
+            break
+
+    snap = json.load(open(snap_path))
+    mets = snap["metrics"]
+
+    def total(name, pred=lambda v: True):
+        return sum(row["value"] for row in mets.get(
+            name, {"values": []})["values"] if pred(row))
+
+    if total("pathsig_jit_traces_total") <= 0:
+        failures.append("zero jit compile/retrace count")
+    # retrace bound: the mini run must not retrace any one site more than
+    # 8 compiled variants (a storm means shape keys leak into the cells)
+    for row in mets.get("pathsig_jit_traces_total", {"values": []})["values"]:
+        if row["value"] > 8:
+            failures.append(f"retrace storm: {row}")
+    if total("pathsig_plan_cache",
+             lambda r: r["labels"]["stat"] in ("hits", "misses")) <= 0:
+        failures.append("zero plan-cache hit/miss accounting")
+    if total("pathsig_autotune_lookups_total",
+             lambda r: r["labels"]["outcome"] in ("hit", "miss", "sweep")) \
+            <= 0:
+        failures.append("zero autotune hit/miss/sweep outcomes")
+    if total("pathsig_ring_ppermute_total") <= 0:
+        failures.append("zero gram-ring ppermute count")
+    for f in failures:
+        print(f"CHECK FAIL: {f}", file=sys.stderr)
+    print("check:", "FAIL" if failures else "OK")
+    return 1 if failures else 0
+
+
+def main() -> int:
+    obs.enable()
+    if not obs.trace_active():          # PATHSIG_TRACE already started one
+        obs.start_trace(TRACE_PATH)
+    rng = np.random.default_rng(0)
+    mesh = make_sig_mesh()
+    kernel_layer(rng)
+    ring_layer(rng, mesh)
+    serve_layer(rng)
+    train_layer()
+    trace_path = obs.stop_trace(TRACE_PATH) or TRACE_PATH
+    snap_path = obs.write_snapshot(SNAP_PATH)
+    print(f"trace  -> {trace_path}\nmetrics -> {snap_path}")
+    n_traces = sum(
+        row["value"] for row in obs.snapshot()["metrics"]
+        ["pathsig_jit_traces_total"]["values"])
+    print(f"total jit traces (compiles) this run: {n_traces:.0f}")
+    if "--check" in sys.argv:
+        return check(trace_path, snap_path)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -42,6 +42,8 @@ import time
 import warnings
 from pathlib import Path
 
+from repro import obs
+
 __all__ = ["lookup", "cell_key", "load_cache", "save_cache", "sweep_cell",
            "clear", "cache_path", "mode", "main"]
 
@@ -148,27 +150,43 @@ def _concrete(cell: dict) -> dict | None:
     return out
 
 
+def _count_lookup(kind: str, outcome: str) -> None:
+    if not obs.enabled():
+        return
+    obs.counter("pathsig_autotune_lookups_total",
+                "autotune cache consultations by outcome "
+                "(hit/miss/sweep/off/traced/jax_engine)",
+                ("kind", "outcome")).inc(kind=kind, outcome=outcome)
+
+
 def lookup(kind: str, **cell) -> dict:
     """The cached record for a dispatch cell ({} on miss / off / traced).
 
     In ``sweep`` mode a miss triggers a one-off candidate sweep for the cell
     (measured with synthetic data of the cell's shape), whose winner is
-    persisted and returned."""
+    persisted and returned.  Every consultation ticks
+    ``pathsig_autotune_lookups_total{kind=,outcome=}`` when metrics are on."""
     m = mode()
     if m == "off" or _sweeping:
+        _count_lookup(kind, "off")
         return {}
     cell = _concrete(cell)
     if cell is None:
+        _count_lookup(kind, "traced")
         return {}
     if cell.get("engine") == "jax":
+        _count_lookup(kind, "jax_engine")
         return {}  # tile shapes are a Pallas concern
     key = cell_key(kind, **cell)
     cells = load_cache()
     hit = cells.get(key)
     if hit is not None:
+        _count_lookup(kind, "hit")
         return hit
     if m != "sweep":
+        _count_lookup(kind, "miss")
         return {}
+    _count_lookup(kind, "sweep")
     rec = sweep_cell(kind, cell)
     if rec:
         cells[key] = rec

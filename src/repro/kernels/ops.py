@@ -153,9 +153,10 @@ tree.  The paper explicitly does not parallelise over sequence length
 """
 from __future__ import annotations
 
+import functools
 import weakref
 from collections import OrderedDict, namedtuple
-from functools import lru_cache, partial
+from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -163,6 +164,7 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec
 
+from repro import obs
 from repro.core import tensor_ops as tops
 from repro.distributed.ctx import current_mesh, logical_axes
 from repro.distributed.ctx import shard as shard_constraint
@@ -206,13 +208,53 @@ PLAN_CACHE_MAXSIZE = 256          # default per-cache bound
 _PLAN_CACHE_FNS: dict = {}        # cache name -> undecorated fn
 
 
+CacheInfo = namedtuple("CacheInfo",
+                       ("hits", "misses", "maxsize", "currsize", "evictions"))
+
+
+class _CountingLru:
+    """``functools.lru_cache`` semantics plus an eviction counter
+    (``lru_cache`` itself never reports how many entries it dropped, which
+    is exactly the number serving traffic needs to see).  Same key rule as
+    ``lru_cache``: positional args plus sorted kwargs, all hashable."""
+
+    def __init__(self, fn, maxsize):
+        self._fn = fn
+        self._maxsize = maxsize
+        self._data: OrderedDict = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+        functools.update_wrapper(self, fn)
+
+    def __call__(self, *args, **kwargs):
+        key = (args, tuple(sorted(kwargs.items()))) if kwargs else args
+        data = self._data
+        if key in data:
+            data.move_to_end(key)
+            self.hits += 1
+            return data[key]
+        self.misses += 1
+        val = self._fn(*args, **kwargs)
+        data[key] = val
+        if self._maxsize is not None:
+            while len(data) > self._maxsize:
+                data.popitem(last=False)
+                self.evictions += 1
+        return val
+
+    def cache_info(self) -> CacheInfo:
+        return CacheInfo(self.hits, self.misses, self._maxsize,
+                         len(self._data), self.evictions)
+
+    def cache_clear(self) -> None:
+        self._data.clear()
+
+
 def plan_cache(fn):
     """Register ``fn`` under the shared bounded-LRU plan-cache policy."""
     _PLAN_CACHE_FNS[fn.__name__] = fn
-    return lru_cache(maxsize=PLAN_CACHE_MAXSIZE)(fn)
-
-
-CacheInfo = namedtuple("CacheInfo", ("hits", "misses", "maxsize", "currsize"))
+    return _CountingLru(fn, PLAN_CACHE_MAXSIZE)
 
 # name -> WeakSet of live BoundedCache instances sharing that report line
 _INSTANCE_CACHES: dict[str, weakref.WeakSet] = {}
@@ -236,6 +278,7 @@ class BoundedCache:
         self._data: OrderedDict = OrderedDict()
         self.hits = 0
         self.misses = 0
+        self.evictions = 0
         _INSTANCE_CACHES.setdefault(name, weakref.WeakSet()).add(self)
 
     def get(self, key, make):
@@ -256,13 +299,14 @@ class BoundedCache:
             return
         while len(self._data) > PLAN_CACHE_MAXSIZE:
             self._data.popitem(last=False)
+            self.evictions += 1
 
     def clear(self) -> None:
         self._data.clear()
 
     def info(self) -> CacheInfo:
         return CacheInfo(self.hits, self.misses, PLAN_CACHE_MAXSIZE,
-                         len(self._data))
+                         len(self._data), self.evictions)
 
 
 def set_plan_cache_maxsize(maxsize: int | None) -> None:
@@ -273,7 +317,7 @@ def set_plan_cache_maxsize(maxsize: int | None) -> None:
     PLAN_CACHE_MAXSIZE = maxsize
     g = globals()
     for name, fn in _PLAN_CACHE_FNS.items():
-        g[name] = lru_cache(maxsize=maxsize)(fn)
+        g[name] = _CountingLru(fn, maxsize)
     for caches in _INSTANCE_CACHES.values():
         for c in caches:
             c.trim()
@@ -293,7 +337,7 @@ def clear_plan_caches() -> None:
 def plan_cache_info() -> dict:
     """{cache name: CacheInfo} for every registered cache — the module-level
     ``@plan_cache`` functions plus each live ``BoundedCache`` family
-    (hits/misses/currsize summed over instances)."""
+    (hits/misses/currsize/evictions summed over instances)."""
     g = globals()
     out = {name: g[name].cache_info() for name in _PLAN_CACHE_FNS}
     for name, caches in _INSTANCE_CACHES.items():
@@ -301,8 +345,68 @@ def plan_cache_info() -> dict:
         out[name] = CacheInfo(sum(i.hits for i in infos),
                               sum(i.misses for i in infos),
                               PLAN_CACHE_MAXSIZE,
-                              sum(i.currsize for i in infos))
+                              sum(i.currsize for i in infos),
+                              sum(i.evictions for i in infos))
     return out
+
+
+def _plan_cache_collector(reg) -> None:
+    """Pull collector: publish ``plan_cache_info()`` as
+    ``pathsig_plan_cache{cache=,stat=}`` gauges at snapshot time — the hot
+    path never mirrors increments into the registry."""
+    g = reg.gauge("pathsig_plan_cache",
+                  "plan cache accounting (hits/misses/currsize/evictions "
+                  "per cache family)", ("cache", "stat"))
+    for name, ci in plan_cache_info().items():
+        g.set(ci.hits, cache=name, stat="hits")
+        g.set(ci.misses, cache=name, stat="misses")
+        g.set(ci.currsize, cache=name, stat="currsize")
+        g.set(ci.evictions, cache=name, stat="evictions")
+
+
+obs.register_collector(_plan_cache_collector)
+
+
+# ---------------------------------------------------------------------------
+# dispatch observability: per-entry call counters + tracer spans
+# ---------------------------------------------------------------------------
+
+def _dispatch_calls():
+    return obs.counter(
+        "pathsig_dispatch_calls_total",
+        "public dispatch entry calls; ctx distinguishes eager host calls "
+        "from trace-time calls inside an outer jit",
+        ("op", "backend", "ctx"))
+
+
+def _obs_entry(fn):
+    """Wrap a public dispatch entry with call accounting and a tracer span.
+
+    Costs two flag checks when observability is fully off.  Inside an outer
+    ``jit`` the wrapper runs at trace time only (the body is staged out), so
+    counts are labelled ``ctx="trace"`` there — one tick per compiled
+    variant — versus ``ctx="eager"`` per host-level call.
+    """
+    site = fn.__name__
+
+    @functools.wraps(fn)
+    def wrapper(x, *args, **kwargs):
+        metrics_on = obs.REGISTRY._enabled
+        trace_on = obs.TRACER._active
+        if not metrics_on and not trace_on:
+            return fn(x, *args, **kwargs)
+        backend = str(kwargs.get("backend", "auto"))
+        ctx = "trace" if isinstance(x, jax.core.Tracer) else "eager"
+        if metrics_on:
+            _dispatch_calls().inc(op=site, backend=backend, ctx=ctx)
+        if not trace_on:
+            return fn(x, *args, **kwargs)
+        with obs.span(f"kernels.{site}", backend=backend, ctx=ctx,
+                      shapes=obs.shape_key(x)):
+            return fn(x, *args, **kwargs)
+
+    wrapper.__wrapped__ = fn
+    return wrapper
 
 
 def _on_tpu() -> bool:
@@ -968,6 +1072,7 @@ def _gram_ring(mesh, names: tuple, size: int, engine: str, interpret: bool,
                      out_specs=spec, check_rep=False)
 
 
+@_obs_entry
 def gram(Sx: jax.Array, Sy: jax.Array, weights: jax.Array, *,
          backend: str = "auto", block_words: int | None = None,
          bx_tile: int | None = None, by_tile: int | None = None,
@@ -1018,7 +1123,27 @@ def gram(Sx: jax.Array, Sy: jax.Array, weights: jax.Array, *,
         ring = _gram_ring(mesh, names, size, engine, interpret, block_words,
                           bx_tile, by_tile)
         Bx, By = Sx.shape[0], Sy.shape[0]
-        G = ring(_pad_rows(Sx, size), _pad_rows(Sy, size), weights)
+        if obs.REGISTRY._enabled:
+            # analytic ring accounting: `size` fori_loop steps, each one
+            # ppermute of the local (By/size, D) Y shard — published at
+            # dispatch so the ring-vs-oracle anomaly is a counter, not a
+            # benchmark-only artefact (HLO-derived numbers ride
+            # obs.record_collectives where a lowered module is at hand).
+            By_pad = -(-By // size) * size
+            shard_bytes = (By_pad // size) * Sy.shape[1] * Sy.dtype.itemsize
+            obs.counter("pathsig_ring_ppermute_total",
+                        "ppermute steps issued by the gram ring",
+                        ("ctx",)).inc(
+                size, ctx="trace" if isinstance(Sx, jax.core.Tracer)
+                else "eager")
+            obs.counter("pathsig_ring_wire_bytes_total",
+                        "analytic wire bytes moved by gram-ring ppermutes "
+                        "(per device)", ("ctx",)).inc(
+                size * shard_bytes,
+                ctx="trace" if isinstance(Sx, jax.core.Tracer) else "eager")
+        with obs.span("kernels.gram_ring", devices=size,
+                      shapes=obs.shape_key(Sx, Sy)):
+            G = ring(_pad_rows(Sx, size), _pad_rows(Sy, size), weights)
         if G.shape != (Bx, By):
             G = G[:Bx, :By]
         return shard_constraint(G, "batch", None)
@@ -1148,6 +1273,7 @@ def _signature_local(increments: jax.Array, lengths, *, depth: int,
                                      kspec, precision)(increments, taux)
 
 
+@_obs_entry
 def signature(increments: jax.Array, depth: int, *, backend: str = "auto",
               backward: str = "inverse", batch_tile: int | None = None,
               split: int | None = None, time_chunks: int = 1,
@@ -1219,6 +1345,17 @@ def signature(increments: jax.Array, depth: int, *, backend: str = "auto",
         batch_tile = hit.get("batch_tile", 128)
         if split is None:
             split = hit.get("split")
+    if obs.REGISTRY._enabled and engine == "pallas" and depth >= 1:
+        from .sig_trunc import choose_split, state_footprint
+        itemsize = 2 if precision == "bf16_fp32" else 4
+        s = split if split is not None else choose_split(
+            d_eff, depth, batch_tile, itemsize=itemsize)
+        obs.gauge(
+            "pathsig_vmem_state_bytes",
+            "per-cell VMEM footprint of the cone-kernel state at the "
+            "resolved (batch_tile, split)", ("op",)).set(
+            state_footprint(d_eff, depth, s, batch_tile, itemsize),
+            op="signature")
     kw = dict(depth=depth, engine=engine, interpret=interpret,
               backward=backward, batch_tile=batch_tile, split=split,
               time_chunks=time_chunks, stream=stream,
@@ -1329,6 +1466,7 @@ def _projected_local(increments: jax.Array, lengths, *, words: tuple, d: int,
                                 interpret, precision)(increments)
 
 
+@_obs_entry
 def projected(increments: jax.Array, plan, *, backend: str = "auto",
               backward: str = "inverse", batch_tile: int | None = None,
               max_rows: int = 256, stream: bool = False,
@@ -1449,6 +1587,7 @@ def _projected_fwd_local(increments: jax.Array, lengths, *, words: tuple,
                      precision=precision)
 
 
+@_obs_entry
 def projected_forward_only(increments: jax.Array, plan, *,
                            backend: str = "auto", batch_tile: int | None = None,
                            max_rows: int = 256, lengths=None, transform=None,

@@ -49,6 +49,9 @@ def sig_gram_tiles(Sx: jax.Array, Sy: jax.Array, weights: jax.Array, *,
     Sx: (B_x, D), Sy: (B_y, D), weights: (D,)  ->  (B_x, B_y) float32 with
     G[i, j] = Σ_k Sx[i, k] · weights[k] · Sy[j, k].
     """
+    from repro import obs
+    obs.count_trace("sig_gram_tiles", Sx, Sy, bx_tile=bx_tile,
+                    by_tile=by_tile, k_tile=k_tile)
     Bx, D = Sx.shape
     By, D2 = Sy.shape
     if D2 != D or weights.shape != (D,):

@@ -33,6 +33,7 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro import obs
 from repro.core.words import sig_dim
 
 
@@ -256,6 +257,9 @@ def sig_trunc(increments: jax.Array, depth: int, *, batch_tile: int = 128,
     a time channel.  ``precision="bf16_fp32"`` stores the increments block
     in bf16 (halved VMEM/HBM traffic) with fp32 accumulators.
     """
+    obs.count_trace("sig_trunc", increments, depth=depth,
+                    batch_tile=batch_tile, split=split, stream=stream,
+                    precision=precision)
     B, M, d_raw = increments.shape
     if depth < 1:
         raise ValueError("depth must be >= 1")

@@ -137,7 +137,11 @@ def sig_words(increments: jax.Array, tplan: TiledPlan, *,
     channel.  ``precision="bf16_fp32"`` stores the increments block in bf16
     with fp32 accumulation.
     """
+    from repro import obs
     from repro.kernels.sig_trunc import _fuse_flags, _storage_dtype
+    obs.count_trace("sig_words", increments, tiles=len(tplan.tiles),
+                    batch_tile=batch_tile, stream=stream,
+                    precision=precision)
     B, M, d_raw = increments.shape
     fuse_ll, fuse_time = _fuse_flags(transform)
     if fuse_time and taux is None:

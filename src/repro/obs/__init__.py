@@ -1,0 +1,49 @@
+"""repro.obs — process-wide observability: metrics, tracing, and
+compile/retrace accounting.
+
+Three modules, one import surface::
+
+    from repro import obs
+
+    obs.enable()                                  # or PATHSIG_METRICS=1
+    obs.counter("my_events_total").inc()
+    with obs.span("my.phase", n=3):               # PATHSIG_TRACE=t.json
+        ...
+    print(obs.to_prometheus())
+
+- :mod:`repro.obs.metrics` — counters / gauges / histograms with label
+  sets; JSON snapshot, JSONL append, Prometheus text exporters; pull
+  collectors.  Near-zero overhead when disabled (one flag check).
+- :mod:`repro.obs.trace` — span tracer exporting Chrome-trace/Perfetto
+  JSON; null-span fast path when inactive; optional ``jax.profiler``
+  bridge.
+- :mod:`repro.obs.compile` — jit compile/retrace counters labelled with
+  offending shape keys (:func:`instrument_jit`, :func:`count_trace`),
+  lowered-cost and HLO-collective recording.
+
+This package imports nothing from the rest of ``repro`` — every layer
+(kernels, distributed, serve, train, benchmarks) imports *it*.
+"""
+from .compile import (TRACE_COUNTER_NAME, count_trace, instrument_jit,
+                      record_collectives, record_cost, shape_key)
+from .metrics import (DEFAULT_BUCKETS, REGISTRY, Counter, Gauge, Histogram,
+                      Registry, append_jsonl, counter, disable, enable,
+                      enabled, enabled_scope, gauge, histogram, jsonl_sink,
+                      register_collector, reset, snapshot, to_prometheus,
+                      write_snapshot)
+from .trace import (TRACER, Tracer, instant, span, span_blocked, start_trace,
+                    stop_trace, trace_active, trace_scope)
+
+__all__ = [
+    # metrics
+    "Counter", "Gauge", "Histogram", "Registry", "REGISTRY",
+    "DEFAULT_BUCKETS", "counter", "gauge", "histogram", "enable", "disable",
+    "enabled", "enabled_scope", "reset", "snapshot", "to_prometheus",
+    "write_snapshot", "append_jsonl", "register_collector", "jsonl_sink",
+    # trace
+    "Tracer", "TRACER", "span", "span_blocked", "instant", "start_trace",
+    "stop_trace", "trace_active", "trace_scope",
+    # compile accounting
+    "TRACE_COUNTER_NAME", "shape_key", "count_trace", "instrument_jit",
+    "record_cost", "record_collectives",
+]

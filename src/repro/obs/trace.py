@@ -1,0 +1,300 @@
+"""Span tracer exporting Chrome-trace / Perfetto JSON.
+
+A *span* is a named wall-clock interval with optional key/value args.  The
+tracer buffers complete events in memory and writes the standard Chrome
+trace-event JSON object (``{"traceEvents": [...]}``, timestamps in µs) that
+``chrome://tracing`` and https://ui.perfetto.dev load directly.
+
+Usage::
+
+    from repro import obs
+
+    obs.start_trace("trace.json")          # or PATHSIG_TRACE=trace.json
+    with obs.span("serve.flush", rungs=3):
+        ...
+    obs.stop_trace()                       # writes + returns the path
+
+Design rules (mirroring :mod:`repro.obs.metrics`):
+
+- **Disabled costs one flag check.** ``span()`` returns a shared null
+  context manager when no trace is active, so instrumented code paths pay
+  ~an attribute lookup when tracing is off.
+- **Nesting is implicit.** Spans emit Chrome "complete" (``ph: "X"``)
+  events on one thread-id track; the viewer reconstructs the stack from
+  containment.  A thread-local depth counter is recorded in ``args.depth``
+  so tests (and offline tooling) can assert nesting without a viewer.
+- **jit-friendly.** Spans measure *host* wall-clock; device work launched
+  asynchronously inside a span is attributed to it only up to dispatch.
+  Pass ``block=jax_array`` to :meth:`Span.done` — or use
+  :func:`span_blocked` — to include device completion.  With
+  ``PATHSIG_TRACE_JAX=1`` each span also enters ``jax.profiler.TraceAnnotation``
+  so the same names show up inside XLA's own profiler timeline.
+
+``PATHSIG_TRACE=<path>`` starts tracing at import and registers an atexit
+save to ``<path>``.
+"""
+from __future__ import annotations
+
+import atexit
+import json
+import os
+import threading
+import time
+
+__all__ = [
+    "Tracer", "TRACER", "span", "span_blocked", "instant",
+    "start_trace", "stop_trace", "trace_active", "trace_scope",
+]
+
+_PID = os.getpid()
+
+
+class _NullSpan:
+    """Shared do-nothing context manager: the disabled fast path."""
+
+    __slots__ = ()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        return False
+
+    def set(self, **args):      # same surface as Span
+        return self
+
+
+_NULL_SPAN = _NullSpan()
+
+
+class Span:
+    __slots__ = ("_tracer", "name", "args", "_t0", "_depth")
+
+    def __init__(self, tracer: "Tracer", name: str, args: dict):
+        self._tracer = tracer
+        self.name = name
+        self.args = args
+        self._t0 = 0.0
+        self._depth = 0
+
+    def set(self, **args) -> "Span":
+        """Attach/update args after entry (e.g. results known at exit)."""
+        self.args.update(args)
+        return self
+
+    def __enter__(self) -> "Span":
+        tr = self._tracer
+        self._depth = tr._enter_depth()
+        if tr._jax_ann is not None:
+            ann = tr._jax_ann(self.name)
+            ann.__enter__()
+            tr._ann_stack_local().append(ann)
+        self._t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc):
+        t1 = time.perf_counter()
+        tr = self._tracer
+        if tr._jax_ann is not None:
+            stack = tr._ann_stack_local()
+            if stack:
+                stack.pop().__exit__(*exc)
+        tr._exit_depth()
+        tr._emit(self.name, self._t0, t1, self._depth, self.args)
+        return False
+
+
+class Tracer:
+    """Buffers Chrome trace events; one per process (:data:`TRACER`)."""
+
+    def __init__(self):
+        self._active = False
+        self._path: str | None = None
+        self._events: list[dict] = []
+        self._lock = threading.Lock()
+        self._epoch = 0.0
+        self._local = threading.local()
+        self._jax_ann = None       # jax.profiler.TraceAnnotation when bridged
+
+    # -- lifecycle ---------------------------------------------------------
+
+    @property
+    def active(self) -> bool:
+        return self._active
+
+    def start(self, path: str | None = None, *, jax_bridge: bool = False,
+              reset: bool = True) -> None:
+        with self._lock:
+            if reset:
+                self._events = []
+            self._path = path
+            self._epoch = time.perf_counter()
+            if jax_bridge:
+                try:
+                    import jax.profiler
+                    self._jax_ann = jax.profiler.TraceAnnotation
+                except Exception:
+                    self._jax_ann = None
+            else:
+                self._jax_ann = None
+            self._active = True
+
+    def stop(self, path: str | None = None) -> str | None:
+        """Deactivate and, when a path is known, write the JSON file.
+        Returns the written path (None if nothing was written)."""
+        with self._lock:
+            self._active = False
+            out = path or self._path
+        if out:
+            self.save(out)
+        return out
+
+    def save(self, path: str) -> str:
+        """Write buffered events as Chrome trace JSON (tracer may still be
+        active; events keep accumulating)."""
+        with self._lock:
+            doc = {
+                "traceEvents": list(self._events),
+                "displayTimeUnit": "ms",
+                "otherData": {"producer": "repro.obs.trace"},
+            }
+        d = os.path.dirname(path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(doc, f)
+            f.write("\n")
+        return path
+
+    def clear(self) -> None:
+        with self._lock:
+            self._events = []
+
+    @property
+    def events(self) -> list[dict]:
+        """Snapshot of buffered events (tests/tooling)."""
+        with self._lock:
+            return list(self._events)
+
+    # -- emission ----------------------------------------------------------
+
+    def _enter_depth(self) -> int:
+        d = getattr(self._local, "depth", 0)
+        self._local.depth = d + 1
+        return d
+
+    def _exit_depth(self) -> None:
+        self._local.depth = max(0, getattr(self._local, "depth", 1) - 1)
+
+    def _ann_stack_local(self) -> list:
+        st = getattr(self._local, "ann_stack", None)
+        if st is None:
+            st = self._local.ann_stack = []
+        return st
+
+    def _emit(self, name, t0, t1, depth, args) -> None:
+        ev = {
+            "name": name,
+            "ph": "X",
+            "ts": (t0 - self._epoch) * 1e6,
+            "dur": (t1 - t0) * 1e6,
+            "pid": _PID,
+            "tid": threading.get_ident() & 0xFFFF,
+            "args": {"depth": depth, **args},
+        }
+        with self._lock:
+            self._events.append(ev)
+
+    def _emit_instant(self, name, args) -> None:
+        ev = {
+            "name": name,
+            "ph": "i",
+            "s": "t",
+            "ts": (time.perf_counter() - self._epoch) * 1e6,
+            "pid": _PID,
+            "tid": threading.get_ident() & 0xFFFF,
+            "args": dict(args),
+        }
+        with self._lock:
+            self._events.append(ev)
+
+    # -- user API ----------------------------------------------------------
+
+    def span(self, name: str, **args):
+        if not self._active:
+            return _NULL_SPAN
+        return Span(self, name, args)
+
+    def instant(self, name: str, **args) -> None:
+        if not self._active:
+            return
+        self._emit_instant(name, args)
+
+
+TRACER = Tracer()
+
+
+def span(name: str, **args):
+    """``with obs.span("kernels.signature", backend="pallas"):`` — null
+    context manager when no trace is active."""
+    if not TRACER._active:
+        return _NULL_SPAN
+    return Span(TRACER, name, args)
+
+
+def span_blocked(name: str, fn, *fn_args, **span_args):
+    """Run ``fn(*fn_args)`` inside a span and ``block_until_ready`` the
+    result so device time lands in the span.  Returns fn's result."""
+    if not TRACER._active:
+        return fn(*fn_args)
+    with TRACER.span(name, **span_args):
+        out = fn(*fn_args)
+        try:
+            import jax
+            jax.block_until_ready(out)
+        except Exception:
+            pass
+    return out
+
+
+def instant(name: str, **args) -> None:
+    TRACER.instant(name, **args)
+
+
+def start_trace(path: str | None = None, *, jax_bridge: bool = False,
+                reset: bool = True) -> None:
+    TRACER.start(path, jax_bridge=jax_bridge, reset=reset)
+
+
+def stop_trace(path: str | None = None) -> str | None:
+    return TRACER.stop(path)
+
+
+def trace_active() -> bool:
+    return TRACER._active
+
+
+class trace_scope:
+    """``with obs.trace_scope("t.json"):`` — start on entry, stop+write on
+    exit.  Used by tests and ``benchmarks/run.py``."""
+
+    def __init__(self, path: str | None = None, *, jax_bridge: bool = False):
+        self._path = path
+        self._jax = jax_bridge
+
+    def __enter__(self) -> Tracer:
+        TRACER.start(self._path, jax_bridge=self._jax)
+        return TRACER
+
+    def __exit__(self, *exc):
+        TRACER.stop()
+        return False
+
+
+_ENV_TRACE = os.environ.get("PATHSIG_TRACE", "").strip()
+if _ENV_TRACE:
+    TRACER.start(
+        _ENV_TRACE,
+        jax_bridge=os.environ.get("PATHSIG_TRACE_JAX", "").strip()
+        in ("1", "on", "true"))
+    atexit.register(TRACER.stop)

@@ -39,12 +39,14 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
+import time
 from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.distributed.ctx import (current_mesh, logical_axis_size,
                                    named_sharding, sharding_ctx)
 from repro.kernels.ops import BoundedCache
@@ -145,6 +147,10 @@ class DynamicBatcher:
         t = self._next_ticket
         self._next_ticket += 1
         self._queue.append(_Request(t, path, length))
+        if obs.enabled():
+            obs.gauge("pathsig_batcher_queue_depth",
+                      "requests waiting in the DynamicBatcher queue",
+                      ).set(len(self._queue))
         return t
 
     @property
@@ -160,34 +166,63 @@ class DynamicBatcher:
         out: dict[int, jax.Array] = {}
         if not queue:
             return out
-        shards = self._batch_shards()
-        lengths = np.asarray([r.length for r in queue], np.int64)
-        which = assign_buckets(lengths, self.ladder)
-        for k in np.unique(which):
-            rung = int(self.ladder[k])
-            group = [queue[i] for i in np.nonzero(which == k)[0]]
-            # split oversized groups so the batch rung never exceeds max_batch
-            for off in range(0, len(group), self.max_batch):
-                part = group[off:off + self.max_batch]
-                rp = RaggedPaths.from_list([r.path for r in part],
-                                           pad_to=rung)
-                B_pad = batch_rung(len(part), self.max_batch)
-                # round the rung up to a multiple of the mesh's batch shards
-                # so every device owns the same number of rows
-                B_pad = -(-B_pad // shards) * shards
-                rp = self._place(pad_batch(rp, B_pad))
-                self.shapes_seen.add((rung, B_pad))
-                self.padded_steps += rung * B_pad
-                self.true_steps += int(sum(r.length for r in part))
-                self.padded_rows += B_pad
-                self.true_rows += len(part)
-                fn = (self._compute_cache.get((rung, B_pad),
-                                              lambda: jax.jit(self.compute))
-                      if self.jit_compute else self.compute)
-                with self._mesh_scope():
-                    res = fn(rp)
-                for row, req in enumerate(part):
-                    out[req.ticket] = res[row]
+        t_flush = time.perf_counter()
+        with obs.span("serve.batcher.flush", requests=len(queue)):
+            shards = self._batch_shards()
+            lengths = np.asarray([r.length for r in queue], np.int64)
+            which = assign_buckets(lengths, self.ladder)
+            for k in np.unique(which):
+                rung = int(self.ladder[k])
+                group = [queue[i] for i in np.nonzero(which == k)[0]]
+                # split oversized groups so the batch rung never exceeds
+                # max_batch
+                for off in range(0, len(group), self.max_batch):
+                    part = group[off:off + self.max_batch]
+                    rp = RaggedPaths.from_list([r.path for r in part],
+                                               pad_to=rung)
+                    B_pad = batch_rung(len(part), self.max_batch)
+                    # round the rung up to a multiple of the mesh's batch
+                    # shards so every device owns the same number of rows
+                    B_pad = -(-B_pad // shards) * shards
+                    rp = self._place(pad_batch(rp, B_pad))
+                    self.shapes_seen.add((rung, B_pad))
+                    self.padded_steps += rung * B_pad
+                    self.true_steps += int(sum(r.length for r in part))
+                    self.padded_rows += B_pad
+                    self.true_rows += len(part)
+                    fn = (self._compute_cache.get(
+                        (rung, B_pad),
+                        lambda: obs.instrument_jit(
+                            self.compute, site="batcher_compute"))
+                        if self.jit_compute else self.compute)
+                    with self._mesh_scope(), \
+                            obs.span("serve.batcher.rung",
+                                     rung=rung, B_pad=B_pad, rows=len(part)):
+                        res = fn(rp)
+                    for row, req in enumerate(part):
+                        out[req.ticket] = res[row]
+        if obs.enabled():
+            obs.histogram(
+                "pathsig_batcher_flush_seconds",
+                "wall-clock of one DynamicBatcher.flush (dispatch side)",
+            ).observe(time.perf_counter() - t_flush)
+            obs.counter("pathsig_batcher_requests_total",
+                        "requests served through DynamicBatcher.flush",
+                        ).inc(len(queue))
+            obs.gauge("pathsig_batcher_padding_overhead",
+                      "cumulative padded/true step ratio fed to the engine",
+                      ).set(self.padded_steps / self.true_steps
+                            if self.true_steps else 0.0)
+            obs.gauge("pathsig_batcher_occupancy",
+                      "cumulative true/padded batch-row occupancy",
+                      ).set(self.true_rows / self.padded_rows
+                            if self.padded_rows else 0.0)
+            obs.gauge("pathsig_batcher_compiled_shapes",
+                      "distinct (rung, B_pad) shapes fed to the engine",
+                      ).set(len(self.shapes_seen))
+            obs.gauge("pathsig_batcher_queue_depth",
+                      "requests waiting in the DynamicBatcher queue",
+                      ).set(len(self._queue))
         return out
 
     def stats(self) -> dict:

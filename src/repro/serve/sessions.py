@@ -51,6 +51,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.checkpoint import Checkpointer
 from repro.core.stream import (SignatureStream, StreamCarry, stream_extend,
                                stream_init, stream_rolling_drop,
@@ -76,6 +77,15 @@ class SessionHandle:
     sid: Sid
     slot: int
     generation: int
+
+
+def _pctl(sample, q: float) -> float:
+    """Percentile of a host-side sample that is 0.0 — never NaN — when the
+    sample is empty (``np.percentile([]...)`` returns NaN with a warning)."""
+    a = np.asarray(sample, np.float64)
+    if a.size == 0:
+        return 0.0
+    return float(np.percentile(a, q))
 
 
 def _pow2(n: int) -> int:
@@ -339,6 +349,7 @@ class SessionStore:
 
     def _evict_sids(self, sids: list[Sid], *, reason: str) -> None:
         slots = []
+        dropped_ticks = 0
         for sid in sids:
             slot = self._ids.pop(sid)
             self._valid[slot] = False
@@ -346,9 +357,18 @@ class SessionStore:
             dropped = self._pending.pop(slot, None)
             if dropped is not None:
                 self.dropped_ticks += dropped.ticks
+                dropped_ticks += dropped.ticks
             self._free.append(slot)
             slots.append(slot)
         self.evictions[reason] = self.evictions.get(reason, 0) + len(sids)
+        if obs.enabled():
+            obs.counter("pathsig_sessions_evictions_total",
+                        "SessionStore slot evictions by reason",
+                        ("reason",)).inc(len(sids), reason=reason)
+            if dropped_ticks:
+                obs.counter("pathsig_sessions_dropped_ticks_total",
+                            "queued ticks lost to eviction"
+                            ).inc(dropped_ticks)
         idx = jnp.asarray(np.asarray(slots, np.int64))
         self._carry = dataclasses.replace(
             self._carry,
@@ -447,19 +467,42 @@ class SessionStore:
         pending, self._pending = self._pending, {}
         applied = 0
         t0 = time.perf_counter()
+        metrics_on = obs.enabled()
+        stale_h = obs.histogram(
+            "pathsig_sessions_staleness_seconds",
+            "queue residency (enqueue -> flush) per pending session"
+        ) if metrics_on else None
         for p in pending.values():
             self._staleness.append(t0 - p.t_enqueue)
-        # waves: each wave takes at most max_ticks per session, arrival order
-        work = {s: np.concatenate(p.chunks) if len(p.chunks) > 1
-                else p.chunks[0] for s, p in pending.items()}
-        while work:
-            wave = {s: a[:self.max_ticks] for s, a in work.items()}
-            work = {s: a[self.max_ticks:] for s, a in work.items()
-                    if a.shape[0] > self.max_ticks}
-            applied += self._apply_wave(wave)
+            if stale_h is not None:
+                stale_h.observe(t0 - p.t_enqueue)
+        with obs.span("serve.sessions.flush", sessions=len(pending)):
+            # waves: each wave takes at most max_ticks per session, arrival
+            # order
+            work = {s: np.concatenate(p.chunks) if len(p.chunks) > 1
+                    else p.chunks[0] for s, p in pending.items()}
+            while work:
+                wave = {s: a[:self.max_ticks] for s, a in work.items()}
+                work = {s: a[self.max_ticks:] for s, a in work.items()
+                        if a.shape[0] > self.max_ticks}
+                applied += self._apply_wave(wave)
         self.flushes += 1
         self.now = (self.now + 1.0) if now is None else float(now)
         self.sweep()
+        if metrics_on:
+            obs.histogram(
+                "pathsig_sessions_flush_seconds",
+                "wall-clock of one SessionStore.flush (dispatch side)"
+            ).observe(time.perf_counter() - t0)
+            obs.counter("pathsig_sessions_ticks_applied_total",
+                        "increments delivered to the pool by flushes"
+                        ).inc(applied)
+            obs.gauge("pathsig_sessions_pool_occupancy",
+                      "live sessions / pool slots").set(
+                len(self._ids) / self._carry.size)
+            obs.gauge("pathsig_sessions_rung_shapes",
+                      "distinct (tick rung, row rung) flush shapes so far"
+                      ).set(len(self._flush_shapes))
         return applied
 
     def _apply_wave(self, wave: dict[int, np.ndarray]) -> int:
@@ -509,7 +552,8 @@ class SessionStore:
                 sub = stream_extend(sub, inc, counts=cnt,
                                     backend=self.backend)
                 return stream_scatter(carry, slots, sub)
-            return jax.jit(step, donate_argnums=self._donate)
+            return obs.instrument_jit(step, site="session_flush",
+                                      donate_argnums=self._donate)
 
         fn = self._jit.get(key, make)
         with self._mesh_scope():
@@ -630,7 +674,8 @@ class SessionStore:
                 sub, feats = out if return_stream else (out, None)
                 carry = stream_scatter(carry, idx, sub)
                 return (carry, feats) if return_stream else carry
-            return jax.jit(step, donate_argnums=self._donate)
+            return obs.instrument_jit(step, site="session_extend",
+                                      donate_argnums=self._donate)
 
         fn = self._jit.get(key, make)
         with self._mesh_scope():
@@ -664,7 +709,8 @@ class SessionStore:
                 sub = stream_take(carry, idx)
                 sub = stream_rolling_drop(sub, int(n))
                 return stream_scatter(carry, idx, sub)
-            return jax.jit(step, donate_argnums=self._donate)
+            return obs.instrument_jit(step, site="session_drop",
+                                      donate_argnums=self._donate)
 
         fn = self._jit.get(key, make)
         with self._mesh_scope():
@@ -687,8 +733,7 @@ class SessionStore:
 
     def stats(self) -> dict:
         """Occupancy / eviction / flush-shape / staleness accounting."""
-        stale = np.asarray(self._staleness) if self._staleness else \
-            np.zeros(0)
+        stale = self._staleness
         return {
             "sessions": len(self._ids),
             "pool_size": self._carry.size,
@@ -705,10 +750,8 @@ class SessionStore:
             "compiled_shapes": len(self._shape_keys),
             "compute_cache": dict(self._jit.info()._asdict()),
             "devices": self._batch_shards(),
-            "p50_staleness_s": float(np.percentile(stale, 50)) if len(stale)
-            else 0.0,
-            "p99_staleness_s": float(np.percentile(stale, 99)) if len(stale)
-            else 0.0,
+            "p50_staleness_s": _pctl(stale, 50),
+            "p99_staleness_s": _pctl(stale, 99),
             "now": self.now,
         }
 

@@ -16,6 +16,7 @@ shard that owns each example.  Outside any context nothing changes.
 from __future__ import annotations
 
 import dataclasses
+import os
 import time
 from typing import Any, Callable, Optional
 
@@ -23,6 +24,7 @@ import jax
 import jax.numpy as jnp
 
 import repro.models as M
+from repro import obs
 from repro.distributed.ctx import current_mesh, current_rules
 from repro.models.config import ModelConfig
 from repro.optim import Optimizer, global_norm
@@ -41,6 +43,8 @@ class TrainLoopConfig:
     sig_backend: str = ""               # "" = honour cfg.sig_head.backend;
     sig_backward: str = ""              # else override the engine dispatch
     loss: str = "lm"                    # "lm" | "sig_mmd" (distribution match)
+    run_dir: str = "runs"               # default JSONL run-log dir ("" = no
+    run_name: str = ""                  # default sink); "" names by time
 
 
 def _apply_sig_overrides(cfg: ModelConfig, sig_backend: str,
@@ -230,12 +234,24 @@ def train_loop(cfg: ModelConfig, params, opt: Optimizer, data_iter,
     resumes from ``start_step`` (see repro.checkpoint).  The straggler guard
     flags steps slower than ``straggler_deadline_s`` (at pod scale the
     launcher replaces the slow host; on CPU we log + continue).
+
+    Observability: every log step goes to ``on_metrics`` — when the caller
+    passes none, a default JSONL sink appends run logs under
+    ``loop.run_dir`` (gitignored ``runs/`` by default; ``run_dir=""``
+    disables).  Each step runs inside a ``train.step`` tracer span, ticks
+    the step-time histogram / straggler counter, and the jitted step's
+    retraces land in ``pathsig_jit_traces_total{site="train_step"}``.
     """
-    step_fn = jax.jit(make_train_step(cfg, opt, remat=loop.remat,
-                                      microbatch=loop.microbatch,
-                                      sig_backend=loop.sig_backend,
-                                      sig_backward=loop.sig_backward,
-                                      loss=loop.loss))
+    if on_metrics is None and loop.run_dir:
+        name = loop.run_name or time.strftime("run-%Y%m%d-%H%M%S")
+        on_metrics = obs.jsonl_sink(
+            os.path.join(loop.run_dir, f"{name}.jsonl"))
+    step_fn = obs.instrument_jit(
+        make_train_step(cfg, opt, remat=loop.remat,
+                        microbatch=loop.microbatch,
+                        sig_backend=loop.sig_backend,
+                        sig_backward=loop.sig_backward,
+                        loss=loop.loss), site="train_step")
     opt_state = opt.init(params)
     if checkpointer is not None and start_step:
         params, opt_state, _ = checkpointer.restore(params, opt_state,
@@ -248,14 +264,31 @@ def train_loop(cfg: ModelConfig, params, opt: Optimizer, data_iter,
     try:
         for step in range(start_step, loop.steps):
             t0 = time.perf_counter()
-            batch = next(data_iter)
-            if mesh is not None:
-                batch = place_batch(batch, mesh)
-            params, opt_state, metrics = step_fn(params, opt_state, batch)
-            jax.block_until_ready(metrics["loss"])   # honest step timing
+            with obs.span("train.step", step=step):
+                batch = next(data_iter)
+                if mesh is not None:
+                    batch = place_batch(batch, mesh)
+                params, opt_state, metrics = step_fn(params, opt_state, batch)
+                jax.block_until_ready(metrics["loss"])   # honest step timing
             dt = time.perf_counter() - t0
-            if loop.straggler_deadline_s and dt > loop.straggler_deadline_s:
+            straggler = bool(loop.straggler_deadline_s
+                             and dt > loop.straggler_deadline_s)
+            if straggler:
                 metrics = dict(metrics, straggler=True)
+            if obs.enabled():
+                obs.histogram("pathsig_train_step_seconds",
+                              "train step wall-clock (block_until_ready)"
+                              ).observe(dt)
+                if straggler:
+                    obs.counter("pathsig_train_stragglers_total",
+                                "steps exceeding straggler_deadline_s").inc()
+                obs.gauge("pathsig_train_loss",
+                          "last train-step loss").set(
+                    float(metrics["loss"]))
+                if "grad_norm" in metrics:
+                    obs.gauge("pathsig_train_grad_norm",
+                              "last train-step global gradient norm").set(
+                        float(metrics["grad_norm"]))
             if step % loop.log_every == 0 or step == loop.steps - 1:
                 m = {k: float(v) if hasattr(v, "shape") else v
                      for k, v in metrics.items()}

@@ -169,6 +169,21 @@ def test_session_ttl_and_lru_eviction(rng):
         strict.create("c")
 
 
+def test_empty_pool_stats_percentiles_are_zero_not_nan():
+    """A fresh store has no staleness samples: stats() must report 0.0
+    percentiles (finite), never NaN — downstream JSON sinks and dashboards
+    choke on NaN."""
+    store = SessionStore(2, 2, initial_sessions=2)
+    st = store.stats()
+    assert st["sessions"] == 0
+    assert st["p50_staleness_s"] == 0.0 and st["p99_staleness_s"] == 0.0
+    assert np.isfinite(st["p50_staleness_s"])
+    assert np.isfinite(st["p99_staleness_s"])
+    store.flush()                            # empty flush: still no samples
+    st = store.stats()
+    assert st["p50_staleness_s"] == 0.0 and st["p99_staleness_s"] == 0.0
+
+
 def test_session_flush_rung_wider_than_ring_stays_exact(rng):
     """Non-power-of-two ring + a tick count padded to a wider rung: the
     flush's padded extend used to zero wrapped ring slots, so the next
