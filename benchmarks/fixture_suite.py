@@ -1,0 +1,62 @@
+"""Synthetic benchmark suite for testing the regression gate itself.
+
+Not part of the default suite list — reachable only via
+``python -m benchmarks.run --only fixture``.  Emits the *native* flat
+record schema (a top-level ``baseline_records`` list, see
+``benchmarks/baselines/README.md``) so the gate path is exercised without
+the per-shape extractors, and is steered entirely by environment
+variables so tests can update baselines, inject a regression, and crash a
+suite deterministically:
+
+``PATHSIG_FIXTURE_MS``     wall-clock-shaped metric (default 10.0, lower
+                           is better, unit ``ms``)
+``PATHSIG_FIXTURE_THR``    throughput-shaped metric (default 100.0,
+                           higher is better, unit ``req/s``)
+``PATHSIG_FIXTURE_SHAPES`` exact count metric (default 4, unit ``count``)
+``PATHSIG_FIXTURE_RAISE``  ``1`` → ``run()`` raises (crash-isolation
+                           path of ``benchmarks/run.py``)
+"""
+from __future__ import annotations
+
+import json
+import os
+
+JSON_PATH = "BENCH_fixture.json"
+
+
+def _env_f(name: str, default: float) -> float:
+    try:
+        return float(os.environ.get(name, "") or default)
+    except ValueError:
+        return default
+
+
+def run(quick: bool = True) -> None:
+    if os.environ.get("PATHSIG_FIXTURE_RAISE", "").strip() == "1":
+        raise RuntimeError("fixture suite crash (PATHSIG_FIXTURE_RAISE=1)")
+    out = {
+        "benchmark": "fixture",
+        "quick": quick,
+        "baseline_records": [
+            # synthetic values are noiseless, so explicit tight floors
+            # (the machine-calibrated unit defaults would hide the 2x
+            # injected regressions the gate tests rely on)
+            {"key": "fixture/latency_ms",
+             "value": _env_f("PATHSIG_FIXTURE_MS", 10.0),
+             "unit": "ms", "higher_is_better": False, "noise_floor": 0.25},
+            {"key": "fixture/throughput",
+             "value": _env_f("PATHSIG_FIXTURE_THR", 100.0),
+             "unit": "req/s", "higher_is_better": True,
+             "noise_floor": 0.25},
+            {"key": "fixture/compiled_shapes",
+             "value": _env_f("PATHSIG_FIXTURE_SHAPES", 4),
+             "unit": "count", "higher_is_better": False},
+        ],
+    }
+    with open(JSON_PATH, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"fixture: wrote {JSON_PATH}", flush=True)
+
+
+if __name__ == "__main__":
+    run()

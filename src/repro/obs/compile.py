@@ -31,10 +31,20 @@ from . import metrics
 
 __all__ = [
     "shape_key", "count_trace", "instrument_jit", "record_cost",
-    "record_collectives", "TRACE_COUNTER_NAME",
+    "record_collectives", "TRACE_COUNTER_NAME", "set_retrace_sink",
 ]
 
 TRACE_COUNTER_NAME = "pathsig_jit_traces_total"
+
+# repro.obs.flight mirror: (site, shape_key) per trace, fed even when the
+# registry is disabled — compiles are rare, and the last-N retrace keys
+# are the flight recorder's most useful breadcrumb
+_RETRACE_SINK = None
+
+
+def set_retrace_sink(fn) -> None:
+    global _RETRACE_SINK
+    _RETRACE_SINK = fn
 
 
 def _trace_counter() -> metrics.Counter:
@@ -83,10 +93,15 @@ def _short_dtype(dtype) -> str:
 def count_trace(site: str, *xs, **kxs) -> None:
     """Tick the retrace counter for ``site``.  Call at the top of a jitted
     body: it runs once per compiled variant, so ticks == compiles.  No-op
-    when metrics are disabled."""
-    if not metrics.REGISTRY._enabled:
+    when metrics are disabled and no flight recorder is attached."""
+    sink = _RETRACE_SINK
+    if not metrics.REGISTRY._enabled and sink is None:
         return
-    _trace_counter().inc(site=site, shapes=shape_key(*xs, **kxs))
+    key = shape_key(*xs, **kxs)
+    if sink is not None:
+        sink(site, key)
+    if metrics.REGISTRY._enabled:
+        _trace_counter().inc(site=site, shapes=key)
 
 
 def instrument_jit(fn, *, site: str, **jit_kw):

@@ -47,9 +47,24 @@ __all__ = [
     "Counter", "Gauge", "Histogram", "Registry", "REGISTRY",
     "counter", "gauge", "histogram", "enable", "disable", "enabled",
     "enabled_scope", "reset", "snapshot", "to_prometheus", "write_snapshot",
-    "append_jsonl", "register_collector", "jsonl_sink",
-    "DEFAULT_BUCKETS",
+    "append_jsonl", "register_collector", "jsonl_sink", "set_flight_sink",
+    "DEFAULT_BUCKETS", "DEFAULT_MAX_LABEL_SETS",
 ]
+
+# label-cardinality cap per metric: retrace shape keys and similar
+# open-ended labels must not grow the registry without bound
+DEFAULT_MAX_LABEL_SETS = 1000
+
+CARDINALITY_DROP_COUNTER = "pathsig_metric_labelsets_dropped_total"
+
+# repro.obs.flight mirror: (kind, name, labels, value) per metric write
+# when the registry is enabled — installed via set_flight_sink()
+_FLIGHT_SINK = None
+
+
+def set_flight_sink(fn) -> None:
+    global _FLIGHT_SINK
+    _FLIGHT_SINK = fn
 
 # log-spaced seconds ladder (~half-decade steps): instrument latencies from
 # 10 µs to ~5 min land in distinct buckets
@@ -81,6 +96,27 @@ class _Metric:
         self.name = name
         self.help = help
         self.labelnames = tuple(labelnames)
+        self._card_warned = False
+
+    def _admit(self, key: tuple) -> bool:
+        """Cardinality guard — called with the registry lock held for a
+        label set not seen before.  Over the cap: warn once, tick the drop
+        counter (itself exempt), refuse the write."""
+        if len(self._values) < self._reg.max_label_sets \
+                or self.name == CARDINALITY_DROP_COUNTER:
+            return True
+        if not self._card_warned:
+            self._card_warned = True
+            warnings.warn(
+                f"metric {self.name!r} hit the label-cardinality cap "
+                f"({self._reg.max_label_sets} label sets); further new "
+                f"label sets are dropped (see {CARDINALITY_DROP_COUNTER})",
+                stacklevel=4)
+        self._reg.counter(
+            CARDINALITY_DROP_COUNTER,
+            "metric writes dropped by the per-metric label-cardinality "
+            "cap", ("metric",)).inc(metric=self.name)
+        return False
 
     def _values_list(self):
         raise NotImplementedError
@@ -100,7 +136,12 @@ class Counter(_Metric):
             return
         key = _label_key(self.labelnames, labels)
         with self._reg._lock:
+            if key not in self._values and not self._admit(key):
+                return
             self._values[key] = self._values.get(key, 0.0) + amount
+        fs = _FLIGHT_SINK
+        if fs is not None:
+            fs("counter", self.name, labels, amount)
 
     def value(self, **labels) -> float:
         """Current value for one label set (0.0 if never incremented)."""
@@ -128,15 +169,26 @@ class Gauge(_Metric):
     def set(self, value: float, **labels) -> None:
         if not self._reg._enabled:
             return
+        key = _label_key(self.labelnames, labels)
         with self._reg._lock:
-            self._values[_label_key(self.labelnames, labels)] = float(value)
+            if key not in self._values and not self._admit(key):
+                return
+            self._values[key] = float(value)
+        fs = _FLIGHT_SINK
+        if fs is not None:
+            fs("gauge", self.name, labels, value)
 
     def add(self, amount: float = 1.0, **labels) -> None:
         if not self._reg._enabled:
             return
         key = _label_key(self.labelnames, labels)
         with self._reg._lock:
+            if key not in self._values and not self._admit(key):
+                return
             self._values[key] = self._values.get(key, 0.0) + amount
+        fs = _FLIGHT_SINK
+        if fs is not None:
+            fs("gauge", self.name, labels, amount)
 
     def value(self, **labels) -> float:
         return self._values.get(_label_key(self.labelnames, labels), 0.0)
@@ -177,6 +229,8 @@ class Histogram(_Metric):
         with self._reg._lock:
             st = self._values.get(key)
             if st is None:
+                if not self._admit(key):
+                    return
                 st = self._values[key] = _HistState(len(self.buckets))
             i = 0
             for b in self.buckets:          # tiny fixed ladder: linear scan
@@ -190,6 +244,9 @@ class Histogram(_Metric):
                 st.min = value
             if value > st.max:
                 st.max = value
+        fs = _FLIGHT_SINK
+        if fs is not None:
+            fs("histogram", self.name, labels, value)
 
     def percentile(self, q: float, **labels) -> float:
         """Bucket-interpolated q-th percentile (q in [0, 100]); 0.0 when the
@@ -240,8 +297,10 @@ class Registry:
     docstring).  Most code uses the process-wide :data:`REGISTRY` through
     the module-level convenience functions."""
 
-    def __init__(self, enabled: bool = False):
+    def __init__(self, enabled: bool = False,
+                 max_label_sets: int = DEFAULT_MAX_LABEL_SETS):
         self._enabled = bool(enabled)
+        self.max_label_sets = int(max_label_sets)
         self._metrics: dict[str, _Metric] = {}
         self._collectors: list = []
         self._lock = threading.RLock()
@@ -264,6 +323,7 @@ class Registry:
         with self._lock:
             for m in self._metrics.values():
                 m._values.clear()
+                m._card_warned = False
 
     # -- instrument factories (get-or-create, type-checked) ----------------
 

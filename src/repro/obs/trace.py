@@ -30,23 +30,46 @@ Design rules (mirroring :mod:`repro.obs.metrics`):
   ``PATHSIG_TRACE_JAX=1`` each span also enters ``jax.profiler.TraceAnnotation``
   so the same names show up inside XLA's own profiler timeline.
 
+- **Bounded buffer.** The in-memory event list is a ring of
+  ``PATHSIG_TRACE_MAX_EVENTS`` (default 100000) most-recent events; on a
+  long traced run the oldest events are evicted and counted in
+  ``Tracer.dropped`` / the ``pathsig_trace_events_dropped_total`` metric,
+  and the save-at-exit still writes whatever the ring holds.
+
 ``PATHSIG_TRACE=<path>`` starts tracing at import and registers an atexit
 save to ``<path>``.
 """
 from __future__ import annotations
 
 import atexit
+import collections
 import json
 import os
 import threading
 import time
 
+from . import metrics as _metrics
+
 __all__ = [
     "Tracer", "TRACER", "span", "span_blocked", "instant",
     "start_trace", "stop_trace", "trace_active", "trace_scope",
+    "DEFAULT_MAX_EVENTS",
 ]
 
 _PID = os.getpid()
+
+DEFAULT_MAX_EVENTS = 100_000
+
+DROP_COUNTER_NAME = "pathsig_trace_events_dropped_total"
+
+
+def _env_max_events() -> int:
+    raw = os.environ.get("PATHSIG_TRACE_MAX_EVENTS", "").strip()
+    try:
+        n = int(raw) if raw else DEFAULT_MAX_EVENTS
+    except ValueError:
+        n = DEFAULT_MAX_EVENTS
+    return max(1, n)
 
 
 class _NullSpan:
@@ -107,14 +130,20 @@ class Span:
 class Tracer:
     """Buffers Chrome trace events; one per process (:data:`TRACER`)."""
 
-    def __init__(self):
+    def __init__(self, max_events: int | None = None):
         self._active = False
         self._path: str | None = None
-        self._events: list[dict] = []
+        self._max_events = _env_max_events() if max_events is None \
+            else max(1, int(max_events))
+        self._events: collections.deque = collections.deque(
+            maxlen=self._max_events)
         self._lock = threading.Lock()
         self._epoch = 0.0
         self._local = threading.local()
         self._jax_ann = None       # jax.profiler.TraceAnnotation when bridged
+        self._flight = None        # repro.obs.flight ring (always-on sink)
+        self._record = False       # := _active or _flight is not None
+        self.dropped = 0           # ring evictions since last reset
 
     # -- lifecycle ---------------------------------------------------------
 
@@ -122,11 +151,21 @@ class Tracer:
     def active(self) -> bool:
         return self._active
 
+    def _update_record(self) -> None:
+        self._record = self._active or self._flight is not None
+
+    def set_flight(self, recorder) -> None:
+        """Attach/detach the flight-recorder ring — spans keep feeding it
+        even when no trace file is active."""
+        self._flight = recorder
+        self._update_record()
+
     def start(self, path: str | None = None, *, jax_bridge: bool = False,
               reset: bool = True) -> None:
         with self._lock:
             if reset:
-                self._events = []
+                self._events.clear()
+                self.dropped = 0
             self._path = path
             self._epoch = time.perf_counter()
             if jax_bridge:
@@ -138,12 +177,14 @@ class Tracer:
             else:
                 self._jax_ann = None
             self._active = True
+            self._update_record()
 
     def stop(self, path: str | None = None) -> str | None:
         """Deactivate and, when a path is known, write the JSON file.
         Returns the written path (None if nothing was written)."""
         with self._lock:
             self._active = False
+            self._update_record()
             out = path or self._path
         if out:
             self.save(out)
@@ -156,7 +197,9 @@ class Tracer:
             doc = {
                 "traceEvents": list(self._events),
                 "displayTimeUnit": "ms",
-                "otherData": {"producer": "repro.obs.trace"},
+                "otherData": {"producer": "repro.obs.trace",
+                              "events_dropped": self.dropped,
+                              "max_events": self._max_events},
             }
         d = os.path.dirname(path)
         if d:
@@ -168,7 +211,8 @@ class Tracer:
 
     def clear(self) -> None:
         with self._lock:
-            self._events = []
+            self._events.clear()
+            self.dropped = 0
 
     @property
     def events(self) -> list[dict]:
@@ -192,8 +236,26 @@ class Tracer:
             st = self._local.ann_stack = []
         return st
 
+    def _append(self, ev: dict) -> None:
+        dropped = False
+        with self._lock:
+            if len(self._events) == self._max_events:
+                self.dropped += 1       # deque(maxlen) evicts the oldest
+                dropped = True
+            self._events.append(ev)
+        if dropped:
+            _metrics.counter(
+                DROP_COUNTER_NAME,
+                "trace events evicted from the bounded ring "
+                "(PATHSIG_TRACE_MAX_EVENTS)").inc()
+
     def _emit(self, name, t0, t1, depth, args) -> None:
-        ev = {
+        fl = self._flight
+        if fl is not None:
+            fl.record_span(name, t0, t1, depth, args)
+        if not self._active:
+            return
+        self._append({
             "name": name,
             "ph": "X",
             "ts": (t0 - self._epoch) * 1e6,
@@ -201,12 +263,15 @@ class Tracer:
             "pid": _PID,
             "tid": threading.get_ident() & 0xFFFF,
             "args": {"depth": depth, **args},
-        }
-        with self._lock:
-            self._events.append(ev)
+        })
 
     def _emit_instant(self, name, args) -> None:
-        ev = {
+        fl = self._flight
+        if fl is not None:
+            fl.record_instant(name, args)
+        if not self._active:
+            return
+        self._append({
             "name": name,
             "ph": "i",
             "s": "t",
@@ -214,19 +279,17 @@ class Tracer:
             "pid": _PID,
             "tid": threading.get_ident() & 0xFFFF,
             "args": dict(args),
-        }
-        with self._lock:
-            self._events.append(ev)
+        })
 
     # -- user API ----------------------------------------------------------
 
     def span(self, name: str, **args):
-        if not self._active:
+        if not self._record:
             return _NULL_SPAN
         return Span(self, name, args)
 
     def instant(self, name: str, **args) -> None:
-        if not self._active:
+        if not self._record:
             return
         self._emit_instant(name, args)
 
@@ -236,8 +299,9 @@ TRACER = Tracer()
 
 def span(name: str, **args):
     """``with obs.span("kernels.signature", backend="pallas"):`` — null
-    context manager when no trace is active."""
-    if not TRACER._active:
+    context manager when neither a trace nor the flight recorder is
+    active."""
+    if not TRACER._record:
         return _NULL_SPAN
     return Span(TRACER, name, args)
 
@@ -245,7 +309,7 @@ def span(name: str, **args):
 def span_blocked(name: str, fn, *fn_args, **span_args):
     """Run ``fn(*fn_args)`` inside a span and ``block_until_ready`` the
     result so device time lands in the span.  Returns fn's result."""
-    if not TRACER._active:
+    if not TRACER._record:
         return fn(*fn_args)
     with TRACER.span(name, **span_args):
         out = fn(*fn_args)

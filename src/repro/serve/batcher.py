@@ -37,6 +37,7 @@ accounting.
 """
 from __future__ import annotations
 
+import collections
 import contextlib
 import dataclasses
 import time
@@ -80,6 +81,8 @@ class DynamicBatcher:
     jit_compute: bool = True          # one executable per (rung, batch) shape
     mesh: Optional[object] = None     # jax Mesh: place rungs across devices
     mesh_rules: Optional[dict] = None     # logical-axis rule overrides
+    slos: Optional[tuple] = None      # health() objectives (None -> defaults)
+    latency_window: int = 1024        # recent flush latencies kept for health
 
     def __post_init__(self):
         if self.ladder is None:
@@ -94,6 +97,11 @@ class DynamicBatcher:
         # plan-cache policy: evicting a shape frees its executable; traffic
         # returning to it just re-jits (bit-identical results)
         self._compute_cache = BoundedCache("dynamic_batcher_compute")
+        if self.slos is None:
+            self.slos = obs.batcher_slos()
+        # host-side latency record so health() works with metrics disabled
+        self._flush_latencies = collections.deque(
+            maxlen=max(1, self.latency_window))
         self._queue: list[_Request] = []
         self._next_ticket = 0
         self.shapes_seen: set[tuple[int, int]] = set()
@@ -159,6 +167,7 @@ class DynamicBatcher:
 
     # -- execution side ----------------------------------------------------
 
+    @obs.dump_on_error("batcher.flush")
     def flush(self) -> dict[int, jax.Array]:
         """Run every queued request through bucketed micro-batches; returns
         {ticket: result_row}."""
@@ -201,6 +210,7 @@ class DynamicBatcher:
                         res = fn(rp)
                     for row, req in enumerate(part):
                         out[req.ticket] = res[row]
+        self._flush_latencies.append(time.perf_counter() - t_flush)
         if obs.enabled():
             obs.histogram(
                 "pathsig_batcher_flush_seconds",
@@ -225,11 +235,22 @@ class DynamicBatcher:
                       ).set(len(self._queue))
         return out
 
+    def _flush_pctl(self, q: float) -> float:
+        lat = sorted(self._flush_latencies)
+        if not lat:
+            return 0.0
+        i = max(0, min(len(lat) - 1,
+                       int(np.ceil(q / 100.0 * len(lat))) - 1))
+        return lat[i]
+
     def stats(self) -> dict:
         """Shape-count + padding-waste accounting for the traffic so far,
         plus per-device occupancy when the batcher places across a mesh."""
         shards = self._batch_shards()
         return {
+            "flush_p50_s": self._flush_pctl(50),
+            "flush_p99_s": self._flush_pctl(99),
+            "flushes_recorded": len(self._flush_latencies),
             "compiled_shapes": len(self.shapes_seen),
             "shapes": sorted(self.shapes_seen),
             "ladder": self.ladder.tolist(),
@@ -243,6 +264,14 @@ class DynamicBatcher:
                           if self.padded_rows else 0.0),
             "compute_cache": dict(self._compute_cache.info()._asdict()),
         }
+
+    def health(self, slos: Optional[tuple] = None) -> dict:
+        """Machine-readable SLO health evaluated over :meth:`stats` —
+        ``{"status": "ok"|"breach", "breaches": [...], "results": [...]}``.
+        Host-side only (the recent-flush latency window feeds the p99), so
+        it works with the metrics registry disabled."""
+        use = self.slos if slos is None else tuple(slos)
+        return obs.slo.report(obs.evaluate_values(use, self.stats()))
 
     # -- engine factories --------------------------------------------------
 

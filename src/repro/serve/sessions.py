@@ -131,7 +131,8 @@ class SessionStore:
                  max_rows: int = 4096, backend: str = "jax",
                  lru_evict: bool = True, dtype=jnp.float32,
                  mesh=None, mesh_rules: Optional[dict] = None,
-                 staleness_window: int = 100_000):
+                 staleness_window: int = 100_000,
+                 slos: Optional[tuple] = None):
         if d < 1 or depth < 1:
             raise ValueError(f"need d >= 1 and depth >= 1, got {d}, {depth}")
         if ring_capacity < 0:
@@ -149,6 +150,7 @@ class SessionStore:
         self.dtype = dtype
         self.mesh = mesh if mesh is not None else current_mesh()
         self.mesh_rules = mesh_rules
+        self.slos = obs.session_slos() if slos is None else tuple(slos)
 
         n0 = max(_pow2(initial_sessions), self._batch_shards())
         if max_sessions is not None and n0 > _pow2(max_sessions):
@@ -389,6 +391,7 @@ class SessionStore:
 
     # -- ingest ------------------------------------------------------------
 
+    @obs.dump_on_error("sessions.ingest")
     def ingest(self, session: Union[Sid, SessionHandle], increments, *,
                now: Optional[float] = None) -> None:
         """Queue (m, d) new increments for one session (delivered at the
@@ -400,6 +403,7 @@ class SessionStore:
                              f"{inc.shape}")
         self._queue(h.slot, inc, now)
 
+    @obs.dump_on_error("sessions.ingest_many")
     def ingest_many(self, sids, counts, ticks, *,
                     now: Optional[float] = None,
                     auto_create: bool = False) -> None:
@@ -447,6 +451,7 @@ class SessionStore:
 
     # -- flush: continuous-batching delivery -------------------------------
 
+    @obs.dump_on_error("sessions.flush")
     def flush(self, *, now: Optional[float] = None) -> int:
         """Deliver every queued tick through bucketed pool updates; advance
         the logical clock; TTL-sweep.  Returns the number of ticks applied.
@@ -754,6 +759,15 @@ class SessionStore:
             "p99_staleness_s": _pctl(stale, 99),
             "now": self.now,
         }
+
+    def health(self, slos: Optional[tuple] = None) -> dict:
+        """Machine-readable SLO health evaluated over :meth:`stats` —
+        ``{"status": "ok"|"breach", "breaches": [...], "results": [...]}``.
+        Host-side only, so it works with the metrics registry disabled;
+        pass custom :class:`repro.obs.slo.Slo` specs (or configure the
+        store's ``slos=``) to change objectives."""
+        use = self.slos if slos is None else tuple(slos)
+        return obs.slo.report(obs.evaluate_values(use, self.stats()))
 
     # -- checkpoint / restore ----------------------------------------------
 

@@ -15,9 +15,12 @@ shard that owns each example.  Outside any context nothing changes.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
+import math
 import os
 import time
+import warnings
 from typing import Any, Callable, Optional
 
 import jax
@@ -45,6 +48,17 @@ class TrainLoopConfig:
     loss: str = "lm"                    # "lm" | "sig_mmd" (distribution match)
     run_dir: str = "runs"               # default JSONL run-log dir ("" = no
     run_name: str = ""                  # default sink); "" names by time
+    # SLO enforcement (repro.obs.slo): active when slos or slo_callback is
+    # set.  Objectives are evaluated over the trailing slo_window steps at
+    # the slo_every cadence (0 = log_every); slos=() uses obs.train_slos().
+    # The callback (if any) gets (step, report) at every evaluation; on a
+    # breached report a "warn" action warns, while slo_action="abort" — or
+    # the callback returning "abort" — raises SloBreach.
+    slos: tuple = ()
+    slo_every: int = 0
+    slo_window: int = 64
+    slo_action: str = "warn"            # "warn" | "abort"
+    slo_callback: Optional[Callable[[int, dict], Any]] = None
 
 
 def _apply_sig_overrides(cfg: ModelConfig, sig_backend: str,
@@ -241,6 +255,15 @@ def train_loop(cfg: ModelConfig, params, opt: Optimizer, data_iter,
     disables).  Each step runs inside a ``train.step`` tracer span, ticks
     the step-time histogram / straggler counter, and the jitted step's
     retraces land in ``pathsig_jit_traces_total{site="train_step"}``.
+
+    SLO enforcement: with ``loop.slos`` or ``loop.slo_callback`` set, the
+    trailing-window health (step-latency p99, grad-norm spikes, loss
+    finiteness — :func:`repro.obs.slo.train_slos` by default) is evaluated
+    at the log cadence; breaches warn, invoke the callback, and — with
+    ``slo_action="abort"`` or a callback returning ``"abort"`` — raise
+    :class:`repro.obs.slo.SloBreach`.  Any exception escaping a step
+    (including that abort) dumps the flight-recorder ring
+    (:mod:`repro.obs.flight`) before the final checkpoint save runs.
     """
     if on_metrics is None and loop.run_dir:
         name = loop.run_name or time.strftime("run-%Y%m%d-%H%M%S")
@@ -260,46 +283,89 @@ def train_loop(cfg: ModelConfig, params, opt: Optimizer, data_iter,
     if mesh is not None:
         params = replicate_tree(params, mesh)
         opt_state = replicate_tree(opt_state, mesh)
+    slo_active = bool(loop.slos) or loop.slo_callback is not None
+    slo_specs = tuple(loop.slos) or obs.train_slos()
+    slo_every = loop.slo_every or loop.log_every
+    window = collections.deque(maxlen=max(1, loop.slo_window))
     history = []
     try:
-        for step in range(start_step, loop.steps):
-            t0 = time.perf_counter()
-            with obs.span("train.step", step=step):
-                batch = next(data_iter)
-                if mesh is not None:
-                    batch = place_batch(batch, mesh)
-                params, opt_state, metrics = step_fn(params, opt_state, batch)
-                jax.block_until_ready(metrics["loss"])   # honest step timing
-            dt = time.perf_counter() - t0
-            straggler = bool(loop.straggler_deadline_s
-                             and dt > loop.straggler_deadline_s)
-            if straggler:
-                metrics = dict(metrics, straggler=True)
-            if obs.enabled():
-                obs.histogram("pathsig_train_step_seconds",
-                              "train step wall-clock (block_until_ready)"
-                              ).observe(dt)
+        with obs.dump_on_error("train.loop"):
+            for step in range(start_step, loop.steps):
+                t0 = time.perf_counter()
+                with obs.span("train.step", step=step):
+                    batch = next(data_iter)
+                    if mesh is not None:
+                        batch = place_batch(batch, mesh)
+                    params, opt_state, metrics = step_fn(params, opt_state,
+                                                         batch)
+                    jax.block_until_ready(metrics["loss"])  # honest timing
+                dt = time.perf_counter() - t0
+                straggler = bool(loop.straggler_deadline_s
+                                 and dt > loop.straggler_deadline_s)
                 if straggler:
-                    obs.counter("pathsig_train_stragglers_total",
-                                "steps exceeding straggler_deadline_s").inc()
-                obs.gauge("pathsig_train_loss",
-                          "last train-step loss").set(
-                    float(metrics["loss"]))
-                if "grad_norm" in metrics:
-                    obs.gauge("pathsig_train_grad_norm",
-                              "last train-step global gradient norm").set(
-                        float(metrics["grad_norm"]))
-            if step % loop.log_every == 0 or step == loop.steps - 1:
-                m = {k: float(v) if hasattr(v, "shape") else v
-                     for k, v in metrics.items()}
-                m["step"], m["sec"] = step, dt
-                history.append(m)
-                if on_metrics:
-                    on_metrics(step, m)
-            if checkpointer is not None and loop.ckpt_every and \
-                    step and step % loop.ckpt_every == 0:
-                checkpointer.save(params, opt_state, step)
+                    metrics = dict(metrics, straggler=True)
+                if obs.enabled():
+                    obs.histogram("pathsig_train_step_seconds",
+                                  "train step wall-clock "
+                                  "(block_until_ready)").observe(dt)
+                    if straggler:
+                        obs.counter(
+                            "pathsig_train_stragglers_total",
+                            "steps exceeding straggler_deadline_s").inc()
+                    obs.gauge("pathsig_train_loss",
+                              "last train-step loss").set(
+                        float(metrics["loss"]))
+                    if "grad_norm" in metrics:
+                        obs.gauge("pathsig_train_grad_norm",
+                                  "last train-step global gradient norm"
+                                  ).set(float(metrics["grad_norm"]))
+                if slo_active:
+                    window.append((dt, float(metrics["loss"]),
+                                   float(metrics["grad_norm"])
+                                   if "grad_norm" in metrics else 0.0))
+                    if step % slo_every == 0 or step == loop.steps - 1:
+                        _enforce_slos(loop, slo_specs, window, step)
+                if step % loop.log_every == 0 or step == loop.steps - 1:
+                    m = {k: float(v) if hasattr(v, "shape") else v
+                         for k, v in metrics.items()}
+                    m["step"], m["sec"] = step, dt
+                    history.append(m)
+                    if on_metrics:
+                        on_metrics(step, m)
+                if checkpointer is not None and loop.ckpt_every and \
+                        step and step % loop.ckpt_every == 0:
+                    checkpointer.save(params, opt_state, step)
     finally:
         if checkpointer is not None:
             checkpointer.save(params, opt_state, loop.steps)
     return params, opt_state, history
+
+
+def _slo_window_values(window) -> dict:
+    """Trailing-window observations for :func:`repro.obs.slo.train_slos`:
+    step-latency percentiles, worst grad norm, loss finiteness."""
+    secs = sorted(dt for dt, _, _ in window)
+    i99 = max(0, min(len(secs) - 1, math.ceil(0.99 * len(secs)) - 1))
+    last_loss = window[-1][1]
+    return {
+        "step_s": window[-1][0],
+        "step_p99_s": secs[i99],
+        "loss": last_loss,
+        "loss_finite": 1.0 if math.isfinite(last_loss) else 0.0,
+        "grad_norm_max": max(g for _, _, g in window),
+    }
+
+
+def _enforce_slos(loop: TrainLoopConfig, slo_specs, window,
+                  step: int) -> None:
+    results = obs.evaluate_values(slo_specs, _slo_window_values(window))
+    rep = obs.slo.report(results)
+    action = None
+    if loop.slo_callback is not None:
+        action = loop.slo_callback(step, rep)
+    if rep["status"] == "breach":
+        msg = (f"train SLO breach at step {step}: "
+               f"{', '.join(rep['breaches'])}")
+        if loop.slo_action == "abort" or action == "abort":
+            raise obs.SloBreach(msg)
+        warnings.warn(msg, stacklevel=2)

@@ -35,6 +35,9 @@ def pytest_configure(config):
     config.addinivalue_line(
         "markers", "tpu: needs compiled Pallas kernels (a real TPU device); "
         "skipped elsewhere")
+    config.addinivalue_line(
+        "markers", "slow: multi-second test (subprocess gate CLI, tiny "
+        "train loops); run by default, deselect with -m 'not slow'")
 
 
 def pytest_collection_modifyitems(config, items):

@@ -16,8 +16,28 @@ Contracts under test:
 4. *Instrumented stack*: plan-cache eviction ticks the new ``evictions``
    counter without changing results; autotune lookups record outcomes;
    dispatch entries count calls.
+5. *Regression gate* (``repro.obs.baseline``): flat-record extraction,
+   median/MAD aggregation, verdict direction for higher/lower-is-better
+   metrics, baseline round-trip + schema guard, and the
+   ``benchmarks/run.py`` CLI end-to-end via the env-steered fixture suite
+   (update → clean compare exit 0 → injected regression exit 2 → crash
+   exit 1).
+6. *SLOs* (``repro.obs.slo``): all three evaluation surfaces (value
+   dicts, registry snapshots with group_by, JSONL logs with burn-rate),
+   plus the wired health endpoints — ``SessionStore.health()`` flags a
+   seeded staleness breach and ``train_loop`` warns/aborts on its
+   trailing-window bundle.
+7. *Flight recorder* (``repro.obs.flight``): bounded ring, Chrome-trace
+   dump contents (spans + retrace keys + exception), single-dump marker
+   across nested boundaries, and a crashing ``train_loop`` leaving a
+   dump behind.  Plus the bounded trace ring / metric-cardinality guard
+   satellites.
 """
+import dataclasses
 import json
+import os
+import subprocess
+import sys
 import time
 
 import jax
@@ -27,6 +47,7 @@ import pytest
 
 from repro import obs
 from repro.kernels import ops
+from repro.obs import baseline
 
 
 @pytest.fixture(autouse=True)
@@ -358,3 +379,493 @@ def test_dispatch_disabled_is_bitwise_transparent():
         b = np.asarray(ops.signature(x, 3, backend="jax"))
         obs.TRACER._active = False
     np.testing.assert_array_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# 5. baseline store + regression gate
+# ---------------------------------------------------------------------------
+
+def test_record_unit_floor_and_roundtrip():
+    r = baseline.Record("s", "k/ms", 12.0, "ms")
+    assert r.noise_floor == baseline.UNIT_NOISE_FLOORS["ms"]
+    assert baseline.Record("s", "k/n", 3, "count").noise_floor == 0.0
+    assert baseline.Record("s", "k/?", 1.0, "weird").noise_floor == 0.10
+    # explicit floor survives json round-trip
+    r2 = baseline.Record("s", "k", 5.0, "ms", True, 0.4)
+    back = baseline.Record.from_json("s", r2.to_json())
+    assert back == r2
+
+
+def test_extract_records_native_schema_wins():
+    doc = {"baseline_records": [
+        {"key": "a/ms", "value": 3.0, "unit": "ms"},
+        {"key": "a/thr", "value": 9.0, "unit": "req/s",
+         "higher_is_better": True}],
+        "records": [{"B": 1}]}      # would crash the per-shape extractor
+    recs = baseline.extract_records("fig3", doc)
+    assert [r.key for r in recs] == ["a/ms", "a/thr"]
+    assert recs[1].higher_is_better
+
+
+def test_extract_records_per_shape_sessions():
+    doc = {"points": [{
+        "n_sessions": 512,
+        "pooled": {"updates_per_s_warm": 1000.0, "p99_staleness_s": 0.01,
+                   "compiled_shapes": 3},
+        "pooled_vs_per_object_speedup_warm": 40.0,
+        "max_abs_err_pooled_vs_per_object": 1e-6}]}
+    recs = {r.key: r for r in baseline.extract_records("sessions", doc)}
+    assert recs["sessions/S512/pooled_updates_per_s_warm"].higher_is_better
+    assert recs["sessions/S512/pooled_compiled_shapes"].noise_floor == 0.0
+    assert recs["sessions/S512/pooled_p99_staleness_s"].value == 0.01
+    # non-finite / missing values never become records
+    doc["points"][0]["pooled"]["updates_per_s_warm"] = float("nan")
+    del doc["points"][0]["pooled"]["p99_staleness_s"]
+    keys = {r.key for r in baseline.extract_records("sessions", doc)}
+    assert "sessions/S512/pooled_updates_per_s_warm" not in keys
+    assert "sessions/S512/pooled_p99_staleness_s" not in keys
+
+
+def test_aggregate_median_and_mad_widened_floor():
+    runs = [[baseline.Record("s", "k/q", v, "q")] for v in
+            (10.0, 100.0, 11.0)]    # one wild outlier (unknown-unit floor)
+    (agg,) = baseline.aggregate(runs)
+    assert agg.value == 11.0                    # median, not mean
+    # MAD = 1.0 -> scaled rel floor 4.45/11 ~ 0.40 > unit floor 0.10
+    assert agg.noise_floor == pytest.approx(3.0 * 1.4826 * 1.0 / 11.0)
+    # quiet reruns keep the unit floor
+    (q,) = baseline.aggregate([[baseline.Record("s", "k/q", 10.0, "q")],
+                               [baseline.Record("s", "k/q", 10.1, "q")]])
+    assert q.noise_floor == 0.10
+
+
+def test_compare_verdict_directions():
+    # explicit 25% floors so the assertions test direction logic, not the
+    # machine-calibrated unit defaults
+    base = {"s": [baseline.Record("s", "lat_ms", 10.0, "ms", False, 0.25),
+                  baseline.Record("s", "thr", 100.0, "req/s", True, 0.25),
+                  baseline.Record("s", "shapes", 4.0, "count"),
+                  baseline.Record("s", "gone", 1.0, "ms", False, 0.25)]}
+    cur = {"s": [baseline.Record("s", "lat_ms", 20.0, "ms", False, 0.25),
+                 baseline.Record("s", "thr", 30.0, "req/s", True, 0.25),
+                 baseline.Record("s", "shapes", 5.0, "count"),   # exact unit
+                 baseline.Record("s", "fresh", 7.0, "ms", False, 0.25)]}
+    v = {x.key: x for x in baseline.compare(cur, base)}
+    assert v["lat_ms"].status == "regressed" and v["lat_ms"].rel_delta < 0
+    assert v["thr"].status == "regressed"       # higher_is_better direction
+    assert v["shapes"].status == "regressed"    # count floor is exact
+    assert v["fresh"].status == "new"
+    assert v["gone"].status == "missing"
+    # improvements and in-floor jitter
+    cur2 = {"s": [baseline.Record("s", "lat_ms", 5.0, "ms", False, 0.25),
+                  baseline.Record("s", "thr", 101.0, "req/s", True, 0.25)]}
+    v2 = {x.key: x for x in baseline.compare(cur2, base)}
+    assert v2["lat_ms"].status == "improved"
+    assert v2["thr"].status == "ok"             # +1% is inside the floor
+    assert not baseline.regressions(baseline.compare(
+        {"s": base["s"]}, base))                # self-compare is all ok
+
+
+def test_verdict_table_orders_regressions_first():
+    base = {"s": [baseline.Record("s", "a_ms", 10.0, "ms"),
+                  baseline.Record("s", "b_ms", 10.0, "ms")]}
+    cur = {"s": [baseline.Record("s", "a_ms", 10.0, "ms"),
+                 baseline.Record("s", "b_ms", 99.0, "ms")]}
+    txt = baseline.verdict_table(baseline.compare(cur, base))
+    body = txt.splitlines()[2]                  # first data row
+    assert body.startswith("regressed") and "b_ms" in body
+    assert "2 metrics" in txt.splitlines()[-1]
+    hidden = baseline.verdict_table(baseline.compare(cur, base),
+                                    hide_ok=True)
+    assert "a_ms" not in hidden and "b_ms" in hidden
+
+
+def test_baseline_dir_roundtrip_and_schema_guard(tmp_path):
+    recs = [baseline.Record("mysuite", "k/ms", 3.25, "ms", False, 0.3)]
+    p = baseline.write_baseline(str(tmp_path), "mysuite", recs, reruns=3)
+    assert json.load(open(p))["reruns"] == 3
+    loaded = baseline.load_baseline_dir(str(tmp_path))
+    assert loaded["mysuite"] == recs
+    # future schema refuses to load silently-wrong
+    doc = json.load(open(p))
+    doc["schema"] = 99
+    json.dump(doc, open(p, "w"))
+    with pytest.raises(ValueError, match="schema"):
+        baseline.load_baseline(p)
+    assert baseline.load_baseline_dir(str(tmp_path / "nope")) == {}
+
+
+def _run_gate(tmp_path, extra_args, env_overrides):
+    env = dict(os.environ, PYTHONPATH=os.pathsep.join(
+        [os.path.join(_REPO, "src"), _REPO]), **env_overrides)
+    env.pop("PATHSIG_FIXTURE_RAISE", None)
+    env.update(env_overrides)
+    return subprocess.run(
+        [sys.executable, "-m", "benchmarks.run", "--only", "fixture",
+         "--baseline-dir", str(tmp_path / "baselines")] + extra_args,
+        capture_output=True, text=True, env=env, cwd=str(tmp_path),
+        timeout=300)
+
+
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.mark.slow
+def test_regression_gate_cli_end_to_end(tmp_path):
+    """update baselines -> clean compare exits 0 -> injected regression
+    exits 2 (EXIT_REGRESSED) -> crash exits 1 (EXIT_CRASH)."""
+    r = _run_gate(tmp_path, ["--update-baselines", "--reruns", "2"], {})
+    assert r.returncode == 0, (r.stdout[-2000:], r.stderr[-2000:])
+    assert (tmp_path / "baselines" / "fixture.json").exists()
+
+    r = _run_gate(tmp_path, ["--compare"], {})
+    assert r.returncode == 0, (r.stdout[-2000:], r.stderr[-2000:])
+    assert "regression gate" in r.stdout
+
+    out = tmp_path / "verdicts.json"
+    r = _run_gate(tmp_path, ["--compare", "--verdicts-out", str(out)],
+                  {"PATHSIG_FIXTURE_MS": "20.0"})       # 2x latency
+    assert r.returncode == 2, (r.returncode, r.stdout[-2000:])
+    assert "regressed" in r.stdout
+    doc = json.load(open(out))
+    assert any(v["status"] == "regressed" and v["key"] == "fixture/latency_ms"
+               for v in doc["verdicts"])
+
+    r = _run_gate(tmp_path, ["--compare"], {"PATHSIG_FIXTURE_RAISE": "1"})
+    assert r.returncode == 1, (r.returncode, r.stdout[-2000:])
+    assert "CRASHED" in r.stdout and "fixture FAIL" in r.stdout
+
+
+# ---------------------------------------------------------------------------
+# 6. SLOs
+# ---------------------------------------------------------------------------
+
+def test_slo_evaluate_values_surfaces():
+    slos = (obs.Slo("lat", "p99_s", 0.5),
+            obs.Slo("thr", "rate", 10.0, op=">="),
+            obs.Slo("ghost", "absent", 1.0))
+    res = obs.evaluate_values(slos, {"p99_s": 0.7, "rate": 50.0})
+    by = {r.slo.name: r for r in res}
+    assert by["lat"].breached and by["lat"].observed == 0.7
+    assert by["thr"].status == "ok"
+    assert by["ghost"].status == "no_data" and not by["ghost"].breached
+    # non-finite observations always breach
+    (nan_r,) = obs.evaluate_values((obs.Slo("l", "v", 1.0),),
+                                   {"v": float("nan")})
+    assert nan_r.breached and nan_r.detail == "non-finite"
+    rep = obs.slo.report(res)
+    assert rep["status"] == "breach" and rep["breaches"] == ["lat"]
+    assert json.loads(json.dumps(rep))["results"][0]["name"] == "lat"
+
+
+def test_slo_bad_spec_raises():
+    with pytest.raises(ValueError, match="op"):
+        obs.Slo("x", "m", 1.0, op="!=")
+    with pytest.raises(ValueError, match="reducer"):
+        obs.Slo("x", "m", 1.0, reducer="p75")
+
+
+def test_slo_evaluate_snapshot_group_by_worst():
+    with obs.enabled_scope():
+        c = obs.counter("t_retrace_total", "x", ("site",))
+        c.inc(2, site="quiet")
+        c.inc(40, site="noisy")
+        h = obs.histogram("t_lat_s", "x")
+        for v in [0.01] * 90 + [2.0] * 10:      # 10% tail -> p99 in the tail
+            h.observe(v)
+        snap = obs.snapshot()
+    slos = (obs.Slo("budget", "t_retrace_total", 32, reducer="sum",
+                    group_by="site"),
+            obs.Slo("p99", "t_lat_s", 0.5, reducer="p99"),
+            obs.Slo("absent", "t_nope", 1.0))
+    by = {r.slo.name: r for r in obs.evaluate_snapshot(slos, snap)}
+    assert by["budget"].breached and by["budget"].detail == "site=noisy"
+    assert by["budget"].observed == 40.0        # the worst group, not the sum
+    assert by["p99"].breached                   # p99 caught the tail
+    assert by["absent"].status == "no_data"
+
+
+def test_slo_evaluate_log_burn_rate(tmp_path):
+    rows = [{"sec": 0.01} for _ in range(90)] + \
+           [{"sec": 5.0} for _ in range(10)]
+    budget = obs.Slo("steps", "sec", 1.0, budget=0.05)   # 5% allowed
+    (r,) = obs.evaluate_log((budget,), rows, window=100)
+    assert r.breached and r.burn_rate == pytest.approx(2.0)  # 10% / 5%
+    (ok,) = obs.evaluate_log((obs.Slo("steps", "sec", 1.0, budget=0.2),),
+                             rows, window=100)
+    assert ok.status == "ok" and ok.burn_rate == pytest.approx(0.5)
+    # trailing window drops old violations
+    (w,) = obs.evaluate_log((budget,), rows[:95], window=5)
+    assert w.breached                      # window is all-violating tail
+    path = tmp_path / "log.jsonl"
+    path.write_text("\n".join(json.dumps(x) for x in rows) + "\nnot json\n")
+    (f,) = obs.evaluate_log((budget,), str(path), window=100)
+    assert f.breached and "violating" in f.detail
+
+
+def test_session_store_health_flags_staleness_breach():
+    from repro.serve.sessions import SessionStore
+    store = SessionStore(d=2, depth=2, initial_sessions=4)
+    h = store.health()
+    assert h["status"] == "ok"
+    # seed the staleness window with a breach of the 0.25 s default
+    store._staleness.extend([1.0] * 100)
+    h = store.health()
+    assert h["status"] == "breach"
+    assert "sessions_p99_staleness" in h["breaches"]
+    # custom bundle overrides the default
+    h2 = store.health(slos=(obs.Slo("lax", "p99_staleness_s", 10.0),))
+    assert h2["status"] == "ok"
+
+
+def test_batcher_health_and_flush_latency_stats():
+    from repro.serve import DynamicBatcher
+    db = DynamicBatcher.signature_service(2, 2, max_len=16, backend="jax",
+                                          min_bucket=4, max_batch=8)
+    rng = np.random.default_rng(0)
+    for L in (3, 7, 5):
+        db.submit(np.cumsum(rng.normal(size=(L + 1, 2)).astype(np.float32),
+                            axis=0))
+    db.flush()
+    st = db.stats()
+    assert st["flushes_recorded"] == 1 and st["flush_p99_s"] > 0
+    assert db.health()["status"] == "ok"
+    h = db.health(slos=(obs.Slo("tight", "flush_p99_s", 1e-12),))
+    assert h["status"] == "breach" and h["breaches"] == ["tight"]
+
+
+def _tiny_train_cfg():
+    from repro.configs import get_config, reduce_config
+    return dataclasses.replace(reduce_config(get_config("qwen3-4b")),
+                               n_layers=1, d_model=32, n_heads=2,
+                               n_kv_heads=2, head_dim=16, d_ff=64,
+                               vocab_size=64)
+
+
+def _tiny_train(loop, steps_seen=None):
+    import repro.models as M
+    from repro.data.pipeline import TokenStream
+    from repro.optim import adamw
+    from repro.train import train_loop
+    cfg = _tiny_train_cfg()
+    params = M.init_params(jax.random.PRNGKey(0), cfg, jnp.float32)
+    it = iter(TokenStream(64, 2, 8, seed=0))
+    if steps_seen is not None:
+        base = it
+
+        def counting():
+            for b in base:
+                steps_seen.append(1)
+                yield b
+        it = counting()
+    return train_loop(cfg, params, adamw(lr=1e-3), it, loop)
+
+
+@pytest.mark.slow
+def test_train_loop_slo_warn_and_abort(tmp_path, monkeypatch):
+    from repro.train import TrainLoopConfig
+    monkeypatch.setenv("PATHSIG_FLIGHT_DIR", str(tmp_path))
+    # impossible p99 budget in warn mode: completes, but warns
+    loop = TrainLoopConfig(steps=3, log_every=1, run_dir="",
+                           slos=obs.train_slos(step_p99_s=1e-9))
+    with pytest.warns(UserWarning, match="SLO breach"):
+        _, _, hist = _tiny_train(loop)
+    assert len(hist) == 3                       # run was not aborted
+    # abort mode raises SloBreach and leaves a flight dump behind
+    calls = []
+    loop = TrainLoopConfig(steps=3, log_every=1, run_dir="",
+                           slos=obs.train_slos(step_p99_s=1e-9),
+                           slo_action="abort",
+                           slo_callback=lambda s, rep: calls.append(rep))
+    with pytest.raises(obs.SloBreach, match="train_step_p99"):
+        _tiny_train(loop)
+    assert calls and calls[0]["status"] == "breach"
+    dumps = list(tmp_path.glob("flight_*.json"))
+    assert len(dumps) == 1
+    doc = json.load(open(dumps[0]))
+    assert doc["otherData"]["exception"]["type"] == "SloBreach"
+    # healthy budgets: silent, full history
+    loop = TrainLoopConfig(steps=3, log_every=1, run_dir="",
+                           slos=obs.train_slos())
+    _, _, hist = _tiny_train(loop)
+    assert len(hist) == 3
+
+
+# ---------------------------------------------------------------------------
+# 7. flight recorder + bounded-ring satellites
+# ---------------------------------------------------------------------------
+
+def test_flight_ring_is_bounded():
+    from repro.obs.flight import FlightRecorder
+    fl = FlightRecorder(capacity=8, retrace_keys=2)
+    for i in range(20):
+        fl.record_span(f"s{i}", 0.0, 1.0, 0, None)
+        fl.record_retrace("site", f"k{i}")
+    assert len(fl) == 8
+    doc = fl.to_chrome()
+    assert [e["name"] for e in doc["traceEvents"]] == \
+        [f"s{i}" for i in range(12, 20)]        # most-recent survive
+    assert [r["shapes"] for r in doc["otherData"]["retrace_keys"]] == \
+        ["k18", "k19"]
+
+
+def test_flight_dump_contents_and_metric_series(tmp_path):
+    from repro.obs.flight import FlightRecorder
+    fl = FlightRecorder(capacity=32)
+    fl.record_span("serve.flush", 1.0, 1.5, 0, {"rungs": 2})
+    fl.record_instant("evict", {"sid": "a"})
+    fl.record_metric("counter", "t_total", {"op": "x"}, 3.0)
+    fl.record_retrace("sig_trunc", "f32[2,5,2]")
+    try:
+        raise ValueError("boom")
+    except ValueError as e:
+        p = fl.dump(str(tmp_path / "f.json"), exc=e, note="unit")
+    doc = json.load(open(p))
+    evs = {e["ph"]: e for e in doc["traceEvents"]}
+    assert evs["X"]["name"] == "serve.flush" and evs["X"]["dur"] == 5e5
+    assert evs["X"]["args"]["rungs"] == 2
+    assert evs["i"]["args"] == {"sid": "a"}
+    assert evs["C"]["name"] == "t_total{op=x}"      # labelled series
+    other = doc["otherData"]
+    assert other["note"] == "unit"
+    assert other["retrace_keys"][0]["site"] == "sig_trunc"
+    assert other["exception"]["type"] == "ValueError"
+    assert "boom" in other["exception"]["traceback"]
+    assert fl.dumps == 1
+
+
+def test_spans_feed_flight_even_without_active_trace(tmp_path):
+    """The always-on path: no start_trace, yet obs.span lands in the
+    flight ring (this is what makes post-mortem dumps non-empty)."""
+    from repro.obs.flight import FlightRecorder, disable_flight, \
+        enable_flight
+    fl = FlightRecorder(capacity=16)
+    enable_flight(fl)
+    try:
+        assert not obs.trace_active()
+        with obs.span("quiet.work", k=1):
+            pass
+        obs.instant("quiet.mark")
+        # metric deltas mirror only when the registry is enabled
+        with obs.enabled_scope():
+            obs.counter("t_flight_total", "x").inc(2)
+        names = [e[1] for e in fl._ring]
+        assert "quiet.work" in names and "quiet.mark" in names
+        assert "t_flight_total" in names
+        # ...and the trace-file buffer stayed empty
+        assert obs.TRACER.events == []
+    finally:
+        disable_flight()
+        obs.enable_flight()                     # restore module default
+
+
+def test_dump_on_error_dumps_once_across_nested_boundaries(tmp_path,
+                                                           monkeypatch):
+    monkeypatch.setenv("PATHSIG_FLIGHT_DIR", str(tmp_path))
+    with pytest.raises(RuntimeError, match="inner"):
+        with obs.dump_on_error("outer.site"):
+            with obs.dump_on_error("inner.site"):
+                raise RuntimeError("inner boom")
+    dumps = list(tmp_path.glob("flight_*.json"))
+    assert len(dumps) == 1                      # marker stopped the second
+    doc = json.load(open(dumps[0]))
+    assert doc["otherData"]["note"] == "inner.site"
+    assert doc["otherData"]["exception"]["message"] == "inner boom"
+
+
+@pytest.mark.slow
+def test_train_loop_crash_leaves_flight_dump(tmp_path, monkeypatch):
+    """Acceptance: an induced train_loop exception produces a flight dump
+    holding the last-N spans and the exception."""
+    from repro.train import TrainLoopConfig
+    monkeypatch.setenv("PATHSIG_FLIGHT_DIR", str(tmp_path))
+    obs.FLIGHT.clear()
+
+    def dying_iter():
+        from repro.data.pipeline import TokenStream
+        it = iter(TokenStream(64, 2, 8, seed=0))
+        yield next(it)
+        yield next(it)
+        raise RuntimeError("data pipeline died")
+
+    import repro.models as M
+    from repro.optim import adamw
+    from repro.train import train_loop
+    cfg = _tiny_train_cfg()
+    params = M.init_params(jax.random.PRNGKey(0), cfg, jnp.float32)
+    loop = TrainLoopConfig(steps=5, log_every=1, run_dir="")
+    with pytest.raises(RuntimeError, match="data pipeline died"):
+        train_loop(cfg, params, adamw(lr=1e-3), dying_iter(), loop)
+    dumps = list(tmp_path.glob("flight_*.json"))
+    assert len(dumps) == 1
+    doc = json.load(open(dumps[0]))
+    other = doc["otherData"]
+    assert other["exception"]["type"] == "RuntimeError"
+    assert "data pipeline died" in other["exception"]["message"]
+    spans = [e for e in doc["traceEvents"]
+             if e["ph"] == "X" and e["name"] == "train.step"]
+    assert len(spans) >= 2                      # the completed steps
+
+
+def test_sigusr2_dumps_live_ring(tmp_path, monkeypatch):
+    import signal
+    from repro.obs import flight
+    if not flight._SIG_INSTALLED:
+        pytest.skip("SIGUSR2 hook not installed in this process")
+    monkeypatch.setenv("PATHSIG_FLIGHT_DIR", str(tmp_path))
+    with obs.span("pre.signal"):
+        pass
+    os.kill(os.getpid(), signal.SIGUSR2)
+    dumps = list(tmp_path.glob("flight_*.json"))
+    assert len(dumps) == 1
+    doc = json.load(open(dumps[0]))
+    assert doc["otherData"]["note"] == "SIGUSR2"
+    assert any(e["name"] == "pre.signal" for e in doc["traceEvents"])
+
+
+def test_trace_ring_bounds_events_and_counts_drops():
+    from repro.obs.trace import DROP_COUNTER_NAME, Tracer
+    t = Tracer(max_events=3)
+    t.start()
+    with obs.enabled_scope():
+        for i in range(8):
+            with t.span(f"s{i}"):
+                pass
+        assert len(t.events) == 3
+        assert [e["name"] for e in t.events] == ["s5", "s6", "s7"]
+        assert t.dropped == 5
+        assert obs.counter(DROP_COUNTER_NAME, "x").value() == 5.0
+    t.stop()
+    t.clear()
+    assert t.dropped == 0
+    # env sizing is honoured (and clamped to >= 1)
+    os.environ["PATHSIG_TRACE_MAX_EVENTS"] = "2"
+    try:
+        assert Tracer()._max_events == 2
+    finally:
+        del os.environ["PATHSIG_TRACE_MAX_EVENTS"]
+
+
+def test_metric_label_cardinality_guard():
+    from repro.obs.metrics import CARDINALITY_DROP_COUNTER, Registry
+    reg = Registry(enabled=True, max_label_sets=3)
+    c = reg.counter("t_wild_total", "x", ("rid",))
+    with pytest.warns(UserWarning, match="cardinality"):
+        for i in range(10):
+            c.inc(rid=f"r{i}")
+    assert len(c._values) == 3                  # capped
+    assert c.value(rid="r0") == 1.0 and c.value(rid="r9") == 0.0
+    drops = reg.counter(CARDINALITY_DROP_COUNTER, "x", ("metric",))
+    assert drops.value(metric="t_wild_total") == 7.0
+    # existing label sets keep updating after the cap
+    c.inc(rid="r1")
+    assert c.value(rid="r1") == 2.0
+    # histograms share the guard
+    h = reg.histogram("t_wild_seconds", "x", ("rid",))
+    with pytest.warns(UserWarning, match="cardinality"):
+        for i in range(6):
+            h.observe(0.1, rid=f"r{i}")
+    assert h.count(rid="r5") == 0 and h.count(rid="r0") == 1
+    # reset clears values and re-arms the warn-once
+    reg.reset()
+    assert not c._values and not c._card_warned

@@ -216,10 +216,55 @@ _TRAIN_SERVE = _PRELUDE + textwrap.dedent("""
     print("SHARDOK trainserve")
 """)
 
+_OBS = _PRELUDE + textwrap.dedent("""
+    # observability under shard_map: dispatch spans + counters fire for
+    # mesh-routed calls, and the gram ring's ANALYTIC wire-byte counter
+    # agrees with the lowered HLO via collective_stats (the ppermute sits
+    # inside a fori_loop: one static instruction executed `size` times, so
+    # analytic == n_dev * per-instruction wire bytes).
+    from repro import obs
+
+    obs.enable()
+    obs.start_trace()
+    with sharding_ctx(mesh):
+        ops.signature(x, depth, backend="jax").block_until_ready()
+    assert obs.counter("pathsig_dispatch_calls_total", "",
+                       ("op", "backend", "ctx")).value(
+        op="signature", backend="jax", ctx="eager") >= 1
+    evs = [e for e in obs.trace.TRACER.events
+           if e.get("name") == "kernels.signature"]
+    assert evs and evs[0]["args"]["ctx"] == "eager", evs[:3]
+    obs.stop_trace()
+
+    # gram ring wire accounting: By divisible by n_dev -> no pad rows, the
+    # analytic counter is exactly n_dev * shard_bytes per eager call
+    obs.reset()
+    Bx, By, D = 16, 24, 120
+    Sx = jax.random.normal(jax.random.PRNGKey(1), (Bx, D))
+    Sy = jax.random.normal(jax.random.PRNGKey(2), (By, D))
+    w = jnp.abs(jax.random.normal(jax.random.PRNGKey(3), (D,))) + 0.1
+    with sharding_ctx(mesh):
+        ops.gram(Sx, Sy, w, backend="jax").block_until_ready()
+    wire_counter = obs.counter("pathsig_ring_wire_bytes_total", "",
+                               ("ctx",))
+    analytic = wire_counter.value(ctx="eager")
+    assert analytic == 8 * (By // 8) * D * 4, analytic
+
+    with sharding_ctx(mesh):
+        txt = jax.jit(lambda a, b, c: ops.gram(a, b, c, backend="jax")
+                      ).lower(Sx, Sy, w).compile().as_text()
+    st = collective_stats(txt, default_group=8)
+    n, _, wire = st.by_kind["collective-permute"]
+    assert n >= 1, st.by_kind
+    assert analytic == 8 * (wire / n), (analytic, n, wire)
+    print("SHARDOK obs")
+""")
+
 _SCRIPTS = {"truncated": (_TRUNCATED, "SHARDOK truncated"),
             "projected": (_PROJECTED, "SHARDOK projected"),
             "gram": (_GRAM, "SHARDOK gram"),
-            "trainserve": (_TRAIN_SERVE, "SHARDOK trainserve")}
+            "trainserve": (_TRAIN_SERVE, "SHARDOK trainserve"),
+            "obs": (_OBS, "SHARDOK obs")}
 
 
 @pytest.mark.parametrize("name", sorted(_SCRIPTS))
