@@ -1,18 +1,27 @@
 """Mesh-sharding benchmarks: weak scaling + Gram ring vs replicated.
 
-Two claims from the mesh-aware dispatch (see the mesh note in
+Three claims from the mesh-aware dispatch (see the mesh note in
 ``repro.kernels.ops``) are tracked per PR:
 
 1. *Weak scaling*: with a fixed per-device batch, wall-clock of the
    signature forward+grad under ``sharding_ctx(make_sig_mesh(P))`` should be
-   ~flat in P.  On CPU the 8 "devices" share the same cores, so the CPU
-   numbers measure dispatch overhead, not speedup — the *trajectory* (and
-   the TPU run of the same file) is the claim.
-2. *Ring communication law*: the cross-device Gram moves O(B·D_sig) bytes
+   ~flat in P.  Inputs are committed to the mesh with ``jax.device_put``
+   BEFORE timing — an uncommitted host array is re-scattered on every call,
+   which measures the transfer, not the compute (that resharding was the
+   bulk of the historical P=8 cliff).  On CPU the 8 "devices" share the
+   same cores, so the CPU numbers measure dispatch overhead, not speedup —
+   the *trajectory* (and the TPU run of the same file) is the claim.
+2. *Retrace-free dispatch*: the sweep calls each sharded entry point
+   repeatedly per P; the ``pathsig_jit_traces_total`` counters snapshotted
+   into the JSON must show one compile per (site, shape) — the jit-cache
+   test in ``tests/test_shard.py`` enforces it, the bench records it.
+3. *Ring communication law*: the cross-device Gram moves O(B·D_sig) bytes
    over collective-permutes — measured from lowered HLO via
    ``repro.distributed.hlo.collective_stats`` and compared against the
    would-be replicated spellings (all-gather of Y: B·D_sig result bytes;
-   elementwise blow-up: B_x·B_y·D_sig).
+   elementwise blow-up: B_x·B_y·D_sig).  A ring-vs-oracle *crossover
+   curve* over B shows where the double-buffered ring overtakes the
+   replicated oracle.
 
 Every record lands in ``BENCH_shard.json`` (cwd), matching the other
 suites, so CI uploads it with the rest.  The module re-executes itself in a
@@ -47,7 +56,9 @@ def _bench(quick: bool) -> None:
     import jax
     import jax.numpy as jnp
     import numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec
 
+    from repro import obs
     from repro.core.words import sig_dim
     from repro.distributed import collective_stats, sharding_ctx
     from repro.kernels import ops
@@ -57,37 +68,61 @@ def _bench(quick: bool) -> None:
     from .common import header, make_paths, row, time_fn
 
     assert len(jax.devices()) == N_DEV, jax.devices()
-    out = {"devices": N_DEV, "weak_scaling": [], "gram_ring": {}}
+    # forced host "devices" timeslice the machine's physical cores: the
+    # ideal weak-scaling time at P shards is P·t1·min(1, cores/P) — on a
+    # box with >= 8 cores that reduces to the classic flat-t1 ideal, on a
+    # 1-core box to the serial bound P·t1.  Efficiency is measured against
+    # that ideal so the number isolates the dispatch/resharding overhead
+    # the PR controls (a real TPU run of this file has cores >= P and
+    # reduces to the textbook definition).
+    n_cores = os.cpu_count() or 1
+    out = {"devices": N_DEV, "host_cores": n_cores,
+           "weak_scaling": [], "gram_ring": {}}
 
     # --- 1. weak scaling: fixed per-device batch -------------------------
-    header("shard weak scaling (per-device batch fixed)")
-    b_dev, M, d, depth = (8, 64, 3, 4) if quick else (16, 256, 4, 4)
+    header("shard weak scaling (per-device batch fixed, committed inputs)")
+    b_dev, M, d, depth = (32, 128, 3, 4) if quick else (32, 256, 4, 4)
     iters = 3 if quick else 5
+    obs.enable()
+    obs.reset()
     t1 = None
     for P in (1, 2, 4, 8):
         mesh = make_sig_mesh(P)
         x = make_paths(b_dev * P, M, d, seed=0)
-        incs = jnp.diff(x, axis=1)
+        # commit the batch-sharded increments to the mesh BEFORE timing:
+        # an uncommitted array is host-scattered again on every call
+        incs = jax.device_put(
+            jnp.diff(x, axis=1),
+            NamedSharding(mesh, PartitionSpec("data", None, None)))
 
         def fwd_bwd(a):
             return jax.grad(lambda z: ops.signature(
                 z, depth, backend="auto").sum())(a)
 
         with sharding_ctx(mesh):
-            t = time_fn(jax.jit(fwd_bwd), incs, warmup=1, iters=iters)
+            t = time_fn(jax.jit(fwd_bwd), incs, warmup=2, iters=iters)
         t1 = t if t1 is None else t1
-        eff = t1 / t if t > 0 else 0.0
+        ideal = t1 * max(1.0, P / n_cores)   # timesliced-host ideal
+        eff = ideal / t if t > 0 else 0.0
+        eff_raw = t1 / t if t > 0 else 0.0
         tag = f"P={P};B={b_dev * P};M={M};d={d};N={depth}"
-        row("shard/weak_fwdbwd", f"{t * 1e3:.3f}", "ms", tag)
+        row("shard/weak_fwdbwd", f"{t * 1e3:.3f}", "ms",
+            f"{tag};eff={eff:.3f}")
         out["weak_scaling"].append({"P": P, "B": b_dev * P, "M": M, "d": d,
                                     "depth": depth, "ms": t * 1e3,
-                                    "efficiency_vs_P1": eff})
+                                    "ideal_ms": ideal * 1e3,
+                                    "efficiency_vs_P1": eff,
+                                    "efficiency_raw_t1_over_t": eff_raw})
+    # compile-per-shape accounting over the whole sweep (claim 2): every
+    # (site, shapes) label pair should sit at 1 — recorded, and enforced by
+    # tests/test_shard.py
+    snap = obs.snapshot()["metrics"].get("pathsig_jit_traces_total", {})
+    out["jit_traces"] = snap.get("values", [])
 
     # --- 2. Gram ring vs replicated --------------------------------------
     header("gram ring vs replicated (8-device mesh)")
     B, gd, gN = (64, 3, 4) if quick else (256, 4, 4)
     D = sig_dim(gd, gN)
-    X = make_paths(B, M, gd, seed=1)
     w = jnp.asarray(word_weights(gd, gN))
     mesh = make_sig_mesh(N_DEV)
 
@@ -97,7 +132,23 @@ def _bench(quick: bool) -> None:
     def oracle(a):
         return sig_gram(a, None, gN, route="oracle", backend="jax")
 
+    # crossover curve: ring (O(B·D) wire, P partial tiles) vs replicated
+    # oracle over growing B — the ring's per-step latency is amortised once
+    # the per-shard tiles are large enough to hide the permutes
+    curve = []
+    bs = (16, 32, 64, 128) if quick else (64, 128, 256, 512)
     with sharding_ctx(mesh):
+        for Bc in bs:
+            Xc = make_paths(Bc, M, gd, seed=1)
+            tr = time_fn(jax.jit(ring), Xc, warmup=1, iters=iters)
+            to = time_fn(jax.jit(oracle), Xc, warmup=1, iters=iters)
+            row("shard/gram_crossover", f"{tr * 1e3:.3f}", "ms",
+                f"B={Bc};D={D};oracle={to * 1e3:.3f}ms")
+            curve.append({"B": Bc, "D_sig": D, "ring_ms": tr * 1e3,
+                          "oracle_ms": to * 1e3,
+                          "ring_over_oracle": tr / to if to > 0 else 0.0})
+
+        X = make_paths(B, M, gd, seed=1)
         t_ring = time_fn(jax.jit(ring), X, warmup=1, iters=iters)
         t_oracle = time_fn(jax.jit(oracle), X, warmup=1, iters=iters)
         a = np.asarray(jax.jit(ring)(X))
@@ -127,6 +178,7 @@ def _bench(quick: bool) -> None:
                         "allgather_result_bytes": ag_result,
                         "replicated_y_bytes": replicated_y,
                         "elementwise_blowup_bytes": blowup,
+                        "crossover": curve,
                         "collectives": {k: list(v)
                                         for k, v in st.by_kind.items()}}
 

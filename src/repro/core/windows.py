@@ -31,6 +31,7 @@ from .projection import projected_signature_from_increments
 from .signature import (_unpack_ragged, as_lengths, mask_increments,
                         signature_combine, signature_from_increments,
                         signature_inverse)
+from .transforms import as_transform
 from .words import WordPlan, flat_index, sig_dim
 
 ROUTES = ("auto", "fold", "chen")
@@ -45,10 +46,17 @@ ROUTES = ("auto", "fold", "chen")
 #   * a window's inverse + Chen combine costs ~_CHEN_COMBINE_STEPS steps;
 #   * the chen route must still win by _CHEN_ADVANTAGE before we accept its
 #     numerics (S^{-1} ⊗ S cancellation on long prefixes) — a margin, not a
-#     cost, now that _CHEN_STEP_COST carries the physics.
+#     cost, now that _CHEN_STEP_COST carries the physics;
+#   * the fold route pays a fixed dispatch cost the streamed pass does not
+#     (window gather + (B, K, L, d) -> (B*K, L, d) reshape + fold-into-batch
+#     launch), ~0.3 ms on the fig3 grid ≈ _FOLD_OVERHEAD_STEPS fold steps.
+#     Without it the sub-millisecond records (small M·K) are unfittable: the
+#     measured grid has chen winning at M=48 but losing at M=144, which no
+#     pure work-ratio rule can reproduce.
 _CHEN_COMBINE_STEPS = 4
 _CHEN_STEP_COST = 2.5
 _CHEN_ADVANTAGE = 1.5
+_FOLD_OVERHEAD_STEPS = 256
 
 
 def _check_windows(windows, M: int) -> np.ndarray:
@@ -68,9 +76,10 @@ def _check_windows(windows, M: int) -> np.ndarray:
 def select_route(route: str, windows_np: np.ndarray, M: int,
                  chen_cost_scale: float = 1.0,
                  backward: str = "inverse") -> str:
-    """Host-side cost model: fold work = K · L_max padded scan steps, chen
-    work = one length-M streamed pass + ~_CHEN_COMBINE_STEPS steps per
-    window, with each chen step costing _CHEN_STEP_COST fold steps
+    """Host-side cost model: fold work = K · L_max padded scan steps plus a
+    fixed _FOLD_OVERHEAD_STEPS dispatch charge, chen work = one length-M
+    streamed pass + ~_CHEN_COMBINE_STEPS steps per window, with each chen
+    step costing _CHEN_STEP_COST fold steps
     (calibrated against BENCH_fig3.json measurements; scaled by
     ``chen_cost_scale`` when the streamed pass runs over a larger basis than
     the fold route, e.g. full truncation vs a small closure).
@@ -86,7 +95,7 @@ def select_route(route: str, windows_np: np.ndarray, M: int,
         return "fold"
     lengths = windows_np[:, 1] - windows_np[:, 0]
     K, L_max = len(lengths), int(lengths.max())
-    fold_work = K * max(L_max, 1)
+    fold_work = K * max(L_max, 1) + _FOLD_OVERHEAD_STEPS
     chen_work = _CHEN_STEP_COST * (M + _CHEN_COMBINE_STEPS * K) \
         * chen_cost_scale
     return "chen" if fold_work > _CHEN_ADVANTAGE * chen_work else "fold"
@@ -115,8 +124,35 @@ def _window_increments(path: jax.Array, windows_np: np.ndarray,
     return g * mask[None, :, :, None]
 
 
+def _fold_window_ctx(path: jax.Array, windows_np: np.ndarray, spec,
+                     lengths):
+    """Per-window ragged context for the transform-fused fold route:
+    -> (wlen (B, K) clipped window lengths, x0 (B, K, d) window starts).
+
+    The transform applies PER WINDOW (each window is its own sub-path: time
+    restarts at 0, lead-lag pairs don't straddle the window boundary, the
+    basepoint is the window's first path value) — identical to calling
+    ``signature(window_slice, transform=...)`` window by window.  Clipping
+    follows the ragged semantics: window [l, r] on example b reads
+    [min(l, L_b), min(r, L_b)].
+    """
+    B = path.shape[0]
+    windows = jnp.asarray(windows_np)
+    l_idx = jnp.broadcast_to(windows[None, :, 0], (B, windows.shape[0]))
+    r_idx = jnp.broadcast_to(windows[None, :, 1], (B, windows.shape[0]))
+    if lengths is not None:
+        l_idx = jnp.minimum(l_idx, lengths[:, None])
+        r_idx = jnp.minimum(r_idx, lengths[:, None])
+    wlen = r_idx - l_idx
+    x0 = None
+    if spec is not None and spec.basepoint:
+        x0 = jnp.take_along_axis(path, l_idx[..., None], axis=1)  # (B, K, d)
+    return wlen, x0
+
+
 def _chen_endpoint_states(path: jax.Array, windows_np: np.ndarray, depth: int,
-                          backward: str, backend: str, lengths=None):
+                          backward: str, backend: str, lengths=None,
+                          precision: str = "fp32"):
     """One streamed forward over the whole path -> (S_{0,l}, S_{0,r}) flats
     of shape (B, K, D_sig) each.  Differentiable on every backend via the
     streamed custom VJP in the dispatch layer.  With ``lengths``, increments
@@ -125,8 +161,8 @@ def _chen_endpoint_states(path: jax.Array, windows_np: np.ndarray, depth: int,
     clipped-window semantics of the fold route."""
     incs = mask_increments(tops.path_increments(path), lengths)
     stream = signature_from_increments(incs, depth, stream=True,
-                                       backward=backward,
-                                       backend=backend)     # (B, M, D)
+                                       backward=backward, backend=backend,
+                                       precision=precision)  # (B, M, D)
     # prepend the identity signature so index t reads S_{0,t} (t = 0 valid)
     ident = jnp.zeros_like(stream[:, :1])
     stream = jnp.concatenate([ident, stream], axis=1)       # (B, M+1, D)
@@ -137,21 +173,38 @@ def _chen_endpoint_states(path: jax.Array, windows_np: np.ndarray, depth: int,
 
 
 def _chen_route_signature(path: jax.Array, windows_np: np.ndarray, depth: int,
-                          backward: str, backend: str,
-                          lengths=None) -> jax.Array:
+                          backward: str, backend: str, lengths=None,
+                          precision: str = "fp32") -> jax.Array:
     """S_{l,r} = S_{0,l}^{-1} ⊗ S_{0,r} from the streamed forward."""
     d = path.shape[-1]
     s_l, s_r = _chen_endpoint_states(path, windows_np, depth, backward,
-                                     backend, lengths)
+                                     backend, lengths, precision=precision)
     D = s_l.shape[-1]
     inv = signature_inverse(s_l.reshape(-1, D), d, depth)
     out = signature_combine(inv, s_r.reshape(-1, D), d, depth)
     return out.reshape(s_l.shape)
 
 
+def _pin_transform_route(route: str, spec) -> str:
+    """Transforms pin ``"auto"`` to the fold route: Chen's identity is over
+    prefix signatures of ONE transformed path, but the per-window transform
+    restarts time / lead-lag / basepoint at each window's own start, so
+    S_{0,l}^{-1} ⊗ S_{0,r} of the transformed whole path is a DIFFERENT
+    object than the transformed window's signature."""
+    if spec is None:
+        return route
+    if route == "chen":
+        raise NotImplementedError(
+            "route='chen' cannot apply per-window transforms (the streamed "
+            "prefix states are of the whole transformed path, not of each "
+            "window's own transformed sub-path); use route='fold' or 'auto'")
+    return "fold"
+
+
 def windowed_signature(path: jax.Array, windows, depth: int, *,
                        route: str = "auto", backward: str = "inverse",
-                       backend: str = "jax", lengths=None) -> jax.Array:
+                       backend: str = "jax", lengths=None, transform=None,
+                       precision: str = "fp32") -> jax.Array:
     """(B, M+1, d) x (K, 2) -> (B, K, D_sig) in one batched evaluation.
 
     ``route`` picks the physical plan (see module docstring): ``"fold"``
@@ -164,6 +217,14 @@ def windowed_signature(path: jax.Array, windows, depth: int, *,
     ``lengths`` (B,) makes the batch ragged: window [l, r] is exactly
     clipped to [min(l, L_b), min(r, L_b)] per example on BOTH routes (a
     :class:`repro.ragged.RaggedPaths` may be passed directly as ``path``).
+
+    ``transform`` applies a path transform PER WINDOW, fused into the fold
+    route's engine sweep (the (B, K, L_aug, d_aug) augmented intermediate
+    never materialises; the spec rides into the dispatch with each window's
+    own clipped length and basepoint): identical to calling
+    ``signature(window_slice, transform=...)`` per window.  Transforms pin
+    ``route="auto"`` to fold; an explicit ``route="chen"`` raises.
+    ``precision`` threads through to the engines on both routes.
     """
     values, rl = _unpack_ragged(path)
     if rl is not None and lengths is None:
@@ -172,27 +233,42 @@ def windowed_signature(path: jax.Array, windows, depth: int, *,
     if path.ndim == 2:
         return windowed_signature(path[None], windows, depth, route=route,
                                   backward=backward, backend=backend,
-                                  lengths=lengths)[0]
+                                  lengths=lengths, transform=transform,
+                                  precision=precision)[0]
+    spec = as_transform(transform)
+    route = _pin_transform_route(route, spec)
     B, d = path.shape[0], path.shape[-1]
     M = path.shape[1] - 1
     if lengths is not None:
         lengths = as_lengths(lengths, B)
     windows = _check_windows(windows, M)
     if windows.shape[0] == 0:
-        return jnp.zeros((B, 0, sig_dim(d, depth)), path.dtype)
+        from .transforms import transform_dim
+        d_eff = transform_dim(spec, d) if spec else d
+        return jnp.zeros((B, 0, sig_dim(d_eff, depth)), path.dtype)
     if select_route(route, windows, M, backward=backward) == "chen":
         return _chen_route_signature(path, windows, depth, backward, backend,
-                                     lengths)
+                                     lengths, precision=precision)
     g = _window_increments(path, windows, lengths)         # (B, K, L, d)
     K, L, d = g.shape[1:]
-    flat = signature_from_increments(g.reshape(B * K, L, d), depth,
-                                     backward=backward, backend=backend)
+    if spec is None:
+        flat = signature_from_increments(g.reshape(B * K, L, d), depth,
+                                         backward=backward, backend=backend,
+                                         precision=precision)
+        return flat.reshape(B, K, -1)
+    wlen, x0 = _fold_window_ctx(path, windows, spec, lengths)
+    flat = signature_from_increments(
+        g.reshape(B * K, L, d), depth, backward=backward, backend=backend,
+        lengths=wlen.reshape(-1), transform=spec,
+        x0=None if x0 is None else x0.reshape(B * K, d),
+        precision=precision)
     return flat.reshape(B, K, -1)
 
 
 def windowed_projection(path: jax.Array, windows, plan: WordPlan, *,
                         route: str = "auto", backward: str = "inverse",
-                        backend: str = "jax", lengths=None) -> jax.Array:
+                        backend: str = "jax", lengths=None, transform=None,
+                        precision: str = "fp32") -> jax.Array:
     """Windowed + word-projected signatures in one call (B, K, |I|).
 
     The chen route computes the FULL truncated streamed signature at the
@@ -202,6 +278,11 @@ def windowed_projection(path: jax.Array, windows, plan: WordPlan, *,
     ``route="auto"`` only takes it when the overlap still pays for that.
     ``lengths`` clips windows per example exactly like
     :func:`windowed_signature`.
+
+    ``transform`` / ``precision`` mirror :func:`windowed_signature`: the
+    transform applies per window, fused into the fold route's sweep (the
+    plan's words index the AUGMENTED alphabet); transforms pin ``"auto"``
+    to fold and an explicit ``route="chen"`` raises.
     """
     values, rl = _unpack_ragged(path)
     if rl is not None and lengths is None:
@@ -210,7 +291,10 @@ def windowed_projection(path: jax.Array, windows, plan: WordPlan, *,
     if path.ndim == 2:
         return windowed_projection(path[None], windows, plan, route=route,
                                    backward=backward, backend=backend,
-                                   lengths=lengths)[0]
+                                   lengths=lengths, transform=transform,
+                                   precision=precision)[0]
+    spec = as_transform(transform)
+    route = _pin_transform_route(route, spec)
     B, d = path.shape[0], path.shape[-1]
     M = path.shape[1] - 1
     if lengths is not None:
@@ -222,14 +306,23 @@ def windowed_projection(path: jax.Array, windows, plan: WordPlan, *,
     if select_route(route, windows, M, chen_cost_scale=scale,
                     backward=backward) == "chen":
         full = _chen_route_signature(path, windows, plan.depth, backward,
-                                     backend, lengths)
+                                     backend, lengths, precision=precision)
         idx = jnp.asarray([flat_index(w, d) for w in plan.words])
         return jnp.take(full, idx, axis=-1)
     g = _window_increments(path, windows, lengths)
     K, L, d = g.shape[1:]
-    out = projected_signature_from_increments(g.reshape(B * K, L, d), plan,
-                                              backward=backward,
-                                              backend=backend)
+    if spec is None:
+        out = projected_signature_from_increments(g.reshape(B * K, L, d),
+                                                  plan, backward=backward,
+                                                  backend=backend,
+                                                  precision=precision)
+        return out.reshape(B, K, -1)
+    wlen, x0 = _fold_window_ctx(path, windows, spec, lengths)
+    out = projected_signature_from_increments(
+        g.reshape(B * K, L, d), plan, backward=backward, backend=backend,
+        lengths=wlen.reshape(-1), transform=spec,
+        x0=None if x0 is None else x0.reshape(B * K, d),
+        precision=precision)
     return out.reshape(B, K, -1)
 
 

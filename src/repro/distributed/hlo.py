@@ -103,6 +103,201 @@ def collective_stats(hlo_text: str, default_group: int = 1) -> CollectiveStats:
     return CollectiveStats(dict(by_kind), total_wire, total_res)
 
 
+# -- donation ---------------------------------------------------------------
+
+# optimized-HLO module header: input_output_alias={ {0}: (0, {}, may-alias) }
+_ALIAS_PAIR_RE = re.compile(
+    r"\{([\d,\s]*)\}:\s*\((\d+),\s*\{[\d,\s]*\},\s*(may-alias|must-alias)\)")
+# StableHLO carries donation as a function-arg attribute instead
+_STABLE_ALIAS_RE = re.compile(r"tf\.aliasing_output\s*=\s*(\d+)")
+
+
+@dataclasses.dataclass
+class DonationStats:
+    # (output_index, param_number, kind) per aliased pair
+    pairs: list
+    n_aliased: int
+
+    def summary(self) -> str:
+        if not self.pairs:
+            return "no input/output aliasing"
+        return "; ".join(f"out{o} <- arg{p} ({k})" for o, p, k in self.pairs)
+
+
+def donation_stats(hlo_text: str) -> DonationStats:
+    """Count donated (input-output aliased) buffers in lowered HLO text.
+
+    Accepts either optimized HLO (``compiled.as_text()``, where aliasing
+    lives in the module header's ``input_output_alias={...}``) or StableHLO
+    (``lowered.as_text()``, where it appears as ``tf.aliasing_output``
+    argument attributes).
+    """
+    pairs = []
+    for line in hlo_text.splitlines():
+        if "input_output_alias=" not in line:
+            continue
+        for out_idx, param, kind in _ALIAS_PAIR_RE.findall(line):
+            pairs.append((out_idx.strip() or "0", int(param), kind))
+    if not pairs:
+        for i, m2 in enumerate(_STABLE_ALIAS_RE.finditer(hlo_text)):
+            pairs.append((m2.group(1), i, "tf.aliasing_output"))
+    return DonationStats(pairs, len(pairs))
+
+
+def assert_donation(hlo_text: str, min_aliased: int = 1) -> DonationStats:
+    """Assert at least ``min_aliased`` donated buffers were actually aliased
+    in the lowered computation (donation silently degrades to a copy when
+    XLA can't use the buffer — this catches that)."""
+    st = donation_stats(hlo_text)
+    if st.n_aliased < min_aliased:
+        raise AssertionError(
+            f"expected >= {min_aliased} input/output-aliased buffers, found "
+            f"{st.n_aliased} ({st.summary()})")
+    return st
+
+
+# -- ring overlap ------------------------------------------------------------
+
+_COMP_HEAD_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*(?:\(|\s)")
+_INSTR_RE = re.compile(r"^(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+# the op kind is the first identifier followed by '(' after the result
+# shape — tuple shapes like '(s32[], f32[8,16]{1,0})' contain no 'ident('
+_KIND_RE = re.compile(r"([A-Za-z][\w\-]*)\(")
+_CALLED_RE = re.compile(
+    r"(?:calls|body|condition|to_apply)=%?([\w.\-]+)")
+
+
+def _parse_computations(hlo_text: str) -> dict:
+    """Split optimized HLO text into computations: name -> list of
+    (instr_name, kind, operand_names, called_comp_names)."""
+    comps = {}
+    cur = None
+    for raw in hlo_text.splitlines():
+        line = raw.strip()
+        if not line or line.startswith("//"):
+            continue
+        if line.endswith("{") and ("(" in line and "->" in line
+                                   or line.startswith("ENTRY")):
+            m = _COMP_HEAD_RE.match(line)
+            if m:
+                cur = m.group(1)
+                comps[cur] = []
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, rhs = m.group(1), m.group(2)
+        km = _KIND_RE.search(rhs)
+        if not km:
+            continue
+        kind = km.group(1)
+        called = _CALLED_RE.findall(rhs)
+        # data operands: % tokens after the op kind, excluding called
+        # computation refs, metadata, and the defined name itself
+        rest = rhs[km.end():]
+        rest = _CALLED_RE.sub("", rest)
+        rest = re.sub(r'metadata=\{[^}]*\}', "", rest)
+        operands = [t for t in re.findall(r"%([\w.\-]+)", rest)
+                    if t != name]
+        comps[cur].append((name, kind, operands, called))
+    return comps
+
+
+@dataclasses.dataclass
+class RingOverlap:
+    n_permutes: int
+    n_dots: int
+    in_loop: bool                 # any permute inside a while body/cond
+    permute_depends_on_dot: bool  # any permute data-dependent on a dot
+
+    @property
+    def overlapped(self) -> bool:
+        """True when permutes can overlap tile compute: they are unrolled
+        (not serialized behind a loop carry) and issued independently of
+        the dots (no permute waits on a dot result)."""
+        return (self.n_permutes > 0 and self.n_dots > 0
+                and not self.in_loop and not self.permute_depends_on_dot)
+
+    def summary(self) -> str:
+        return (f"permutes={self.n_permutes} dots={self.n_dots} "
+                f"in_loop={self.in_loop} "
+                f"permute_depends_on_dot={self.permute_depends_on_dot}")
+
+
+def ring_overlap(hlo_text: str) -> RingOverlap:
+    """Analyse a lowered ring computation for permute/compute overlap.
+
+    A serialized ring keeps its ``collective-permute`` inside a while-loop
+    body (each permute waits on the previous iteration's carry) or makes the
+    permute's operand data-dependent on the tile dot.  An overlapped ring is
+    unrolled with every permute issued from loop-independent values, so the
+    scheduler may run step k's dot while step k+1's shard is on the wire.
+    """
+    comps = _parse_computations(hlo_text)
+
+    # computations reachable from a while body/condition are "in loop"
+    loop_roots = set()
+    for instrs in comps.values():
+        for _name, kind, _ops, called in instrs:
+            if kind == "while":
+                loop_roots.update(called)
+    loop_comps = set()
+    frontier = list(loop_roots)
+    while frontier:
+        c = frontier.pop()
+        if c in loop_comps or c not in comps:
+            continue
+        loop_comps.add(c)
+        for _n, _k, _o, called in comps[c]:
+            frontier.extend(called)
+
+    # "dotty" computations: contain a dot directly or call one (fixpoint)
+    dotty = set()
+    changed = True
+    while changed:
+        changed = False
+        for cname, instrs in comps.items():
+            if cname in dotty:
+                continue
+            for _n, kind, _o, called in instrs:
+                if kind == "dot" or any(c in dotty for c in called):
+                    dotty.add(cname)
+                    changed = True
+                    break
+
+    n_permutes = 0
+    n_dots = len(re.findall(r"\bdot\(", hlo_text))
+    in_loop = False
+    depends = False
+    for cname, instrs in comps.items():
+        defs = {n: (kind, ops, called) for n, kind, ops, called in instrs}
+        for name, kind, _ops, _called in instrs:
+            if not kind.startswith("collective-permute"):
+                continue
+            n_permutes += 1
+            if cname in loop_comps:
+                in_loop = True
+            # def-use closure: does this permute wait on a dot result?
+            seen, stack = set(), list(defs[name][1])
+            while stack:
+                op = stack.pop()
+                if op in seen or op not in defs:
+                    continue
+                seen.add(op)
+                okind, oops, ocalled = defs[op]
+                if okind == "dot" or any(c in dotty for c in ocalled):
+                    depends = True
+                    stack = []
+                    break
+                stack.extend(oops)
+    return RingOverlap(n_permutes, n_dots, in_loop, depends)
+
+
 def remat_duplication(hlo_text: str) -> float:
     """Heuristic recompute indicator: ratio of dot/convolution op count to
     unique dot shapes (remat re-emits identical dots)."""

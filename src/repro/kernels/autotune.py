@@ -291,6 +291,34 @@ def sweep_cell(kind: str, cell: dict, repeats: int = 3) -> dict:
             def run(rec):
                 return ops.gram(Sx, Sy, w, backend=backend,
                                 precision=precision, **rec)
+        elif kind == "gram_ring":
+            # per-step tiles of the cross-device ppermute ring: only
+            # sweepable under a live mesh whose "batch" axis matches the
+            # cell's P (the lookup happens inside gram() under the caller's
+            # sharding context, so that context is ambient here)
+            from repro.distributed.ctx import current_mesh, logical_axis_size
+            P = int(cell.get("P", 0))
+            if current_mesh() is None or P < 2 \
+                    or logical_axis_size("batch") != P:
+                return {}
+            D = cell["D"]
+            Bx, By = cell["Bx"] * P, cell["By"] * P  # cell keys = per-shard
+            Sx = jax.numpy.asarray(
+                rng.standard_normal((Bx, D), np.float32) * 0.1)
+            Sy = jax.numpy.asarray(
+                rng.standard_normal((By, D), np.float32) * 0.1)
+            w = jax.numpy.asarray(rng.random(D, dtype=np.float32))
+            cands = [{"block_words": bw, "bx_tile": bx, "by_tile": by}
+                     for bw in (128, 512)
+                     for bx in sorted({128, min(128, max(8, _bucket(
+                         cell["Bx"])))})
+                     for by in sorted({128, min(128, max(8, _bucket(
+                         cell["By"])))})]
+            default = {"block_words": 512, "bx_tile": 128, "by_tile": 128}
+
+            def run(rec):
+                return ops.gram(Sx, Sy, w, backend=backend,
+                                precision=precision, **rec)
         else:
             return {}
         if default not in cands:

@@ -911,12 +911,19 @@ def _apply_sharded(fn, size: int, increments: jax.Array, lengths):
     return out[:B] if incs.shape[0] != B else out
 
 
-def _shard_wrap(mesh, names: tuple, with_lengths: bool, local_fn):
+def _shard_wrap(mesh, names: tuple, with_lengths: bool, local_fn, *,
+                site: str):
     """Wrap ``local_fn(increments, lengths_or_None)`` in shard_map with every
     argument batch-sharded on dim 0.  The body is the single-device dispatch,
     so the custom-VJP closure is rebuilt per shard and gradients shard
     identically to the primals.  ``check_rep=False``: pallas_call has no
-    replication rule."""
+    replication rule.
+
+    The wrapper is jitted (with retrace accounting under ``site``): the
+    plan cache pins one wrapper per (mesh, cell) and jit's cache pins one
+    trace per argument shape, so repeated mesh calls with the same
+    (op, cell, shape) re-dispatch a compiled executable instead of
+    re-tracing the per-shard custom-VJP closures every call."""
     spec = PartitionSpec(_axis_arg(names))
     if with_lengths:
         def body(incs, lens):
@@ -926,8 +933,9 @@ def _shard_wrap(mesh, names: tuple, with_lengths: bool, local_fn):
         def body(incs):
             return local_fn(incs, None)
         in_specs = (spec,)
-    return shard_map(body, mesh=mesh, in_specs=in_specs, out_specs=spec,
-                     check_rep=False)
+    return obs.instrument_jit(
+        shard_map(body, mesh=mesh, in_specs=in_specs, out_specs=spec,
+                  check_rep=False), site=site)
 
 
 @plan_cache
@@ -942,7 +950,8 @@ def _sharded_sig(mesh, names: tuple, with_lengths: bool, depth: int,
         _signature_local, depth=depth, engine=engine, interpret=interpret,
         backward=backward, batch_tile=batch_tile, split=split,
         time_chunks=time_chunks, stream=stream,
-        stream_stride=stream_stride, precision=precision))
+        stream_stride=stream_stride, precision=precision),
+        site="sharded_sig")
 
 
 @plan_cache
@@ -956,7 +965,7 @@ def _sharded_proj(mesh, names: tuple, with_lengths: bool, words: tuple,
         _projected_local, words=words, d=d, engine=engine,
         interpret=interpret, backward=backward, batch_tile=batch_tile,
         max_rows=max_rows, stream=stream, stream_stride=stream_stride,
-        precision=precision))
+        precision=precision), site="sharded_proj")
 
 
 @plan_cache
@@ -967,7 +976,7 @@ def _sharded_proj_fwd(mesh, names: tuple, with_lengths: bool, words: tuple,
     return _shard_wrap(mesh, names, with_lengths, partial(
         _projected_fwd_local, words=words, d=d, engine=engine,
         interpret=interpret, batch_tile=batch_tile, max_rows=max_rows,
-        precision=precision))
+        precision=precision), site="sharded_proj_fwd")
 
 
 # ---------------------------------------------------------------------------
@@ -984,8 +993,13 @@ def _gram_blocked_jax(Sx: jax.Array, Sy: jax.Array, w: jax.Array,
     By = Sy.shape[0]
     blk = min(block, D)
     n = -(-D // blk)
-    pad = n * blk - D
     dt = jnp.promote_types(Sx.dtype, jnp.float32)
+    if n == 1:
+        # single-block fast path: one dot, no fori_loop — keeps the lowered
+        # HLO loop-free so the gram ring's tile dots stay visible to the
+        # scheduler (and to ring_overlap's permute/compute analysis)
+        return (Sx.astype(dt) * w.astype(dt)[None, :]) @ Sy.astype(dt).T
+    pad = n * blk - D
     if pad:  # zero-padded weights make the padded columns exact no-ops
         Sx = jnp.pad(Sx, ((0, 0), (0, pad)))
         Sy = jnp.pad(Sy, ((0, 0), (0, pad)))
@@ -1041,11 +1055,23 @@ def _gram_ring(mesh, names: tuple, size: int, engine: str, interpret: bool,
     output row block at the shard's *origin* columns, and passes the shard to
     its left neighbour — P steps visit every tile.  Per-device communication
     is (P-1)/P · B_y · D bytes (O(B·D_sig) in total), live memory is one Y
-    shard + the local (B_x/P, B_y) row block, and no collective ever carries
-    a replicated Gram-sized or (B_x, B_y, D_sig) intermediate — asserted via
+    shard + one in-flight shard + the local (B_x/P, B_y) row block, and no
+    collective ever carries a replicated Gram-sized or (B_x, B_y, D_sig)
+    intermediate — asserted via
     :func:`repro.distributed.hlo.collective_stats` in the shard tests.
-    Differentiable: each tile rides the closed-form product VJP and the ring
-    transposes to the reversed ring.
+
+    The ring is double-buffered: the loop is statically unrolled (size <= 8
+    in practice) and each step issues the ppermute for the NEXT shard into
+    a second buffer *before* consuming the current one, so the permute has
+    no data dependence on the tile dot and the scheduler can hide step
+    k+1's wire time under step k's matmul.  Only size-1 permutes are issued
+    (the last held shard is consumed, not forwarded).  The carry buffers
+    alias in place across steps (XLA reuses the consumed shard's buffer for
+    the incoming one — the loop-free form is what makes that legal), and
+    the overlap structure is asserted on the lowered HLO via
+    :func:`repro.distributed.hlo.ring_overlap` in the shard tests.
+    Differentiable: each tile rides the closed-form product VJP and the
+    ring transposes to the reversed ring.
     """
     local = _gram_vjp(engine, interpret, block_words, bx_tile, by_tile)
     ax = _axis_arg(names)
@@ -1056,20 +1082,23 @@ def _gram_ring(mesh, names: tuple, size: int, engine: str, interpret: bool,
         p = jax.lax.axis_index(ax)
         by = sy.shape[0]
         dt = jnp.promote_types(sx.dtype, jnp.float32)
-
-        def step(s, carry):
-            sy_cur, G = carry
-            src = (p + s) % size          # origin device of the held shard
+        G = jnp.zeros((sx.shape[0], by * size), dt)
+        sy_cur = sy
+        for s in range(size):
+            sy_next = None
+            if s + 1 < size:  # prefetch before the dot: no data dependence
+                sy_next = jax.lax.ppermute(sy_cur, ax, perm)
             tile = local(sx, sy_cur, w).astype(dt)
-            G = jax.lax.dynamic_update_slice(G, tile, (0, src * by))
-            return jax.lax.ppermute(sy_cur, ax, perm), G
-
-        G0 = jnp.zeros((sx.shape[0], by * size), dt)
-        _, G = jax.lax.fori_loop(0, size, step, (sy, G0))
+            # (p + s) % size: origin device of the currently held shard
+            G = jax.lax.dynamic_update_slice(G, tile,
+                                             (0, ((p + s) % size) * by))
+            if sy_next is not None:
+                sy_cur = sy_next
         return G
 
-    return shard_map(body, mesh=mesh, in_specs=(spec, spec, PartitionSpec()),
-                     out_specs=spec, check_rep=False)
+    return obs.instrument_jit(
+        shard_map(body, mesh=mesh, in_specs=(spec, spec, PartitionSpec()),
+                  out_specs=spec, check_rep=False), site="gram_ring")
 
 
 @_obs_entry
@@ -1102,10 +1131,21 @@ def gram(Sx: jax.Array, Sy: jax.Array, weights: jax.Array, *,
         raise ValueError(
             f"gram needs Sx (B_x, D), Sy (B_y, D), weights (D,); got "
             f"{Sx.shape}, {Sy.shape}, {weights.shape}")
+    mb = _mesh_batch()
     if block_words is None or bx_tile is None or by_tile is None:
-        hit = autotune.lookup("gram", engine=engine, D=Sx.shape[1],
-                              Bx=Sx.shape[0], By=Sy.shape[0],
-                              precision=precision)
+        if mb is not None:
+            # under the mesh the tiles the local product actually sees are
+            # the per-shard ones — key the autotune cell on those (and on P:
+            # the ring's step count changes the profitable block size)
+            P = mb[2]
+            hit = autotune.lookup("gram_ring", engine=engine, D=Sx.shape[1],
+                                  Bx=-(-Sx.shape[0] // P),
+                                  By=-(-Sy.shape[0] // P), P=P,
+                                  precision=precision)
+        else:
+            hit = autotune.lookup("gram", engine=engine, D=Sx.shape[1],
+                                  Bx=Sx.shape[0], By=Sy.shape[0],
+                                  precision=precision)
         block_words = hit.get("block_words", 512) if block_words is None \
             else block_words
         bx_tile = hit.get("bx_tile", 128) if bx_tile is None else bx_tile
@@ -1117,29 +1157,29 @@ def gram(Sx: jax.Array, Sy: jax.Array, weights: jax.Array, *,
     # keeps exact fp32 cotangents for the rounded forward.
     Sx = quantise_increments(Sx, precision)
     Sy = quantise_increments(Sy, precision)
-    mb = _mesh_batch()
     if mb is not None:
         mesh, names, size = mb
         ring = _gram_ring(mesh, names, size, engine, interpret, block_words,
                           bx_tile, by_tile)
         Bx, By = Sx.shape[0], Sy.shape[0]
         if obs.REGISTRY._enabled:
-            # analytic ring accounting: `size` fori_loop steps, each one
-            # ppermute of the local (By/size, D) Y shard — published at
-            # dispatch so the ring-vs-oracle anomaly is a counter, not a
-            # benchmark-only artefact (HLO-derived numbers ride
-            # obs.record_collectives where a lowered module is at hand).
+            # analytic ring accounting: size-1 unrolled permute steps (the
+            # last held shard is consumed, not forwarded), each one ppermute
+            # of the local (By/size, D) Y shard — published at dispatch so
+            # the ring-vs-oracle anomaly is a counter, not a benchmark-only
+            # artefact (HLO-derived numbers ride obs.record_collectives
+            # where a lowered module is at hand).
             By_pad = -(-By // size) * size
             shard_bytes = (By_pad // size) * Sy.shape[1] * Sy.dtype.itemsize
             obs.counter("pathsig_ring_ppermute_total",
                         "ppermute steps issued by the gram ring",
                         ("ctx",)).inc(
-                size, ctx="trace" if isinstance(Sx, jax.core.Tracer)
+                size - 1, ctx="trace" if isinstance(Sx, jax.core.Tracer)
                 else "eager")
             obs.counter("pathsig_ring_wire_bytes_total",
                         "analytic wire bytes moved by gram-ring ppermutes "
                         "(per device)", ("ctx",)).inc(
-                size * shard_bytes,
+                (size - 1) * shard_bytes,
                 ctx="trace" if isinstance(Sx, jax.core.Tracer) else "eager")
         with obs.span("kernels.gram_ring", devices=size,
                       shapes=obs.shape_key(Sx, Sy)):
@@ -1198,6 +1238,11 @@ def _signature_local(increments: jax.Array, lengths, *, depth: int,
                 out = _pallas_sig_stream(depth, stream_stride, batch_tile,
                                          split, interpret,
                                          precision)(increments)
+            # bf16_fp32 stores the streamed emission buffer in bf16 (the
+            # pallas cells emit bf16 from fp32 accumulators); the STE round
+            # here makes every engine agree on the emitted values and is
+            # idempotent over the kernels' hard rounding
+            out = quantise_increments(out, precision)
             return _mask_stream_out(out, increments.shape[1], stream_stride,
                                     lengths)
         if engine == "jax" or backward == "autodiff":
@@ -1224,10 +1269,11 @@ def _signature_local(increments: jax.Array, lengths, *, depth: int,
     # ---- fused-transform cell -------------------------------------------
     if engine == "jax" or backward == "autodiff" or increments.shape[1] == 0:
         # the pure-JAX fused scan owns masking/basepoint/taux bookkeeping
-        return signature_from_increments(
+        out = signature_from_increments(
             increments, depth, stream=stream, stream_stride=stream_stride,
             backward=backward, backend="jax", lengths=lengths, transform=spec,
             x0=x0, precision=precision)
+        return quantise_increments(out, precision) if stream else out
     if lengths is not None:
         lengths = as_lengths(lengths, increments.shape[0])
         increments = mask_increments(increments, lengths)
@@ -1258,6 +1304,7 @@ def _signature_local(increments: jax.Array, lengths, *, depth: int,
         out = _pallas_sig_fused_stream(depth, stream_stride, batch_tile,
                                        split, interpret, kspec,
                                        precision)(increments, taux)
+        out = quantise_increments(out, precision)
         return _mask_stream_out(out, M_aug, stream_stride, aug_lengths)
     if time_chunks > 1 or backward == "checkpoint":
         # materialise-then-sweep fallback (support matrix): the augment is
@@ -1431,6 +1478,7 @@ def _projected_local(increments: jax.Array, lengths, *, words: tuple, d: int,
             out = _pallas_proj_fused_stream(
                 wplan.words, wplan.d, stream_stride, batch_tile, max_rows,
                 interpret, kspec, precision)(increments, taux)
+            out = quantise_increments(out, precision)
             return _mask_stream_out(out, M_aug, stream_stride, aug_lengths)
         return _pallas_proj_fused_inverse(
             wplan.words, wplan.d, batch_tile, max_rows, interpret, kspec,
@@ -1455,6 +1503,8 @@ def _projected_local(increments: jax.Array, lengths, *, words: tuple, d: int,
             out = _pallas_proj_stream(wplan.words, wplan.d, stream_stride,
                                       batch_tile, max_rows, interpret,
                                       precision)(increments)
+        # same streamed-emission rounding discipline as _signature_local
+        out = quantise_increments(out, precision)
         return _mask_stream_out(out, increments.shape[1], stream_stride,
                                 lengths)
     if engine == "jax" or backward != "inverse":

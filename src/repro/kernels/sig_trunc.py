@@ -170,8 +170,10 @@ def _kernel(incs_ref, *refs, d: int, depth: int, s: int, M: int,
 
                 @pl.when((((ja + 1) % stream_stride) == 0) | (ja == M_aug - 1))
                 def _emit():
+                    # the emission buffer may be bf16 (precision="bf16_fp32"):
+                    # round on store, the fp32 accumulator state is untouched
                     pl.store(out_ref, (pl.ds(q, 1), slice(None), slice(None)),
-                             state_ref[...][None])
+                             state_ref[...].astype(out_ref.dtype)[None])
         return 0
 
     jax.lax.fori_loop(0, M, body, 0)
@@ -314,8 +316,11 @@ def sig_trunc(increments: jax.Array, depth: int, *, batch_tile: int = 128,
         in_specs=in_specs,
         out_specs=pl.BlockSpec((M_out, rows, batch_tile),
                                lambda bi, c: (0, c, bi)),
+        # bf16_fp32: the (M_out, ·, ·) emission buffer is stored at the
+        # precision's storage dtype (halving its VMEM/HBM footprint) while
+        # the running state scratch stays a full fp32 accumulator
         out_shape=jax.ShapeDtypeStruct((M_out, n_cells * rows, B_pad),
-                                       jnp.float32),
+                                       _storage_dtype(precision)),
         scratch_shapes=[pltpu.VMEM((rows, batch_tile), jnp.float32)],
         interpret=interpret,
     )(*inputs)

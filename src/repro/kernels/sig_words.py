@@ -109,8 +109,10 @@ def _kernel(incs_ref, p_ref, l_ref, inv_ref, emit_ref, *refs,
 
                 @pl.when((((ja + 1) % stream_stride) == 0) | (ja == M_aug - 1))
                 def _emit():
+                    # bf16 emission buffer under bf16_fp32: round on store,
+                    # the fp32 accumulator state is untouched
                     pl.store(out_ref, (pl.ds(q, 1), slice(None), slice(None)),
-                             state_ref[...][None])
+                             state_ref[...].astype(out_ref.dtype)[None])
         return 0
 
     jax.lax.fori_loop(0, M, body, 0)
@@ -213,8 +215,10 @@ def sig_words(increments: jax.Array, tplan: TiledPlan, *,
         in_specs=in_specs,
         out_specs=pl.BlockSpec((M_out, 1 + W_pad, batch_tile),
                                lambda bi, t: (0, t, bi)),
+        # bf16_fp32: streamed emission buffer at the storage dtype, fp32
+        # accumulator scratch (same discipline as sig_trunc's stream cell)
         out_shape=jax.ShapeDtypeStruct((M_out, T * (1 + W_pad), B_pad),
-                                       jnp.float32),
+                                       _storage_dtype(precision)),
         scratch_shapes=[pltpu.VMEM((1 + W_pad, batch_tile), jnp.float32)],
         interpret=interpret,
     )(*inputs)

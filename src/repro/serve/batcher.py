@@ -83,6 +83,8 @@ class DynamicBatcher:
     mesh_rules: Optional[dict] = None     # logical-axis rule overrides
     slos: Optional[tuple] = None      # health() objectives (None -> defaults)
     latency_window: int = 1024        # recent flush latencies kept for health
+    async_dispatch: bool = True       # prefetch next rung while current runs
+    max_in_flight: int = 2            # bound on dispatched-not-retired rungs
 
     def __post_init__(self):
         if self.ladder is None:
@@ -102,8 +104,13 @@ class DynamicBatcher:
         # host-side latency record so health() works with metrics disabled
         self._flush_latencies = collections.deque(
             maxlen=max(1, self.latency_window))
+        if self.max_in_flight < 1:
+            raise ValueError(f"max_in_flight must be >= 1, got "
+                             f"{self.max_in_flight}")
         self._queue: list[_Request] = []
         self._next_ticket = 0
+        self._in_flight_peak = 0      # most dispatched-not-retired rungs seen
+        self._prefetched_rungs = 0    # Σ rungs device_put ahead of compute
         self.shapes_seen: set[tuple[int, int]] = set()
         self.padded_steps = 0         # Σ padded increments fed to the engine
         self.true_steps = 0           # Σ true increments served
@@ -167,6 +174,79 @@ class DynamicBatcher:
 
     # -- execution side ----------------------------------------------------
 
+    def _compute_fn(self, rung: int, B_pad: int):
+        return (self._compute_cache.get(
+            (rung, B_pad),
+            lambda: obs.instrument_jit(
+                self.compute, site="batcher_compute"))
+            if self.jit_compute else self.compute)
+
+    def _pack_groups(self, queue) -> list:
+        """Bucket + split the queue into host-side micro-batches:
+        [(rung, B_pad, part, host RaggedPaths)], with shape/padding
+        accounting applied."""
+        shards = self._batch_shards()
+        lengths = np.asarray([r.length for r in queue], np.int64)
+        which = assign_buckets(lengths, self.ladder)
+        groups = []
+        for k in np.unique(which):
+            rung = int(self.ladder[k])
+            group = [queue[i] for i in np.nonzero(which == k)[0]]
+            # split oversized groups so the batch rung never exceeds
+            # max_batch
+            for off in range(0, len(group), self.max_batch):
+                part = group[off:off + self.max_batch]
+                rp = RaggedPaths.from_list([r.path for r in part],
+                                           pad_to=rung)
+                B_pad = batch_rung(len(part), self.max_batch)
+                # round the rung up to a multiple of the mesh's batch
+                # shards so every device owns the same number of rows
+                B_pad = -(-B_pad // shards) * shards
+                self.shapes_seen.add((rung, B_pad))
+                self.padded_steps += rung * B_pad
+                self.true_steps += int(sum(r.length for r in part))
+                self.padded_rows += B_pad
+                self.true_rows += len(part)
+                groups.append((rung, B_pad, part, pad_batch(rp, B_pad)))
+        return groups
+
+    def _run_groups(self, groups) -> list:
+        """Async-dispatch executor: device_put the next rungs' host buffers
+        while the current rung computes (each rung's transfer is issued up
+        to ``max_in_flight`` groups ahead), dispatch every compute without
+        blocking on its result (jax dispatch is async), and retire the
+        oldest outstanding rung whenever more than ``max_in_flight`` are in
+        flight.  Returns [(part, result_array)]; with ``async_dispatch=
+        False`` this degrades to strict place→compute→next serial order."""
+        window = self.max_in_flight if self.async_dispatch else 0
+        placed = collections.deque()
+        next_put = 0
+
+        def top_up(limit):
+            nonlocal next_put
+            while next_put < len(groups) and next_put < limit:
+                rung, B_pad, part, rp = groups[next_put]
+                placed.append((rung, B_pad, part, self._place(rp)))
+                next_put += 1
+
+        results: list = []
+        in_flight: collections.deque = collections.deque()
+        for i in range(len(groups)):
+            top_up(i + 1 + window)
+            self._prefetched_rungs += len(placed) - 1
+            rung, B_pad, part, rp = placed.popleft()
+            fn = self._compute_fn(rung, B_pad)
+            with self._mesh_scope(), \
+                    obs.span("serve.batcher.rung", rung=rung, B_pad=B_pad,
+                             rows=len(part), prefetched=len(placed)):
+                res = fn(rp)
+            results.append((part, res))
+            in_flight.append(res)
+            self._in_flight_peak = max(self._in_flight_peak, len(in_flight))
+            while len(in_flight) > max(1, window):
+                jax.block_until_ready(in_flight.popleft())
+        return results
+
     @obs.dump_on_error("batcher.flush")
     def flush(self) -> dict[int, jax.Array]:
         """Run every queued request through bucketed micro-batches; returns
@@ -177,39 +257,9 @@ class DynamicBatcher:
             return out
         t_flush = time.perf_counter()
         with obs.span("serve.batcher.flush", requests=len(queue)):
-            shards = self._batch_shards()
-            lengths = np.asarray([r.length for r in queue], np.int64)
-            which = assign_buckets(lengths, self.ladder)
-            for k in np.unique(which):
-                rung = int(self.ladder[k])
-                group = [queue[i] for i in np.nonzero(which == k)[0]]
-                # split oversized groups so the batch rung never exceeds
-                # max_batch
-                for off in range(0, len(group), self.max_batch):
-                    part = group[off:off + self.max_batch]
-                    rp = RaggedPaths.from_list([r.path for r in part],
-                                               pad_to=rung)
-                    B_pad = batch_rung(len(part), self.max_batch)
-                    # round the rung up to a multiple of the mesh's batch
-                    # shards so every device owns the same number of rows
-                    B_pad = -(-B_pad // shards) * shards
-                    rp = self._place(pad_batch(rp, B_pad))
-                    self.shapes_seen.add((rung, B_pad))
-                    self.padded_steps += rung * B_pad
-                    self.true_steps += int(sum(r.length for r in part))
-                    self.padded_rows += B_pad
-                    self.true_rows += len(part)
-                    fn = (self._compute_cache.get(
-                        (rung, B_pad),
-                        lambda: obs.instrument_jit(
-                            self.compute, site="batcher_compute"))
-                        if self.jit_compute else self.compute)
-                    with self._mesh_scope(), \
-                            obs.span("serve.batcher.rung",
-                                     rung=rung, B_pad=B_pad, rows=len(part)):
-                        res = fn(rp)
-                    for row, req in enumerate(part):
-                        out[req.ticket] = res[row]
+            for part, res in self._run_groups(self._pack_groups(queue)):
+                for row, req in enumerate(part):
+                    out[req.ticket] = res[row]
         self._flush_latencies.append(time.perf_counter() - t_flush)
         if obs.enabled():
             obs.histogram(
@@ -262,6 +312,10 @@ class DynamicBatcher:
             "rows_per_device": self.padded_rows // shards,
             "occupancy": (self.true_rows / self.padded_rows
                           if self.padded_rows else 0.0),
+            "async_dispatch": self.async_dispatch,
+            "max_in_flight": self.max_in_flight,
+            "in_flight_peak": self._in_flight_peak,
+            "prefetched_rungs": self._prefetched_rungs,
             "compute_cache": dict(self._compute_cache.info()._asdict()),
         }
 

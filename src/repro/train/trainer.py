@@ -269,20 +269,30 @@ def train_loop(cfg: ModelConfig, params, opt: Optimizer, data_iter,
         name = loop.run_name or time.strftime("run-%Y%m%d-%H%M%S")
         on_metrics = obs.jsonl_sink(
             os.path.join(loop.run_dir, f"{name}.jsonl"))
+    # donate (params, opt_state): the step returns trees of identical
+    # shapes/dtypes, so XLA updates them in place instead of allocating a
+    # fresh copy per step (input_output_alias on the lowered HLO — asserted
+    # in tests/test_shard.py via repro.distributed.hlo.donation_stats)
     step_fn = obs.instrument_jit(
         make_train_step(cfg, opt, remat=loop.remat,
                         microbatch=loop.microbatch,
                         sig_backend=loop.sig_backend,
                         sig_backward=loop.sig_backward,
-                        loss=loop.loss), site="train_step")
+                        loss=loop.loss), site="train_step",
+        donate_argnums=(0, 1))
     opt_state = opt.init(params)
     if checkpointer is not None and start_step:
         params, opt_state, _ = checkpointer.restore(params, opt_state,
                                                     start_step)
     mesh = current_mesh()          # data-parallel when a context is installed
     if mesh is not None:
-        params = replicate_tree(params, mesh)
-        opt_state = replicate_tree(opt_state, mesh)
+        params = replicate_tree(params, mesh)    # fresh device copies: the
+        opt_state = replicate_tree(opt_state, mesh)  # caller's tree survives
+    else:
+        # the first donated step would otherwise invalidate the CALLER's
+        # param buffers — one defensive copy keeps ownership inside the loop
+        params = jax.tree_util.tree_map(jnp.copy, params)
+        opt_state = jax.tree_util.tree_map(jnp.copy, opt_state)
     slo_active = bool(loop.slos) or loop.slo_callback is not None
     slo_specs = tuple(loop.slos) or obs.train_slos()
     slo_every = loop.slo_every or loop.log_every

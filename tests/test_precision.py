@@ -98,6 +98,74 @@ def test_bf16_projected_and_gram(incs):
     assert rel < 2.0 ** -7
 
 
+def test_bf16_streamed_per_level_error_bound(incs):
+    """Streamed emission under bf16_fp32: the kernels' emission buffers
+    store bf16 (fp32 scratch accumulators), adding at most ONE more
+    rounding on top of the per-increment storage rounding — level-n error
+    of every emitted frame vs the fp32 streamed oracle stays within
+    (n+1)·2^-8."""
+    ref = ops.signature(incs, DEPTH, backend="jax", stream=True,
+                        stream_stride=5)
+    for backend in ("jax", "pallas_interpret"):
+        got = ops.signature(incs, DEPTH, backend=backend, stream=True,
+                            stream_stride=5, precision="bf16_fp32",
+                            batch_tile=8)
+        assert got.dtype == ref.dtype  # storage dtype never leaks out
+        errs, off = [], 0
+        for n in range(1, DEPTH + 1):
+            w = d ** n
+            g, r = got[..., off:off + w], ref[..., off:off + w]
+            err = float(jnp.linalg.norm(g - r) /
+                        jnp.maximum(jnp.linalg.norm(r), 1e-30))
+            assert err <= (n + 1) * 2.0 ** -8, (backend, n, err)
+            off += w
+
+
+def test_bf16_streamed_engines_agree_exactly(incs):
+    """The dispatch-level straight-through rounding of the emitted frames
+    is idempotent and shared, so both engines land on the same bf16 grid
+    points — streamed outputs agree to the bit."""
+    a = ops.signature(incs, 4, backend="jax", stream=True, stream_stride=5,
+                      precision="bf16_fp32")
+    b = ops.signature(incs, 4, backend="pallas_interpret", stream=True,
+                      stream_stride=5, precision="bf16_fp32", batch_tile=8)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    from repro.core.words import all_words
+    words = tuple(all_words(d, 3))
+    pa = ops.projected(incs, words, backend="jax", stream=True,
+                       stream_stride=5, precision="bf16_fp32")
+    pb = ops.projected(incs, words, backend="pallas_interpret", stream=True,
+                       stream_stride=5, precision="bf16_fp32", batch_tile=8)
+    np.testing.assert_array_equal(np.asarray(pa), np.asarray(pb))
+
+
+def test_bf16_streamed_terminal_matches_nonstreamed(incs):
+    """The terminal emitted frame is the non-streamed bf16 result plus at
+    most one emission rounding: within one bf16 ulp relative."""
+    s = ops.signature(incs, DEPTH, backend="jax", stream=True,
+                      stream_stride=5, precision="bf16_fp32")
+    ns = ops.signature(incs, DEPTH, backend="jax", precision="bf16_fp32")
+    rel = float(jnp.max(jnp.abs(s[:, -1] - ns)) / jnp.max(jnp.abs(ns)))
+    assert rel <= 2.0 ** -8, rel
+
+
+@pytest.mark.parametrize("bwd", ["inverse", "autodiff"])
+def test_bf16_streamed_grads_finite_and_backends_agree(incs, bwd):
+    D3 = sum(d ** n for n in range(1, 4))
+    co = jnp.asarray(np.random.default_rng(1).standard_normal(
+        (B, 8, D3)).astype(np.float32))
+
+    def g(backend):
+        return jax.grad(lambda x: jnp.vdot(ops.signature(
+            x, 3, backend=backend, backward=bwd, stream=True,
+            stream_stride=5, precision="bf16_fp32", batch_tile=8), co))(incs)
+
+    gj, gp = g("jax"), g("pallas_interpret")
+    assert np.isfinite(np.asarray(gj)).all()
+    scale = float(jnp.max(jnp.abs(gj)))
+    assert float(jnp.max(jnp.abs(gj - gp))) <= 2.0 ** -7 * scale
+
+
 def test_bf16_halves_state_footprint():
     """Satellite: the bytes-per-element literals are dtype-parameterised —
     bf16 storage halves both kernels' VMEM footprints exactly."""

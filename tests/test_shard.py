@@ -134,7 +134,9 @@ _GRAM = _PRELUDE + textwrap.dedent("""
     blowup = Bx * By * D * 4
     ag = st.by_kind.get("all-gather", (0, 0.0, 0.0))
     assert ag[1] < blowup, (ag, blowup)
-    ring_budget = 4 * (By + 8) * D * 4      # c * B_y_padded * D * 4 bytes
+    # unrolled ring: (P-1) size-1 permutes of one padded Y shard each —
+    # the whole of Y crosses the wire at most once
+    ring_budget = (By + 8) * D * 4          # B_y_padded * D * 4 bytes
     assert st.by_kind["collective-permute"][2] <= ring_budget, \\
         (st.by_kind, ring_budget)
 
@@ -219,9 +221,9 @@ _TRAIN_SERVE = _PRELUDE + textwrap.dedent("""
 _OBS = _PRELUDE + textwrap.dedent("""
     # observability under shard_map: dispatch spans + counters fire for
     # mesh-routed calls, and the gram ring's ANALYTIC wire-byte counter
-    # agrees with the lowered HLO via collective_stats (the ppermute sits
-    # inside a fori_loop: one static instruction executed `size` times, so
-    # analytic == n_dev * per-instruction wire bytes).
+    # agrees with the lowered HLO via collective_stats (the double-buffered
+    # ring is unrolled: size-1 permute instructions, one shard each, so
+    # analytic == total permute wire bytes).
     from repro import obs
 
     obs.enable()
@@ -237,7 +239,9 @@ _OBS = _PRELUDE + textwrap.dedent("""
     obs.stop_trace()
 
     # gram ring wire accounting: By divisible by n_dev -> no pad rows, the
-    # analytic counter is exactly n_dev * shard_bytes per eager call
+    # analytic counter is exactly (n_dev - 1) * shard_bytes per eager call
+    # (the final ring step consumes the prefetched shard without another
+    # permute)
     obs.reset()
     Bx, By, D = 16, 24, 120
     Sx = jax.random.normal(jax.random.PRNGKey(1), (Bx, D))
@@ -248,23 +252,100 @@ _OBS = _PRELUDE + textwrap.dedent("""
     wire_counter = obs.counter("pathsig_ring_wire_bytes_total", "",
                                ("ctx",))
     analytic = wire_counter.value(ctx="eager")
-    assert analytic == 8 * (By // 8) * D * 4, analytic
+    assert analytic == 7 * (By // 8) * D * 4, analytic
 
     with sharding_ctx(mesh):
         txt = jax.jit(lambda a, b, c: ops.gram(a, b, c, backend="jax")
                       ).lower(Sx, Sy, w).compile().as_text()
     st = collective_stats(txt, default_group=8)
     n, _, wire = st.by_kind["collective-permute"]
-    assert n >= 1, st.by_kind
-    assert analytic == 8 * (wire / n), (analytic, n, wire)
+    assert n == 7, st.by_kind           # unrolled: one instr per ring step
+    assert analytic == wire, (analytic, n, wire)
     print("SHARDOK obs")
+""")
+
+_RETRACE = _PRELUDE + textwrap.dedent("""
+    # the efficiency-cliff contract, on lowered artifacts:
+    # 1. retrace-free dispatch: repeated same-shape mesh calls across the
+    #    weak-scaling sweep compile each sharded site at most ONCE per
+    #    (site, shape key) — the per-shard closures are hoisted into
+    #    plan-cached callables, so the jit cache does the rest;
+    # 2. the data-parallel train step actually ALIASES its donated
+    #    (params, opt_state) buffers (hlo.assert_donation);
+    # 3. the double-buffered gram ring lowers to an unrolled, overlappable
+    #    schedule (hlo.ring_overlap): permutes outside any while loop and
+    #    never data-dependent on the tile dots.
+    import dataclasses
+    from repro import obs
+    from repro.distributed import hlo
+
+    obs.enable()
+    obs.reset()
+    D = 120
+    w = jnp.abs(jax.random.normal(jax.random.PRNGKey(3), (D,))) + 0.1
+    for P in (2, 4, 8):
+        m = make_sig_mesh(P)
+        xp = jax.random.normal(jax.random.PRNGKey(7), (4 * P, M, d)) * 0.2
+        Sp = jax.random.normal(jax.random.PRNGKey(8), (2 * P, D))
+        with sharding_ctx(m):
+            for _ in range(3):
+                ops.signature(xp, depth, backend="jax").block_until_ready()
+                jax.grad(lambda a: ops.signature(
+                    a, depth, backend="jax").sum())(xp).block_until_ready()
+                ops.projected(xp, words, backend="jax").block_until_ready()
+                jax.grad(lambda a: ops.projected(
+                    a, words, backend="jax").sum())(xp).block_until_ready()
+                ops.gram(Sp, Sp, w, backend="jax").block_until_ready()
+
+    sharded = {"sharded_sig", "sharded_proj", "sharded_proj_fwd",
+               "gram_ring"}
+    snap = obs.snapshot()["metrics"]["pathsig_jit_traces_total"]["values"]
+    rows = [v for v in snap if v["labels"]["site"] in sharded]
+    assert {r["labels"]["site"] for r in rows} >= {"sharded_sig",
+                                                   "gram_ring"}, rows
+    bad = [r for r in rows if r["value"] != 1]
+    assert not bad, ("retraced sharded sites", bad)
+    print("ok retrace-free", len(rows), "site/shape keys", flush=True)
+
+    # 2. donation on the lowered data-parallel train step
+    import repro.models as MM
+    from repro.configs import get_config, reduce_config
+    from repro.models.sig_head import SigHeadConfig
+    from repro.optim import adamw
+    from repro.train.trainer import make_train_step
+
+    cfg = reduce_config(get_config("qwen3-4b"))
+    cfg = dataclasses.replace(cfg, sig_head=SigHeadConfig(
+        depth=3, channels=2, backend="jax"))
+    params = MM.init_params(jax.random.PRNGKey(0), cfg, jnp.float32)
+    opt = adamw(lr=1e-3)
+    opt_state = opt.init(params)
+    batch = {"tokens": jnp.ones((8, 16), jnp.int32),
+             "paths": jnp.ones((8, 17, 2), jnp.float32)}
+    step = obs.instrument_jit(make_train_step(cfg, opt, loss="sig_mmd"),
+                              site="train_step_hlo", donate_argnums=(0, 1))
+    txt = step.lower(params, opt_state, batch).compile().as_text()
+    st = hlo.assert_donation(txt, min_aliased=2)
+    print("ok donation:", st.n_aliased, "aliased pairs", flush=True)
+
+    # 3. overlap structure of the lowered ring
+    Sx = jax.random.normal(jax.random.PRNGKey(1), (16, D))
+    with sharding_ctx(mesh):
+        rtxt = jax.jit(lambda a, b, c: ops.gram(a, b, c, backend="jax")
+                       ).lower(Sx, Sx, w).compile().as_text()
+    ov = hlo.ring_overlap(rtxt)
+    assert ov.overlapped, ov.summary()
+    assert ov.n_permutes == 7, ov.summary()
+    print("ok ring overlap:", ov.summary(), flush=True)
+    print("SHARDOK retrace")
 """)
 
 _SCRIPTS = {"truncated": (_TRUNCATED, "SHARDOK truncated"),
             "projected": (_PROJECTED, "SHARDOK projected"),
             "gram": (_GRAM, "SHARDOK gram"),
             "trainserve": (_TRAIN_SERVE, "SHARDOK trainserve"),
-            "obs": (_OBS, "SHARDOK obs")}
+            "obs": (_OBS, "SHARDOK obs"),
+            "retrace": (_RETRACE, "SHARDOK retrace")}
 
 
 @pytest.mark.parametrize("name", sorted(_SCRIPTS))

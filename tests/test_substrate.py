@@ -238,3 +238,71 @@ def test_collective_stats_parses_kinds():
 def test_remat_duplication_counts_duplicate_dots():
     assert remat_duplication(HLO_SAMPLE) == 2.0
     assert remat_duplication("no dots here") == 1.0
+
+
+def test_donation_stats_parses_module_header_and_stablehlo():
+    from repro.distributed.hlo import assert_donation, donation_stats
+
+    opt = ('HloModule jit_step, input_output_alias={ {0}: (0, {}, '
+           'may-alias), {1}: (1, {}, may-alias) }\n%x = f32[4] parameter(0)')
+    st = donation_stats(opt)
+    assert st.n_aliased == 2
+    assert [(p, k) for _o, p, k in st.pairs] == [(0, "may-alias"),
+                                                 (1, "may-alias")]
+    assert_donation(opt, min_aliased=2)
+
+    stable = ('func.func public @main(%arg0: tensor<4xf32> '
+              '{tf.aliasing_output = 0 : i32}) -> tensor<4xf32>')
+    assert donation_stats(stable).n_aliased == 1
+
+    import pytest as _pytest
+    with _pytest.raises(AssertionError, match="aliased"):
+        assert_donation("HloModule nothing_donated")
+
+
+_HLO_RING_SERIAL = """
+HloModule serial_ring
+%body (p: (s32[], f32[8])) -> (s32[], f32[8]) {
+  %p = (s32[], f32[8]) parameter(0)
+  %gte = f32[8] get-tuple-element(%p), index=1
+  %cp = f32[8] collective-permute(%gte), source_target_pairs={{0,1}}
+  %d = f32[8,8] dot(%cp, %cp)
+  ROOT %t = (s32[], f32[8]) tuple(%gte, %cp)
+}
+%cond (p: (s32[], f32[8])) -> pred[] {
+  %p = (s32[], f32[8]) parameter(0)
+  ROOT %lt = pred[] compare(%p, %p), direction=LT
+}
+ENTRY %main (a: f32[8]) -> (s32[], f32[8]) {
+  %a = f32[8] parameter(0)
+  ROOT %w = (s32[], f32[8]) while(%a), condition=%cond, body=%body
+}
+"""
+
+_HLO_RING_UNROLLED = """
+HloModule unrolled_ring
+ENTRY %main (a: f32[8]) -> f32[8,8] {
+  %a = f32[8] parameter(0)
+  %cp1 = f32[8] collective-permute(%a), source_target_pairs={{0,1}}
+  %dot1 = f32[8,8] dot(%a, %a)
+  %cp2 = f32[8] collective-permute(%cp1), source_target_pairs={{0,1}}
+  %dot2 = f32[8,8] dot(%cp1, %cp1)
+  ROOT %s = f32[8,8] add(%dot1, %dot2)
+}
+"""
+
+
+def test_ring_overlap_classifies_serial_vs_unrolled():
+    from repro.distributed.hlo import ring_overlap
+
+    ser = ring_overlap(_HLO_RING_SERIAL)
+    assert ser.in_loop and not ser.overlapped, ser.summary()
+
+    ov = ring_overlap(_HLO_RING_UNROLLED)
+    assert ov.n_permutes == 2 and ov.n_dots == 2, ov.summary()
+    assert ov.overlapped, ov.summary()
+
+    # a permute fed by a dot result is serialized behind the compute
+    dep = ring_overlap(_HLO_RING_UNROLLED.replace(
+        "collective-permute(%cp1)", "collective-permute(%dot1)"))
+    assert dep.permute_depends_on_dot and not dep.overlapped, dep.summary()

@@ -55,6 +55,72 @@ def test_windowed_projection_subset(rng):
     np.testing.assert_allclose(proj, full[..., idx], rtol=1e-4, atol=1e-5)
 
 
+@pytest.mark.parametrize("tr", ["time_augment", "lead_lag", "basepoint",
+                                "time_augment+lead_lag"])
+def test_windowed_transform_matches_per_window_oracle(rng, tr):
+    """transform= applies PER WINDOW, fused into the fold route's sweep:
+    identical to signature(window_slice, transform=...) for every window
+    (time restarts per window, basepoint is each window's first value)."""
+    path = make_path(rng, 3, 20, 2)
+    windows = np.asarray([[0, 20], [0, 5], [5, 12], [11, 20], [7, 8]],
+                         np.int32)
+    out = windowed_signature(jnp.asarray(path), windows, 3, transform=tr)
+    ref = np.stack([np.asarray(C.signature(path[:, l:r + 1], 3,
+                                           transform=tr))
+                    for l, r in windows], axis=1)  # noqa: E741
+    assert out.shape == ref.shape
+    np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-5)
+
+
+def test_windowed_transform_projection_subset(rng):
+    d = 2
+    path = jnp.asarray(make_path(rng, 2, 16, d))
+    windows = np.asarray([[0, 8], [4, 16]], np.int32)
+    from repro.core.transforms import transform_dim
+    d_aug = transform_dim("lead_lag", d)
+    words = [(0,), (2, 1), (1, 3, 0)]
+    plan = make_plan(words, d_aug)
+    proj = windowed_projection(path, windows, plan, transform="lead_lag")
+    full = windowed_signature(path, windows, 3, transform="lead_lag")
+    idx = [C.flat_index(w, d_aug) for w in words]
+    np.testing.assert_allclose(proj, full[..., idx], rtol=1e-4, atol=1e-5)
+
+
+def test_windowed_transform_pins_route_to_fold(rng):
+    """Per-window transform semantics don't compose with Chen combination
+    of one streamed pass (the streamed pass transforms the WHOLE path):
+    an explicit route="chen" refuses, route="auto" silently takes fold."""
+    path = jnp.asarray(make_path(rng, 1, 12, 2))
+    windows = np.asarray([[0, 6], [3, 12]], np.int32)
+    with pytest.raises(NotImplementedError, match="chen"):
+        windowed_signature(path, windows, 3, transform="time_augment",
+                           route="chen")
+    out = windowed_signature(path, windows, 3, transform="time_augment",
+                             route="auto")
+    assert out.shape[1] == 2
+
+
+def test_windowed_transform_ragged_clipping(rng):
+    """With lengths, window [l, r] clips to [min(l, L_b), min(r, L_b)] per
+    example BEFORE the transform applies — the time channel and basepoint
+    see the clipped window, exactly like the per-example oracle."""
+    path = make_path(rng, 3, 14, 2)
+    lens = np.asarray([14, 9, 3], np.int32)
+    windows = np.asarray([[0, 14], [2, 11], [5, 6]], np.int32)
+    out = windowed_signature(jnp.asarray(path), windows, 3,
+                             transform="time_augment+basepoint",
+                             lengths=jnp.asarray(lens))
+    for b, L in enumerate(lens):
+        for k, (l, r) in enumerate(windows):  # noqa: E741
+            lb, rb = min(l, L), min(r, L)
+            ref = np.asarray(C.signature(
+                path[b:b + 1, lb:rb + 1], 3,
+                transform="time_augment+basepoint"))[0]
+            np.testing.assert_allclose(np.asarray(out[b, k]), ref,
+                                       rtol=1e-4, atol=1e-5,
+                                       err_msg=f"b={b} window=({l},{r})")
+
+
 def test_gradients_flow_through_windows(rng):
     path = jnp.asarray(make_path(rng, 2, 12, 2))
     windows = np.asarray([[0, 6], [3, 12]], np.int32)
